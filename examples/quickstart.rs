@@ -1,0 +1,42 @@
+//! Quickstart: generate a small synthetic workload, run the paper's
+//! recommended algorithm (GreedyPM */per/OPT=MIN/MINVT=600, §6.4.2), and
+//! print the headline metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run, SimConfig};
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 128-node cluster workload from the Lublin–Feitelson model
+    //    (§5.3.2), scaled to offered load 0.7.
+    let trace = scale_to_load(&generate(42, 300, &LublinParams::default()), 0.7);
+    println!(
+        "workload: {} jobs on {} nodes, offered load {:.2}",
+        trace.jobs.len(),
+        trace.nodes,
+        trace.offered_load()
+    );
+
+    // 2. The recommended DFRS algorithm, with the default 10-minute period.
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+    let mut policy = make_policy(alg, 600.0)?;
+
+    // 3. Run on the simulator. The yield solver is the AOT-compiled XLA
+    //    artifact when built (`make artifacts`), else the Rust reference.
+    let solver = dfrs::runtime::best_solver();
+    println!("algorithm: {alg}\nsolver:    {}", solver.name());
+    let r = run(&trace, policy.as_mut(), SimConfig::default(), solver);
+
+    // 4. Report.
+    println!("\nresults:");
+    println!("  max bounded stretch  : {:.2}", r.max_stretch);
+    println!("  avg bounded stretch  : {:.2}", r.avg_stretch);
+    println!("  norm underutilization: {:.3}", r.norm_underutil);
+    println!("  preemptions/job      : {:.2}", r.preempt_per_job);
+    println!("  migrations/job       : {:.2}", r.migrate_per_job);
+    println!("  bandwidth            : {:.3} GB/s", r.gb_per_sec);
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Replay a real SWF trace (Parallel Workloads Archive format) through the
+//! §5.3.1 HPC2N preprocessing pipeline and compare EASY against the best
+//! DFRS algorithm on it, week by week.
+//!
+//! With no argument, a self-generated HPC2N-like SWF file is written and
+//! replayed, so the example is runnable offline; point it at a real
+//! archive log (e.g. HPC2N-2002-2.2-cln.swf) to reproduce the paper's
+//! real-world columns:
+//!
+//!   cargo run --release --example trace_replay -- --swf path/to/log.swf
+
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run, SimConfig};
+use dfrs::util::cli::Args;
+use dfrs::util::stats::Summary;
+use dfrs::workload::{hpc2n, scale, swf};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let path = match args.get("swf") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            // Self-generated stand-in (DESIGN.md §Substitutions): write SWF
+            // bytes to disk and replay through the real loader.
+            let t = hpc2n::generate(args.u64_or("seed", 3), args.usize_or("jobs", 1500));
+            let p = std::env::temp_dir().join("dfrs_hpc2n_like.swf");
+            std::fs::write(&p, swf::to_swf(&t))?;
+            println!("no --swf given; generated HPC2N-like log at {}", p.display());
+            p
+        }
+    };
+
+    let full = swf::load_hpc2n(&path)?;
+    println!(
+        "loaded {}: {} jobs on {} nodes ({} cores, {} GB/node)",
+        path.display(),
+        full.jobs.len(),
+        full.nodes,
+        full.cores_per_node,
+        full.node_mem_gb
+    );
+
+    // §5.3.1: split into week-long scenarios.
+    let weeks = scale::split_segments(&full, 7.0 * 86_400.0, 20);
+    println!("split into {} week-long segments (≥20 jobs each)\n", weeks.len());
+
+    let algs = ["EASY", "GreedyPM */per/OPT=MIN/MINVT=600"];
+    let mut sums: Vec<Summary> = algs.iter().map(|_| Summary::new()).collect();
+    println!("{:<6} {:>6} {:>14} {:>14}", "week", "jobs", algs[0], algs[1]);
+    for (w, trace) in weeks.iter().enumerate() {
+        let mut row = Vec::new();
+        for (alg, sum) in algs.iter().zip(sums.iter_mut()) {
+            let mut p = make_policy(alg, 600.0)?;
+            let r = run(trace, p.as_mut(), SimConfig::default(), Box::new(dfrs::alloc::RustSolver));
+            sum.add(r.max_stretch);
+            row.push(r.max_stretch);
+        }
+        println!("{:<6} {:>6} {:>14.1} {:>14.1}", w, trace.jobs.len(), row[0], row[1]);
+    }
+    println!(
+        "\nmean max-stretch: {} {:.1} vs {} {:.1}",
+        algs[0],
+        sums[0].mean(),
+        algs[1],
+        sums[1].mean()
+    );
+    Ok(())
+}

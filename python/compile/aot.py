@@ -1,0 +1,54 @@
+"""AOT lowering: jax -> HLO text -> artifacts/maxmin.hlo.txt.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py there).
+
+Usage: python -m compile.aot --out ../artifacts/maxmin.hlo.txt
+Python runs only here, at build time; the Rust binary is self-contained
+once the artifact exists.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/maxmin.hlo.txt")
+    args = ap.parse_args()
+
+    lowered = jax.jit(model.allocate).lower(*model.example_args())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    meta = {
+        "nodes": model.NODES,
+        "jobs": model.JOBS,
+        "dtype": "f32",
+        "entry": "allocate",
+        "hlo_chars": len(text),
+    }
+    with open(os.path.splitext(args.out)[0] + ".meta.json", "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(text)} chars to {args.out} ({model.NODES}x{model.JOBS})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: iterative max-min yield water-filling (paper §4.6,
+OPT=MIN).
+
+Given the node x job need matrix E (E[i, j] = cpu_need_j x #tasks of job j
+on node i), compute the max-min fair yield vector: raise all unfrozen jobs'
+yields uniformly until a node saturates, freeze the jobs on saturated
+nodes, repeat. The first water level equals the paper's base allocation
+1/max(1, Lambda). Semantics mirror `rust/src/alloc/mod.rs::maxmin_waterfill`
+exactly (the Rust reference is cross-checked against this kernel through
+the AOT artifact).
+
+TPU notes (DESIGN.md §Hardware-Adaptation): the padded 128x256 f32 working
+set is ~128 KiB and fits VMEM as a single block (one BlockSpec, no HBM
+streaming); the loop body is masked VPU vector arithmetic (elementwise +
+row/column reductions), not MXU work. `interpret=True` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Numerical guards, shared with the reference implementation.
+_EPS_LOAD = 1e-12
+_REL = 1e-9
+
+
+def _waterfill_math(e):
+    """The water-fill loop on a dense [n, j] matrix (used inside the
+    kernel; pure jnp so it also serves interpret-mode lowering)."""
+    n, j = e.shape
+    active = jnp.any(e > 0.0, axis=0)  # [j]
+    y0 = jnp.zeros((j,), e.dtype)
+    frozen0 = ~active
+
+    def cond(state):
+        i, _, frozen = state
+        return jnp.logical_and(i < n + 1, ~jnp.all(frozen))
+
+    def body(state):
+        i, y, frozen = state
+        unfrozen = ~frozen
+        unl = jnp.sum(e * unfrozen[None, :].astype(e.dtype), axis=1)  # [n]
+        fru = jnp.sum(e * (y * frozen.astype(e.dtype))[None, :], axis=1)
+        cand = jnp.where(
+            unl > _EPS_LOAD,
+            jnp.maximum(1.0 - fru, 0.0) / jnp.maximum(unl, _EPS_LOAD),
+            jnp.inf,
+        )
+        level = jnp.min(cand)
+        finish_all = level >= 1.0
+        bottleneck = cand <= level * (1.0 + _REL) + 1e-12  # [n]
+        on_bott = jnp.any((e > 0.0) & bottleneck[:, None], axis=0)  # [j]
+        newly = unfrozen & on_bott
+        y_new = jnp.where(
+            finish_all,
+            jnp.where(unfrozen, jnp.asarray(1.0, e.dtype), y),
+            jnp.where(newly, level.astype(e.dtype), y),
+        )
+        frozen_new = jnp.where(finish_all, jnp.ones_like(frozen), frozen | newly)
+        # level == inf means nothing left to raise: stop making progress.
+        stuck = ~jnp.isfinite(level)
+        y = jnp.where(stuck, y, y_new)
+        frozen = jnp.where(stuck, jnp.ones_like(frozen), frozen_new)
+        return i + 1, y, frozen
+
+    _, y, _ = jax.lax.while_loop(cond, body, (0, y0, frozen0))
+    return y
+
+
+def _kernel(e_ref, y_ref):
+    y_ref[...] = _waterfill_math(e_ref[...])
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _call(e, n, j):
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((j,), e.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(e)
+
+
+def maxmin_yields(e):
+    """Max-min fair yields for a [nodes, jobs] need matrix (f32)."""
+    e = jnp.asarray(e, jnp.float32)
+    n, j = e.shape
+    return _call(e, n, j)

@@ -1,0 +1,43 @@
+"""Pure-numpy correctness oracle for the max-min yield kernel.
+
+This is the executable specification: a direct, loop-based transcription of
+the water-filling algorithm (paper §4.6, OPT=MIN), deliberately written
+without any jax so that a kernel bug cannot hide in shared code. pytest
+compares `kernels.maxmin.maxmin_yields` (Pallas, interpret mode) and the
+AOT artifact against this oracle; the Rust reference implementation
+(`rust/src/alloc/mod.rs`) follows the same pseudocode.
+"""
+
+import numpy as np
+
+_EPS_LOAD = 1e-12
+_REL = 1e-9
+
+
+def maxmin_yields_ref(e):
+    """Max-min fair yields for a [nodes, jobs] need matrix."""
+    e = np.asarray(e, dtype=np.float64)
+    n, m = e.shape
+    y = np.zeros(m)
+    frozen = ~(e > 0.0).any(axis=0)
+    for _ in range(m):
+        cand = np.full(n, np.inf)
+        for i in range(n):
+            unfrozen_load = float(e[i, ~frozen].sum())
+            frozen_use = float((e[i, frozen] * y[frozen]).sum())
+            if unfrozen_load > _EPS_LOAD:
+                cand[i] = max(1.0 - frozen_use, 0.0) / unfrozen_load
+        level = cand.min()
+        if not np.isfinite(level):
+            break
+        if level >= 1.0:
+            y[~frozen] = 1.0
+            frozen[:] = True
+            break
+        bottleneck = cand <= level * (1.0 + _REL) + 1e-12
+        newly = (~frozen) & ((e[bottleneck, :] > 0.0).any(axis=0))
+        if not newly.any():
+            break
+        y[newly] = level
+        frozen |= newly
+    return y

@@ -1,0 +1,35 @@
+"""L2 JAX model: the resource-allocation program the Rust coordinator
+invokes on its scheduling hot path.
+
+`allocate(e)` wraps the L1 Pallas water-fill kernel (`kernels.maxmin`) for
+the fixed padded shape the artifact is compiled for (NODES x JOBS). The
+shape must match `rust/src/runtime/mod.rs::{PAD_NODES, PAD_JOBS}`; unused
+rows/columns are zero-padded by the caller and yield 0 for inactive jobs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import maxmin
+
+# Compiled artifact shape; keep in sync with rust/src/runtime/mod.rs.
+NODES = 128
+JOBS = 256
+
+
+def allocate(e):
+    """Max-min fair yield allocation (paper §4.6, OPT=MIN).
+
+    Args:
+      e: f32[NODES, JOBS] need matrix, e[i, j] = cpu_need_j x tasks_ij.
+    Returns:
+      1-tuple of f32[JOBS] yields (tuple so the AOT module lowers with
+      `return_tuple=True`, matching the Rust loader's `to_tuple1`).
+    """
+    y = maxmin.maxmin_yields(e)
+    return (y,)
+
+
+def example_args():
+    """Example abstract arguments for AOT lowering."""
+    return (jax.ShapeDtypeStruct((NODES, JOBS), jnp.float32),)

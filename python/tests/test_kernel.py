@@ -1,0 +1,154 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Compares the Pallas water-fill kernel (interpret mode) against the pure
+numpy oracle (`kernels.ref`) on hand-built cases, hypothesis-generated
+matrices across shapes/dtypes, and checks the allocation invariants
+(feasibility, max-min optimality) independently of the oracle.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.maxmin import maxmin_yields
+from compile.kernels.ref import maxmin_yields_ref
+
+
+def assert_matches_ref(e, atol=2e-5):
+    got = np.asarray(maxmin_yields(e), dtype=np.float64)
+    want = maxmin_yields_ref(e)
+    np.testing.assert_allclose(got, want, atol=atol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------- directed
+
+
+def test_single_job_gets_full_yield():
+    e = np.array([[0.5]], dtype=np.float32)
+    np.testing.assert_allclose(maxmin_yields(e), [1.0])
+
+
+def test_two_jobs_split_overloaded_node():
+    e = np.array([[1.0, 1.0]], dtype=np.float32)
+    np.testing.assert_allclose(maxmin_yields(e), [0.5, 0.5])
+
+
+def test_base_level_is_inverse_max_load():
+    # Node 0 holds jobs 0,1 (load 2.0); node 1 holds job 2 (load 0.5).
+    e = np.array([[1.0, 1.0, 0.0], [0.0, 0.0, 0.5]], dtype=np.float32)
+    y = np.asarray(maxmin_yields(e))
+    np.testing.assert_allclose(y, [0.5, 0.5, 1.0], atol=1e-6)
+
+
+def test_chained_bottleneck():
+    # Mirrors the Rust unit test `chained_bottlenecks`.
+    e = np.array([[0.6, 0.6, 0.0], [0.6, 0.0, 0.2]], dtype=np.float32)
+    y = np.asarray(maxmin_yields(e))
+    np.testing.assert_allclose(y, [1 / 1.2, 1 / 1.2, 1.0], atol=1e-5)
+
+
+def test_inactive_column_is_zero():
+    e = np.array([[0.5, 0.0]], dtype=np.float32)
+    y = np.asarray(maxmin_yields(e))
+    np.testing.assert_allclose(y, [1.0, 0.0])
+
+
+def test_all_zero_matrix():
+    e = np.zeros((4, 6), dtype=np.float32)
+    np.testing.assert_allclose(maxmin_yields(e), np.zeros(6))
+
+
+def test_matches_ref_on_paper_sized_case():
+    rng = np.random.default_rng(0)
+    e = np.zeros((16, 32), dtype=np.float32)
+    for j in range(24):
+        need = rng.uniform(0.05, 1.0)
+        for _ in range(rng.integers(1, 4)):
+            e[rng.integers(0, 16), j] += need
+    assert_matches_ref(e)
+
+
+# -------------------------------------------------------------- hypothesis
+
+
+@st.composite
+def need_matrices(draw):
+    n = draw(st.integers(1, 12))
+    m = draw(st.integers(1, 20))
+    e = np.zeros((n, m), dtype=np.float32)
+    njobs = draw(st.integers(0, m))
+    for j in range(njobs):
+        need = draw(
+            st.floats(0.05, 1.0, allow_nan=False, allow_infinity=False)
+        )
+        tasks = draw(st.integers(1, 3))
+        for _ in range(tasks):
+            i = draw(st.integers(0, n - 1))
+            e[i, j] += np.float32(need)
+    return e
+
+
+@settings(max_examples=60, deadline=None)
+@given(need_matrices())
+def test_kernel_matches_oracle(e):
+    assert_matches_ref(e)
+
+
+@settings(max_examples=60, deadline=None)
+@given(need_matrices())
+def test_allocation_invariants(e):
+    y = np.asarray(maxmin_yields(e), dtype=np.float64)
+    n, m = e.shape
+    active = (e > 0).any(axis=0)
+    # Yields in range; inactive jobs get 0.
+    assert (y >= -1e-9).all() and (y <= 1.0 + 1e-6).all()
+    assert (y[~active] == 0).all()
+    if active.any():
+        assert (y[active] > 0).all()
+    # Node feasibility.
+    load = e.astype(np.float64) @ y
+    assert (load <= 1.0 + 1e-4).all(), f"overloaded: {load.max()}"
+    # Max-min optimality: every active job below 1 sits on a saturated node.
+    for j in range(m):
+        if active[j] and y[j] < 1.0 - 1e-6:
+            nodes_j = e[:, j] > 0
+            assert (load[nodes_j] >= 1.0 - 1e-3).any(), (
+                f"job {j} yield {y[j]} not blocked"
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(need_matrices(), st.sampled_from([np.float32, np.float64]))
+def test_dtype_sweep(e, dtype):
+    # The public entry casts to f32; feeding f64 must give the same result.
+    y32 = np.asarray(maxmin_yields(e.astype(np.float32)))
+    yd = np.asarray(maxmin_yields(e.astype(dtype)))
+    np.testing.assert_allclose(y32, yd, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(need_matrices())
+def test_padding_equivalence(e):
+    # Embedding into the artifact's padded shape must not change yields —
+    # this is exactly what the Rust runtime does.
+    n, m = e.shape
+    pad = np.zeros((128, 256), dtype=np.float32)
+    pad[:n, :m] = e
+    y_small = np.asarray(maxmin_yields(e))
+    y_pad = np.asarray(maxmin_yields(pad))[:m]
+    np.testing.assert_allclose(y_small, y_pad, atol=1e-6)
+
+
+def test_scaling_permutation_invariance():
+    rng = np.random.default_rng(1)
+    e = np.zeros((8, 10), dtype=np.float32)
+    for j in range(10):
+        e[rng.integers(0, 8), j] = rng.uniform(0.1, 1.0)
+    perm = rng.permutation(10)
+    y = np.asarray(maxmin_yields(e))
+    y_perm = np.asarray(maxmin_yields(e[:, perm]))
+    np.testing.assert_allclose(y[perm], y_perm, atol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

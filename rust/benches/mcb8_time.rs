@@ -1,0 +1,76 @@
+//! §6.2 — "Algorithm Execution Time": measure MCB8 allocation time as a
+//! function of the number of live jobs, reproducing the paper's claim that
+//! allocations for ≤102 jobs take well under seconds (their 2011 Xeon:
+//! ~0.25 s average, 4.5 s max) and are thus negligible next to job
+//! interarrival times.
+//!
+//! Also times the two yield solvers (pure Rust vs the AOT XLA artifact) on
+//! the allocation hot path — the §Perf comparison in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench mcb8_time` (custom harness; criterion is
+//! unavailable offline).
+
+use dfrs::alloc::{maxmin_waterfill, NeedMatrix, RustSolver, YieldSolver};
+use dfrs::benchx::bench;
+use dfrs::packing::search::{mcb8_allocate, PinRule};
+use dfrs::sim::{Sim, SimConfig};
+use dfrs::util::rng::Rng;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::Trace;
+
+/// Build a simulator state with `n_jobs` live jobs on the paper's 128-node
+/// cluster: ~half running (greedy-placed), half pending.
+fn live_state(n_jobs: usize, seed: u64) -> Sim {
+    let trace: Trace = generate(seed, n_jobs, &LublinParams::default());
+    let mut sim = Sim::new(&trace, SimConfig::default(), Box::new(RustSolver));
+    sim.now = trace.jobs.last().unwrap().submit + 1.0;
+    let mut rng = Rng::new(seed);
+    for j in 0..n_jobs / 2 {
+        let spec = sim.jobs[j].spec.clone();
+        let mut shadow = sim.cluster.clone();
+        if let Some(pl) =
+            dfrs::sched::greedy::greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem)
+        {
+            sim.start_job(j, pl);
+            sim.jobs[j].vt = rng.range(0.0, 2000.0);
+        }
+    }
+    sim
+}
+
+fn main() {
+    println!("== §6.2 MCB8 execution time (128-node cluster) ==");
+    println!("paper reference (3.2 GHz Xeon, 2011): <=10 jobs <1 ms; avg 0.25 s; max 4.5 s @ <=102 jobs\n");
+    for &n_jobs in &[10usize, 25, 50, 102, 200] {
+        let sim = live_state(n_jobs, 99);
+        let s = bench(&format!("mcb8_allocate[{n_jobs} jobs]"), 2, 10, || {
+            let out = mcb8_allocate(&sim, Some(PinRule::MinVt(600.0)));
+            std::hint::black_box(out.yield_achieved);
+        });
+        println!("{}", s.report());
+    }
+
+    println!("\n== yield-solver hot path: Rust reference vs XLA artifact ==");
+    let mut rng = Rng::new(5);
+    for &(nodes, jobs) in &[(32usize, 40usize), (128, 102), (128, 256)] {
+        let mut e = NeedMatrix::zeros(nodes, jobs);
+        for j in 0..jobs {
+            let need = rng.range(0.05, 1.0);
+            for _ in 0..1 + rng.below(3) {
+                e.add(rng.below(nodes as u64) as usize, j, need);
+            }
+        }
+        let s = bench(&format!("waterfill_rust[{nodes}x{jobs}]"), 3, 30, || {
+            std::hint::black_box(maxmin_waterfill(&e));
+        });
+        println!("{}", s.report());
+        if let Some(mut xla) = dfrs::runtime::XlaSolver::try_default() {
+            let s = bench(&format!("waterfill_xla [{nodes}x{jobs}]"), 3, 30, || {
+                std::hint::black_box(xla.maxmin(&e));
+            });
+            println!("{}", s.report());
+        } else {
+            println!("(XLA artifact not built; run `make artifacts` for the comparison)");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! End-to-end bench: regenerate every table and figure of the paper at
+//! smoke scale and time each harness. This is the `cargo bench` entry; the
+//! full-scale regeneration is `dfrs bench <target>` (add `--full` for
+//! paper scale). One section per Table/Figure of the evaluation (§6).
+//!
+//! Run: `cargo bench --bench paper_tables [-- --traces 3 --jobs 120]`
+
+use dfrs::util::cli::Args;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let mut args = Args::parse(argv);
+    // Smoke-scale defaults; override on the command line.
+    args.options.entry("traces".into()).or_insert_with(|| "3".into());
+    args.options.entry("jobs".into()).or_insert_with(|| "120".into());
+    args.options.entry("out".into()).or_insert_with(|| "results/bench".into());
+
+    println!(
+        "paper-tables bench: traces={} jobs={} (use `dfrs bench <t> --full` for paper scale)",
+        args.str_or("traces", "?"),
+        args.str_or("jobs", "?")
+    );
+    for target in ["table2", "table3", "table4", "fig1", "fig2", "fig3", "fig4", "fig9"] {
+        let mut a = args.clone();
+        a.positional = vec!["bench".into(), target.into()];
+        let t0 = Instant::now();
+        dfrs::coordinator::run_cli(a)?;
+        println!(">>> {target} regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

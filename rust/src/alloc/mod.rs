@@ -1,0 +1,412 @@
+//! Resource allocation (§4.6): once tasks are mapped to nodes, pick each
+//! job's yield. The paper's base step gives every job `1/max(1, Λ)` (Λ =
+//! max node CPU load), which maximizes the minimum yield for the mapping;
+//! leftover capacity is then used by either
+//! - OPT=MIN: iterative max–min yield maximization (water-filling), or
+//! - OPT=AVG: an LP maximizing the average yield with the max–min as floor
+//!   (Linear Program (2) of the paper, solved with `crate::lp`).
+//!
+//! The max–min water-fill is the numeric hot path (it runs at every
+//! scheduling event and inside every MCB8 binary-search probe), so it is
+//! also implemented as the L1 Pallas kernel; `YieldSolver` abstracts over
+//! the pure-Rust reference (`RustSolver`) and the AOT-compiled XLA artifact
+//! (`crate::runtime::XlaSolver`). Tests cross-check the two.
+
+use crate::sim::{JobId, Sim};
+
+/// Dense node × job matrix of per-node CPU need contributions:
+/// `e[i][j] = cpu_need_j × (#tasks of j on node i)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl NeedMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        NeedMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn add(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] += v;
+    }
+}
+
+/// Solver for the max–min yield allocation given a need matrix. Returns one
+/// yield per column; columns with no load anywhere get 0.
+pub trait YieldSolver {
+    fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64>;
+    fn name(&self) -> &'static str;
+}
+
+/// Exact reference water-filling implementation.
+///
+/// Invariants of the result: every active job's yield is in (0, 1]; no node
+/// exceeds capacity 1; the allocation is max–min optimal (no job's yield
+/// can rise without lowering a job at or below its level).
+pub struct RustSolver;
+
+impl YieldSolver for RustSolver {
+    fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64> {
+        maxmin_waterfill(e)
+    }
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Iterative max–min: raise all unfrozen jobs' yields uniformly until some
+/// node saturates; freeze the jobs on saturated nodes; repeat. The first
+/// level equals the paper's base `1/max(1, Λ)`.
+pub fn maxmin_waterfill(e: &NeedMatrix) -> Vec<f64> {
+    let (n, m) = (e.rows, e.cols);
+    let mut y = vec![0.0f64; m];
+    let mut frozen = vec![false; m];
+    // Perf (§Perf, EXPERIMENTS.md): the need matrix is sparse (each job
+    // touches a handful of nodes), so work on adjacency lists and maintain
+    // per-node unfrozen load / frozen usage incrementally. Each round costs
+    // O(n) for the level scan plus O(degree) per newly frozen job, i.e.
+    // O(n·rounds + nnz) total instead of O(rounds·n·m) dense rescans.
+    let mut job_nodes: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+    let mut node_jobs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut unfrozen_load = vec![0.0f64; n];
+    let mut frozen_use = vec![0.0f64; n];
+    for i in 0..n {
+        let row = &e.data[i * m..(i + 1) * m];
+        for (j, &v) in row.iter().enumerate() {
+            if v > 0.0 {
+                job_nodes[j].push((i, v));
+                node_jobs[i].push(j);
+                unfrozen_load[i] += v;
+            }
+        }
+    }
+    for j in 0..m {
+        if job_nodes[j].is_empty() {
+            frozen[j] = true;
+        }
+    }
+    for _ in 0..m {
+        let mut level = f64::INFINITY;
+        for i in 0..n {
+            if unfrozen_load[i] > 1e-12 {
+                let cand = ((1.0 - frozen_use[i]) / unfrozen_load[i]).max(0.0);
+                if cand < level {
+                    level = cand;
+                }
+            }
+        }
+        if !level.is_finite() {
+            break; // nothing left to raise
+        }
+        if level >= 1.0 {
+            for j in 0..m {
+                if !frozen[j] {
+                    y[j] = 1.0;
+                    frozen[j] = true;
+                }
+            }
+            break;
+        }
+        // Identify all bottleneck nodes w.r.t. the round-start sums FIRST
+        // (freezing mutates the sums and must not change this round's
+        // bottleneck set — semantics shared with the Pallas kernel), then
+        // freeze their unfrozen jobs.
+        let threshold = level * (1.0 + 1e-9) + 1e-12;
+        let bottlenecks: Vec<usize> = (0..n)
+            .filter(|&i| {
+                unfrozen_load[i] > 1e-12
+                    && ((1.0 - frozen_use[i]) / unfrozen_load[i]).max(0.0) <= threshold
+            })
+            .collect();
+        let mut any_frozen = false;
+        for i in bottlenecks {
+            for idx in 0..node_jobs[i].len() {
+                let j = node_jobs[i][idx];
+                if frozen[j] {
+                    continue;
+                }
+                y[j] = level;
+                frozen[j] = true;
+                any_frozen = true;
+                for &(node, v) in &job_nodes[j] {
+                    unfrozen_load[node] -= v;
+                    frozen_use[node] += v * level;
+                }
+            }
+        }
+        if !any_frozen {
+            break; // numerical corner: avoid infinite loop
+        }
+    }
+    y
+}
+
+/// Which §4.6 optimization to apply after the base step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptMode {
+    /// Uniform `1/max(1, Λ)` only.
+    Base,
+    /// OPT=MIN: iterative max–min (water-fill).
+    MaxMin,
+    /// OPT=AVG: LP (2) — maximize average yield above the max–min floor.
+    Avg,
+}
+
+impl OptMode {
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            OptMode::Base => "",
+            OptMode::MaxMin => "/OPT=MIN",
+            OptMode::Avg => "/OPT=AVG",
+        }
+    }
+}
+
+/// Build the need matrix for the currently running jobs of a simulation.
+/// Returns the matrix plus the job id of each column.
+pub fn need_matrix(sim: &Sim) -> (NeedMatrix, Vec<JobId>) {
+    let running = sim.running();
+    let col_of: std::collections::HashMap<JobId, usize> =
+        running.iter().enumerate().map(|(c, &j)| (j, c)).collect();
+    let mut e = NeedMatrix::zeros(sim.cluster.nodes, running.len());
+    for i in 0..sim.cluster.nodes {
+        for &(j, count) in &sim.cluster.tasks_on[i] {
+            if let Some(&c) = col_of.get(&j) {
+                e.add(i, c, sim.jobs[j].spec.cpu_need * count as f64);
+            }
+        }
+    }
+    (e, running)
+}
+
+/// Recompute and apply yields for all running jobs per `mode`. This is the
+/// §4.6 allocation step every DFRS policy calls after changing the mapping.
+pub fn reallocate(sim: &mut Sim, mode: OptMode) {
+    let (e, cols) = need_matrix(sim);
+    if cols.is_empty() {
+        return;
+    }
+    let yields = match mode {
+        OptMode::Base => {
+            let lambda = sim.cluster.max_load().max(1.0);
+            vec![1.0 / lambda; cols.len()]
+        }
+        OptMode::MaxMin => sim.solver.maxmin(&e),
+        OptMode::Avg => avg_lp(&e),
+    };
+    for (c, &j) in cols.iter().enumerate() {
+        sim.set_yield(j, yields[c].clamp(0.0, 1.0));
+    }
+}
+
+/// OPT=AVG via LP (2): maximize Σ y_j s.t. per-node Σ e_ij·y_j ≤ 1 and
+/// `ymin ≤ y_j ≤ 1` with `ymin = 1/max(1, Λ)` (the maximized minimum for
+/// the mapping). Solved in shifted variables `z = y − ymin ≥ 0`.
+pub fn avg_lp(e: &NeedMatrix) -> Vec<f64> {
+    let (n, m) = (e.rows, e.cols);
+    let active: Vec<bool> = (0..m).map(|j| (0..n).any(|i| e.get(i, j) > 0.0)).collect();
+    let lambda = (0..n)
+        .map(|i| (0..m).map(|j| e.get(i, j)).sum::<f64>())
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    let ymin = 1.0 / lambda;
+    // Rows: node capacities with slack after the floor, then y_j ≤ 1 caps.
+    let mut a: Vec<Vec<f64>> = Vec::with_capacity(n + m);
+    let mut b: Vec<f64> = Vec::with_capacity(n + m);
+    for i in 0..n {
+        let row: Vec<f64> = (0..m).map(|j| e.get(i, j)).collect();
+        let used: f64 = row.iter().sum::<f64>() * ymin;
+        a.push(row);
+        b.push((1.0 - used).max(0.0));
+    }
+    for j in 0..m {
+        let mut row = vec![0.0; m];
+        row[j] = 1.0;
+        a.push(row);
+        b.push(1.0 - ymin);
+    }
+    let c: Vec<f64> = (0..m).map(|j| if active[j] { 1.0 } else { 0.0 }).collect();
+    let z = match crate::lp::simplex(&c, &a, &b) {
+        crate::lp::LpResult::Optimal(_, z) => z,
+        crate::lp::LpResult::Unbounded => vec![0.0; m],
+    };
+    (0..m)
+        .map(|j| if active[j] { (ymin + z[j]).min(1.0) } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn mat(rows: usize, cols: usize, vals: &[f64]) -> NeedMatrix {
+        assert_eq!(vals.len(), rows * cols);
+        NeedMatrix { rows, cols, data: vals.to_vec() }
+    }
+
+    #[test]
+    fn empty_node_gives_full_yield() {
+        // One job, need 0.5, alone: capacity allows y=1.
+        let e = mat(1, 1, &[0.5]);
+        assert_eq!(maxmin_waterfill(&e), vec![1.0]);
+    }
+
+    #[test]
+    fn overload_splits_evenly() {
+        // Two identical jobs, need 1.0, same node: y = 0.5 each.
+        let e = mat(1, 2, &[1.0, 1.0]);
+        let y = maxmin_waterfill(&e);
+        assert!((y[0] - 0.5).abs() < 1e-12 && (y[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn base_level_is_inverse_max_load() {
+        // Node 0 load 2.0 (jobs 0,1), node 1 load 0.5 (job 2).
+        // Water-fill: first level = 0.5 (node 0 bottleneck); job 2 then
+        // rises to 1.0.
+        let e = mat(2, 3, &[1.0, 1.0, 0.0, 0.0, 0.0, 0.5]);
+        let y = maxmin_waterfill(&e);
+        assert!((y[0] - 0.5).abs() < 1e-12);
+        assert!((y[1] - 0.5).abs() < 1e-12);
+        assert!((y[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chained_bottlenecks() {
+        // Job 0 on nodes {0,1}; job 1 on node 0; job 2 on node 1.
+        // Node loads: n0 = c0 + c1, n1 = c0 + c2 with needs 0.6/0.6/0.2.
+        // Level 1: n0 cand = 1/1.2 = .8333, n1 cand = 1/0.8 = 1.25 ->
+        // freeze jobs 0,1 at .8333. Then n1: (1-0.6*.8333)/0.2 = 2.5 -> job2=1.
+        let e = mat(2, 3, &[0.6, 0.6, 0.0, 0.6, 0.0, 0.2]);
+        let y = maxmin_waterfill(&e);
+        assert!((y[0] - 1.0 / 1.2).abs() < 1e-9);
+        assert!((y[1] - 1.0 / 1.2).abs() < 1e-9);
+        assert!((y[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inactive_jobs_get_zero() {
+        let e = mat(1, 2, &[0.5, 0.0]);
+        let y = maxmin_waterfill(&e);
+        assert_eq!(y[1], 0.0);
+        assert_eq!(y[0], 1.0);
+    }
+
+    #[test]
+    fn avg_lp_respects_floor_and_capacity() {
+        // Jobs 0,1 share node 0 (needs .8 each); job 2 alone on node 1 (.4).
+        let e = mat(2, 3, &[0.8, 0.8, 0.0, 0.0, 0.0, 0.4]);
+        let y = avg_lp(&e);
+        let ymin = 1.0 / 1.6;
+        for (j, &yj) in y.iter().enumerate() {
+            assert!(yj >= ymin - 1e-9, "y[{j}]={yj} below floor {ymin}");
+            assert!(yj <= 1.0 + 1e-9);
+        }
+        // Node capacities.
+        for i in 0..2 {
+            let load: f64 = (0..3).map(|j| e.get(i, j) * y[j]).sum();
+            assert!(load <= 1.0 + 1e-6, "node {i} load {load}");
+        }
+        // Job 2 must be raised to 1.0 (its node has slack).
+        assert!((y[2] - 1.0).abs() < 1e-6);
+    }
+
+    fn random_need_matrix(rng: &mut Rng) -> NeedMatrix {
+        let n = 1 + rng.below(6) as usize;
+        let m = 1 + rng.below(10) as usize;
+        let mut e = NeedMatrix::zeros(n, m);
+        for j in 0..m {
+            let tasks = 1 + rng.below(3);
+            let need = rng.range(0.05, 1.0);
+            for _ in 0..tasks {
+                let i = rng.below(n as u64) as usize;
+                e.add(i, j, need);
+            }
+        }
+        e
+    }
+
+    #[test]
+    fn prop_waterfill_feasible_and_maxmin_optimal() {
+        forall(101, 60, random_need_matrix, |e| {
+            let y = maxmin_waterfill(e);
+            // Feasibility.
+            for i in 0..e.rows {
+                let load: f64 = (0..e.cols).map(|j| e.get(i, j) * y[j]).sum();
+                if load > 1.0 + 1e-6 {
+                    return Err(format!("node {i} overloaded: {load}"));
+                }
+            }
+            for (j, &yj) in y.iter().enumerate() {
+                let active = (0..e.rows).any(|i| e.get(i, j) > 0.0);
+                if active && !(yj > 0.0 && yj <= 1.0 + 1e-9) {
+                    return Err(format!("active job {j} yield {yj}"));
+                }
+            }
+            // Max-min optimality: any job below 1.0 must sit on a node that
+            // is saturated by jobs at or below its own level.
+            for j in 0..e.cols {
+                let active = (0..e.rows).any(|i| e.get(i, j) > 0.0);
+                if !active || y[j] >= 1.0 - 1e-9 {
+                    continue;
+                }
+                let blocked = (0..e.rows).any(|i| {
+                    if e.get(i, j) <= 0.0 {
+                        return false;
+                    }
+                    let load: f64 = (0..e.cols).map(|k| e.get(i, k) * y[k]).sum();
+                    load >= 1.0 - 1e-6
+                });
+                if !blocked {
+                    return Err(format!("job {j} at {} not blocked by any node", y[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_avg_lp_dominates_waterfill_total() {
+        forall(202, 40, random_need_matrix, |e| {
+            let wf = maxmin_waterfill(e);
+            let lp = avg_lp(e);
+            // The LP floor is the *uniform* base 1/Λ, which is ≤ the
+            // water-fill level per job, but the LP maximizes the SUM with
+            // all slack usable, so total(LP) ≥ total(base). Compare against
+            // base, and also check LP feasibility.
+            let lambda = (0..e.rows)
+                .map(|i| (0..e.cols).map(|j| e.get(i, j)).sum::<f64>())
+                .fold(0.0f64, f64::max)
+                .max(1.0);
+            let active = |j: usize| (0..e.rows).any(|i| e.get(i, j) > 0.0);
+            let base_total: f64 = (0..e.cols).filter(|&j| active(j)).map(|_| 1.0 / lambda).sum();
+            let lp_total: f64 = lp.iter().sum();
+            let wf_total: f64 = wf.iter().sum();
+            if lp_total + 1e-6 < base_total {
+                return Err(format!("LP total {lp_total} below base {base_total}"));
+            }
+            // The LP maximizes total yield subject to the same constraints
+            // (with a weaker floor), so it must be >= the water-fill total.
+            if lp_total + 1e-6 < wf_total {
+                return Err(format!("LP total {lp_total} below water-fill {wf_total}"));
+            }
+            for i in 0..e.rows {
+                let load: f64 = (0..e.cols).map(|j| e.get(i, j) * lp[j]).sum();
+                if load > 1.0 + 1e-6 {
+                    return Err(format!("LP overloads node {i}: {load}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! Minimal micro-benchmark harness (criterion is unavailable in this
+//! offline build). Provides warmup + timed iterations with mean / p50 /
+//! p95 / max reporting, enough to regenerate the paper's §6.2 timing
+//! claims and the perf-pass measurements in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>10} p50={:>10} p95={:>10} max={:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.max_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` unmeasured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pick = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        p50_s: pick(0.50),
+        p95_s: pick(0.95),
+        max_s: *samples.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.mean_s > 0.0);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.max_s);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Offline lower bound on the optimal maximum (bounded) stretch (§3.1,
+//! Theorem 1).
+//!
+//! For a target stretch S, each job gets deadline `d_j = r_j + S·max(p_j,τ)`
+//! (τ is the bounded-stretch threshold). Linear System (1) is feasible iff
+//! a transportation problem saturates: source → job j with capacity
+//! `w_j = n_j·c_j·p_j` (total work, constraint 1a), job → interval edges
+//! with capacity `n_j·ℓ(t)` (per-task rate cap, constraint 1d), interval →
+//! sink with capacity `|P|·ℓ(t)` (platform capacity, constraint 1e);
+//! release/deadline windows (1b, 1c) select which edges exist. Max-flow
+//! equals Σw_j iff the LP is feasible — the polytope is a transportation
+//! polytope, so the reduction is exact, not a relaxation.
+//!
+//! A binary search over S (clairvoyant, memory-ignoring — hence a *lower*
+//! bound, §3.1) finds the smallest feasible S to relative precision 1e-3.
+
+use crate::flow::Dinic;
+use crate::workload::Trace;
+
+/// Capacity quantization: f64 node-seconds → u64 flow units.
+const SCALE: f64 = 1e6;
+
+/// Is max-stretch `s` achievable for `trace` in the relaxed offline model?
+pub fn feasible(trace: &Trace, s: f64, tau: f64) -> bool {
+    let jobs = &trace.jobs;
+    let nj = jobs.len();
+    // Interval boundaries: all release dates and deadlines.
+    let mut bounds: Vec<f64> = Vec::with_capacity(2 * nj);
+    let deadline =
+        |j: &crate::workload::Job| j.submit + s * j.proc_time.max(tau);
+    for j in jobs {
+        bounds.push(j.submit);
+        bounds.push(deadline(j));
+    }
+    bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    let n_iv = bounds.len().saturating_sub(1);
+    if n_iv == 0 {
+        return jobs.is_empty();
+    }
+
+    // Node ids: jobs [0, nj), intervals [nj, nj+n_iv), source, sink.
+    let source = nj + n_iv;
+    let sink = source + 1;
+    let mut g = Dinic::new(sink + 1);
+    let mut total_work = 0u64;
+    for (ji, j) in jobs.iter().enumerate() {
+        let w = (j.work() * SCALE).round() as u64;
+        total_work += w;
+        g.add_edge(source, ji, w);
+        let d = deadline(j);
+        for t in 0..n_iv {
+            let (lo, hi) = (bounds[t], bounds[t + 1]);
+            if hi <= j.submit + 1e-9 || lo >= d - 1e-9 {
+                continue;
+            }
+            let len = hi - lo;
+            let cap = (j.tasks as f64 * len * SCALE).round() as u64;
+            if cap > 0 {
+                g.add_edge(ji, nj + t, cap);
+            }
+        }
+    }
+    for t in 0..n_iv {
+        let len = bounds[t + 1] - bounds[t];
+        let cap = (trace.nodes as f64 * len * SCALE).round() as u64;
+        if cap > 0 {
+            g.add_edge(nj + t, sink, cap);
+        }
+    }
+    let flow = g.max_flow(source, sink);
+    // Quantization slack: one unit per job of rounding.
+    flow + jobs.len() as u64 >= total_work
+}
+
+/// Lower bound on the optimal maximum bounded stretch: the largest S known
+/// infeasible (within relative precision `rel`), never exceeding the true
+/// optimum. Returns at least 1.0.
+pub fn max_stretch_lower_bound(trace: &Trace, tau: f64, rel: f64) -> f64 {
+    if trace.jobs.is_empty() {
+        return 1.0;
+    }
+    if feasible(trace, 1.0, tau) {
+        return 1.0;
+    }
+    // Exponential search for a feasible upper end.
+    let mut lo = 1.0f64;
+    let mut hi = 2.0f64;
+    let mut guard = 0;
+    while !feasible(trace, hi, tau) {
+        lo = hi;
+        hi *= 2.0;
+        guard += 1;
+        assert!(guard < 64, "no feasible stretch found (degenerate trace?)");
+    }
+    while hi - lo > rel * lo {
+        let mid = 0.5 * (lo + hi);
+        if feasible(trace, mid, tau) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    lo.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Job, Trace};
+
+    const TAU: f64 = 10.0;
+
+    fn trace(jobs: Vec<Job>, nodes: usize) -> Trace {
+        Trace { jobs, nodes, cores_per_node: 1, node_mem_gb: 1.0 }
+    }
+
+    fn job(id: u32, submit: f64, tasks: u32, need: f64, p: f64) -> Job {
+        Job { id, submit, tasks, cpu_need: need, mem: 0.1, proc_time: p }
+    }
+
+    #[test]
+    fn lone_job_has_bound_one() {
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 100.0)], 1);
+        assert!((max_stretch_lower_bound(&t, TAU, 1e-3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_jobs_have_bound_one() {
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 100.0), job(1, 200.0, 1, 1.0, 100.0)], 1);
+        assert!((max_stretch_lower_bound(&t, TAU, 1e-3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_simultaneous_unit_jobs_need_stretch_two() {
+        // Two identical jobs, one node, both at t=0, p=100: total work 200
+        // must fit in [0, S·100] -> S >= 2.
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 100.0), job(1, 0.0, 1, 1.0, 100.0)], 1);
+        let b = max_stretch_lower_bound(&t, TAU, 1e-3);
+        assert!((b - 2.0).abs() < 0.01, "bound {b}");
+    }
+
+    #[test]
+    fn two_nodes_remove_contention() {
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 100.0), job(1, 0.0, 1, 1.0, 100.0)], 2);
+        assert!((max_stretch_lower_bound(&t, TAU, 1e-3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn task_rate_cap_binds() {
+        // One 1-task job on a 4-node cluster: extra nodes can't speed up a
+        // single task (constraint 1d), so a competing pair still matters.
+        // Job A: 1 task, p=100; Job B: 1 task, p=100, both at 0, 1 node
+        // each available... with 4 nodes both run at full speed: bound 1.
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 100.0), job(1, 0.0, 1, 1.0, 100.0)], 4);
+        assert!((max_stretch_lower_bound(&t, TAU, 1e-3) - 1.0).abs() < 1e-9);
+        // But a single job can never beat stretch 1 by using several nodes:
+        // feasible(1.0) must hold exactly, not because 4 nodes multiply the
+        // task's rate. Construct: job with p=100 and deadline S=0.5 would
+        // be infeasible even with 4 nodes.
+        let t1 = trace(vec![job(0, 0.0, 1, 1.0, 100.0)], 4);
+        assert!(!feasible(&t1, 0.5, TAU), "rate cap must forbid super-speed");
+    }
+
+    #[test]
+    fn fractional_needs_share_a_node() {
+        // Two jobs with need 0.5 can share one node at full speed.
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 100.0), job(1, 0.0, 1, 0.5, 100.0)], 1);
+        assert!((max_stretch_lower_bound(&t, TAU, 1e-3) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bounded_threshold_softens_tiny_jobs() {
+        // A 1-second job delayed behind a 10-second job: with τ=10 the tiny
+        // job can finish anywhere within 10·S seconds, so contention with a
+        // short window barely moves the bound.
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 10.0), job(1, 0.0, 1, 1.0, 1.0)], 1);
+        let b = max_stretch_lower_bound(&t, TAU, 1e-3);
+        // Work 11s; windows: job0 ≤ 10S, job1 ≤ 10S: S=1.1 suffices.
+        assert!(b <= 1.2, "bound {b}");
+    }
+
+    #[test]
+    fn wide_job_uses_all_nodes() {
+        // 4-task job on 4 nodes plus an identical competitor: S=2 needed.
+        let t = trace(
+            vec![job(0, 0.0, 4, 1.0, 100.0), job(1, 0.0, 4, 1.0, 100.0)],
+            4,
+        );
+        let b = max_stretch_lower_bound(&t, TAU, 1e-3);
+        assert!((b - 2.0).abs() < 0.01, "bound {b}");
+    }
+
+    #[test]
+    fn bound_is_no_greater_than_simple_schedule() {
+        // Staircase arrivals on one node: bound must be <= the max stretch
+        // of the explicit FCFS schedule (a valid schedule).
+        let jobs =
+            vec![job(0, 0.0, 1, 1.0, 100.0), job(1, 10.0, 1, 1.0, 50.0), job(2, 20.0, 1, 1.0, 25.0)];
+        // FCFS completions: 100, 150, 175 -> stretches 1.0, 2.8, 6.2.
+        let t = trace(jobs, 1);
+        let b = max_stretch_lower_bound(&t, TAU, 1e-3);
+        assert!(b <= 6.2 + 1e-6, "bound {b} exceeds an achievable schedule");
+        assert!(b >= 1.0);
+    }
+}

@@ -1,0 +1,619 @@
+//! Experiment implementations: trace sets + one harness per table/figure.
+//!
+//! Default scale is laptop-sized (see DESIGN.md §Substitutions: fewer and
+//! smaller traces than the paper's Grid'5000 runs); `--full` restores the
+//! paper's scale. Every harness prints rows in the paper's layout and also
+//! writes a CSV under `--out` for plotting.
+
+use crate::bound::max_stretch_lower_bound;
+use crate::metrics::{print_table, TableRow};
+use crate::sched::registry::{
+    best_algorithms, fig1_algorithms, make_policy, table2_algorithms, table3_algorithms,
+};
+use crate::sim::{run, SimConfig, SimResult};
+use crate::util::cli::Args;
+use crate::util::stats::Summary;
+use crate::workload::{hpc2n, lublin, scale, swf, Trace};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+const TAU: f64 = 10.0;
+
+/// Experiment scale knobs.
+pub struct Scale {
+    pub traces: usize,
+    pub jobs: usize,
+    pub seed: u64,
+    pub loads: Vec<f64>,
+    pub period: f64,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args) -> Scale {
+        let full = args.flag("full");
+        Scale {
+            traces: args.usize_or("traces", if full { 100 } else { 5 }),
+            jobs: args.usize_or("jobs", if full { 1000 } else { 200 }),
+            seed: args.u64_or("seed", 42),
+            loads: if full {
+                (1..=9).map(|i| i as f64 / 10.0).collect()
+            } else {
+                vec![0.1, 0.3, 0.5, 0.7, 0.9]
+            },
+            period: args.f64_or("period", 600.0),
+        }
+    }
+}
+
+/// The three trace sets of §5.3.
+pub struct TraceSets {
+    pub real_world: Vec<Trace>,
+    pub unscaled: Vec<Trace>,
+    /// (load, trace) pairs.
+    pub scaled: Vec<(f64, Trace)>,
+}
+
+pub fn build_trace_sets(s: &Scale) -> TraceSets {
+    let real_world: Vec<Trace> =
+        (0..s.traces).map(|i| hpc2n::generate(s.seed + 1000 + i as u64, s.jobs)).collect();
+    let unscaled: Vec<Trace> = (0..s.traces)
+        .map(|i| lublin::generate(s.seed + i as u64, s.jobs, &lublin::LublinParams::default()))
+        .collect();
+    let mut scaled = Vec::new();
+    for t in &unscaled {
+        for &l in &s.loads {
+            scaled.push((l, scale::scale_to_load(t, l)));
+        }
+    }
+    TraceSets { real_world, unscaled, scaled }
+}
+
+/// Per-trace bound cache (the bound is algorithm-independent).
+pub struct BoundCache {
+    cache: HashMap<usize, f64>,
+}
+
+impl BoundCache {
+    pub fn new() -> Self {
+        BoundCache { cache: HashMap::new() }
+    }
+    pub fn get(&mut self, key: usize, trace: &Trace) -> f64 {
+        *self.cache.entry(key).or_insert_with(|| max_stretch_lower_bound(trace, TAU, 1e-3))
+    }
+}
+
+fn run_alg(name: &str, trace: &Trace, period: f64) -> Result<SimResult> {
+    let mut policy = make_policy(name, period)?;
+    // Sweep harnesses use the Rust reference solver: it is numerically
+    // identical to the XLA artifact (cross-checked in rust/tests/
+    // runtime_xla.rs) and avoids paying the PJRT call overhead thousands of
+    // times per sweep. `dfrs simulate --solver xla` exercises the artifact
+    // on the live path.
+    Ok(run(trace, policy.as_mut(), SimConfig::default(), Box::new(crate::alloc::RustSolver)))
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    let d = PathBuf::from(args.str_or("out", "results"));
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+fn write_csv(path: &PathBuf, header: &str, rows: &[String]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------- simulate
+
+pub fn cmd_simulate(args: &Args) -> Result<()> {
+    let alg = args.str_or("alg", "GreedyPM */per/OPT=MIN/MINVT=600");
+    let seed = args.u64_or("seed", 1);
+    let jobs = args.usize_or("jobs", 400);
+    let period = args.f64_or("period", 600.0);
+    let trace = load_workload(args, seed, jobs)?;
+    let trace = match args.get("load") {
+        Some(l) => scale::scale_to_load(&trace, l.parse()?),
+        None => trace,
+    };
+    let mut policy = make_policy(&alg, period)?;
+    let solver = crate::runtime::solver_by_name(&args.str_or("solver", "auto"))?;
+    let t0 = std::time::Instant::now();
+    let r = run(&trace, policy.as_mut(), SimConfig::default(), solver);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("algorithm          : {alg}");
+    println!("jobs               : {}", trace.jobs.len());
+    println!("nodes              : {}", trace.nodes);
+    println!("offered load       : {:.3}", trace.offered_load());
+    println!("max stretch        : {:.2}", r.max_stretch);
+    println!("avg stretch        : {:.2}", r.avg_stretch);
+    println!("norm underutil     : {:.3}", r.norm_underutil);
+    println!("preemptions        : {} ({:.2}/job)", r.preemptions, r.preempt_per_job);
+    println!("migrations         : {} ({:.2}/job)", r.migrations, r.migrate_per_job);
+    println!("bandwidth          : {:.3} GB/s", r.gb_per_sec);
+    println!("makespan           : {:.0} s", r.makespan);
+    println!("sim wall time      : {:.2} s", wall);
+    if args.flag("bound") {
+        let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
+        println!("offline bound      : {b:.2}");
+        println!("degradation        : {:.1}", r.max_stretch / b);
+    }
+    Ok(())
+}
+
+fn load_workload(args: &Args, seed: u64, jobs: usize) -> Result<Trace> {
+    match args.str_or("workload", "synthetic").as_str() {
+        "synthetic" => Ok(lublin::generate(seed, jobs, &lublin::LublinParams::default())),
+        "hpc2n" => Ok(hpc2n::generate(seed, jobs)),
+        "swf" => {
+            let p = args.get("swf").context("--workload swf requires --swf PATH")?;
+            swf::load_hpc2n(std::path::Path::new(p))
+        }
+        other => anyhow::bail!("unknown workload {other:?}"),
+    }
+}
+
+// ------------------------------------------------------------------- bound
+
+pub fn cmd_bound(args: &Args) -> Result<()> {
+    let trace = load_workload(args, args.u64_or("seed", 1), args.usize_or("jobs", 400))?;
+    let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
+    println!("jobs={} nodes={} bound={b:.3}", trace.jobs.len(), trace.nodes);
+    Ok(())
+}
+
+// --------------------------------------------------------------------- gen
+
+pub fn cmd_gen(args: &Args) -> Result<()> {
+    let trace = load_workload(args, args.u64_or("seed", 1), args.usize_or("jobs", 400))?;
+    let text = swf::to_swf(&trace);
+    match args.get("out") {
+        Some(p) => std::fs::write(p, text)?,
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- bench
+
+pub fn cmd_bench(args: &Args) -> Result<()> {
+    let target = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    match target {
+        "table2" => bench_table2(args),
+        "table3" => bench_table3(args),
+        "table4" => bench_table4(args),
+        "fig1" => bench_fig1(args),
+        "fig2" => bench_fig2(args),
+        "fig3" => bench_fig3(args),
+        "fig4" => bench_fig4(args),
+        "fig9" => bench_fig9(args),
+        "ablation" => bench_ablation(args),
+        "all" => {
+            for t in ["table2", "table3", "table4", "fig1", "fig2", "fig3", "fig4", "fig9"] {
+                let mut a2 = args.clone();
+                a2.positional = vec!["bench".into(), t.into()];
+                cmd_bench(&a2)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown bench target {other:?}"),
+    }
+}
+
+/// Table 2: degradation from bound, per algorithm, over the 3 trace sets.
+pub fn bench_table2(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let mut csv = Vec::new();
+    for (set_name, traces) in [
+        ("real-world", &sets.real_world),
+        ("unscaled-synthetic", &sets.unscaled),
+        (
+            "scaled-synthetic",
+            &sets.scaled.iter().map(|(_, t)| t.clone()).collect::<Vec<_>>(),
+        ),
+    ] {
+        let mut bounds = BoundCache::new();
+        let mut rows = Vec::new();
+        for alg in table2_algorithms() {
+            let mut row = TableRow::new(alg);
+            for (k, t) in traces.iter().enumerate() {
+                let r = run_alg(alg, t, s.period)?;
+                let b = bounds.get(k, t);
+                let d = r.max_stretch / b.max(1.0);
+                row.summary.add(d);
+                csv.push(format!("{set_name},{alg},{k},{d:.4}"));
+            }
+            rows.push(row);
+        }
+        print_table(
+            &format!("Table 2 — degradation from bound ({set_name}, {} traces)", traces.len()),
+            &rows,
+        );
+    }
+    write_csv(&dir.join("table2.csv"), "set,algorithm,trace,degradation", &csv)
+}
+
+/// Table 3: preemption/migration costs on scaled traces with load ≥ 0.7.
+pub fn bench_table3(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let sets = build_trace_sets(&s);
+    let heavy: Vec<&Trace> =
+        sets.scaled.iter().filter(|(l, _)| *l >= 0.7).map(|(_, t)| t).collect();
+    anyhow::ensure!(!heavy.is_empty(), "no scaled traces with load >= 0.7");
+    let dir = out_dir(args);
+    let mut csv = Vec::new();
+    println!(
+        "\nTable 3 — preemption/migration costs (scaled synthetic, load ≥ 0.7, {} traces)",
+        heavy.len()
+    );
+    println!(
+        "{:<40} {:>9} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "Algorithm", "pmtnGB/s", "migGB/s", "pmtn/hr", "mig/hr", "pmtn/job", "mig/job"
+    );
+    for alg in table3_algorithms() {
+        let (mut bw_p, mut bw_m, mut ph, mut mh, mut pj, mut mj) = (
+            Summary::new(),
+            Summary::new(),
+            Summary::new(),
+            Summary::new(),
+            Summary::new(),
+            Summary::new(),
+        );
+        for t in &heavy {
+            let r = run_alg(alg, t, s.period)?;
+            // Split bandwidth by event counts (engine tracks total GB and
+            // both event counters; preemption moves 2x mem per job pair
+            // pause+resume, migration 2x per move — we attribute by count).
+            let total_events = (r.preemptions + r.migrations).max(1);
+            let p_share = r.preemptions as f64 / total_events as f64;
+            bw_p.add(r.gb_per_sec * p_share);
+            bw_m.add(r.gb_per_sec * (1.0 - p_share));
+            ph.add(r.preempt_per_hour);
+            mh.add(r.migrate_per_hour);
+            pj.add(r.preempt_per_job);
+            mj.add(r.migrate_per_job);
+        }
+        println!(
+            "{:<40} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            alg,
+            bw_p.mean(),
+            bw_m.mean(),
+            ph.mean(),
+            mh.mean(),
+            pj.mean(),
+            mj.mean()
+        );
+        csv.push(format!(
+            "{alg},{:.4},{:.4},{:.2},{:.2},{:.3},{:.3}",
+            bw_p.mean(),
+            bw_m.mean(),
+            ph.mean(),
+            mh.mean(),
+            pj.mean(),
+            mj.mean()
+        ));
+    }
+    write_csv(
+        &dir.join("table3.csv"),
+        "algorithm,pmtn_gbps,mig_gbps,pmtn_hr,mig_hr,pmtn_job,mig_job",
+        &csv,
+    )
+}
+
+/// Table 4: average normalized underutilization, EASY vs the two best.
+pub fn bench_table4(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let algs: Vec<&str> =
+        ["EASY"].into_iter().chain(best_algorithms()).collect();
+    let mut csv = Vec::new();
+    println!("\nTable 4 — average normalized underutilization");
+    println!(
+        "{:<40} {:>12} {:>12} {:>12}",
+        "Algorithm", "real-world", "unscaled", "scaled"
+    );
+    for alg in algs {
+        let mut cols = Vec::new();
+        for traces in [
+            sets.real_world.clone(),
+            sets.unscaled.clone(),
+            sets.scaled.iter().map(|(_, t)| t.clone()).collect(),
+        ] {
+            let mut u = Summary::new();
+            for t in &traces {
+                u.add(run_alg(alg, t, s.period)?.norm_underutil);
+            }
+            cols.push(u.mean());
+        }
+        println!("{:<40} {:>12.3} {:>12.3} {:>12.3}", alg, cols[0], cols[1], cols[2]);
+        csv.push(format!("{alg},{:.4},{:.4},{:.4}", cols[0], cols[1], cols[2]));
+    }
+    write_csv(&dir.join("table4.csv"), "algorithm,real_world,unscaled,scaled", &csv)
+}
+
+/// Figure 1: average degradation vs load for selected algorithms.
+pub fn bench_fig1(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let mut csv = Vec::new();
+    println!("\nFigure 1 — average degradation from bound vs load (scaled synthetic)");
+    print!("{:<40}", "Algorithm");
+    for l in &s.loads {
+        print!(" {:>9}", format!("load={l}"));
+    }
+    println!();
+    // Bound cache keyed by (trace index within scaled set).
+    let mut bounds = BoundCache::new();
+    for alg in fig1_algorithms() {
+        let mut by_load: HashMap<u64, Summary> = HashMap::new();
+        for (k, (l, t)) in sets.scaled.iter().enumerate() {
+            let r = run_alg(alg, t, s.period)?;
+            let b = bounds.get(k, t);
+            let d = r.max_stretch / b.max(1.0);
+            by_load.entry((l * 10.0).round() as u64).or_default().add(d);
+            csv.push(format!("{alg},{l},{d:.4}"));
+        }
+        print!("{:<40}", alg);
+        for l in &s.loads {
+            let key = (l * 10.0).round() as u64;
+            print!(" {:>9.1}", by_load.get(&key).map(|s| s.mean()).unwrap_or(f64::NAN));
+        }
+        println!();
+    }
+    write_csv(&dir.join("fig1.csv"), "algorithm,load,degradation", &csv)
+}
+
+/// Figure 2: demand/utilization time series for one trace (illustration).
+pub fn bench_fig2(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let dir = out_dir(args);
+    let t = lublin::generate(s.seed, s.jobs, &lublin::LublinParams::default());
+    let t = scale::scale_to_load(&t, 0.7);
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+    let r = run_alg(alg, &t, s.period)?;
+    let series = crate::metrics::figure2_series(&r, t.nodes, 200);
+    let rows: Vec<String> =
+        series.iter().map(|(t, d, u)| format!("{t:.0},{d:.3},{u:.3}")).collect();
+    println!("\nFigure 2 — demand vs utilization series written (underutil area = {:.0} node-s, normalized {:.3})",
+        r.underutil_area, r.norm_underutil);
+    write_csv(&dir.join("fig2.csv"), "time,capped_demand,utilization", &rows)
+}
+
+/// Figures 3/5-7: normalized underutilization vs period.
+pub fn bench_fig3(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let max_period = args.f64_or("max-period", 12_000.0);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let periods = period_sweep(max_period);
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+    let mut csv = Vec::new();
+    for (set_name, traces) in named_sets(&sets) {
+        // EASY reference (period-independent).
+        let mut easy = Summary::new();
+        for t in &traces {
+            easy.add(run_alg("EASY", t, s.period)?.norm_underutil);
+        }
+        println!("\nFigure 3 — norm. underutilization vs period ({set_name}); EASY = {:.3}", easy.mean());
+        for &p in &periods {
+            let mut u = Summary::new();
+            for t in &traces {
+                u.add(run_alg(alg, t, p)?.norm_underutil);
+            }
+            println!("  period {:>6.0}s: {:.3}", p, u.mean());
+            csv.push(format!("{set_name},{p},{:.4},{:.4}", u.mean(), easy.mean()));
+        }
+    }
+    write_csv(&dir.join("fig3.csv"), "set,period,dfrs_underutil,easy_underutil", &csv)
+}
+
+/// Figures 4/8: max-stretch degradation vs period.
+pub fn bench_fig4(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let max_period = args.f64_or("max-period", 12_000.0);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let periods = period_sweep(max_period);
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+    let mut csv = Vec::new();
+    for (set_name, traces) in named_sets(&sets) {
+        let mut bounds = BoundCache::new();
+        println!("\nFigure 4 — degradation vs period ({set_name})");
+        for &p in &periods {
+            let mut d = Summary::new();
+            for (k, t) in traces.iter().enumerate() {
+                let r = run_alg(alg, t, p)?;
+                d.add(r.max_stretch / bounds.get(k, t).max(1.0));
+            }
+            println!("  period {:>6.0}s: {:.1}", p, d.mean());
+            csv.push(format!("{set_name},{p},{:.4}", d.mean()));
+        }
+    }
+    write_csv(&dir.join("fig4.csv"), "set,period,degradation", &csv)
+}
+
+/// Figure 9: bandwidth vs period on heavy-load scaled traces.
+pub fn bench_fig9(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let max_period = args.f64_or("max-period", 12_000.0);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let heavy: Vec<&Trace> =
+        sets.scaled.iter().filter(|(l, _)| *l >= 0.7).map(|(_, t)| t).collect();
+    let periods = period_sweep(max_period);
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+    let mut csv = Vec::new();
+    println!("\nFigure 9 — bandwidth vs period (scaled synthetic, load ≥ 0.7)");
+    for &p in &periods {
+        let mut bw = Summary::new();
+        for t in &heavy {
+            bw.add(run_alg(alg, t, p)?.gb_per_sec);
+        }
+        println!("  period {:>6.0}s: {:.3} GB/s", p, bw.mean());
+        csv.push(format!("{p},{:.4}", bw.mean()));
+    }
+    write_csv(&dir.join("fig9.csv"), "period,gb_per_sec", &csv)
+}
+
+/// Ablations for the design choices DESIGN.md calls out:
+/// (a) Appendix-A parameter sweep — OPT=MIN vs OPT=AVG crossed with the
+///     remap-limiting rules (none / MINVT / MINFT at 300/600 s);
+/// (b) §4.3 list-ordering key — the paper's max(cpu, mem) vs Leinberger's
+///     sum, compared by achieved packing yield on random live states.
+pub fn bench_ablation(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let sets = build_trace_sets(&s);
+    let dir = out_dir(args);
+    let mut csv = Vec::new();
+
+    // (a) Appendix A: the full OPT x pin grid on the scaled synthetic set.
+    let traces: Vec<&Trace> = sets.scaled.iter().map(|(_, t)| t).collect();
+    let mut bounds = BoundCache::new();
+    println!("\nAblation A — OPT and remap-limit grid (GreedyPM */per, scaled synthetic)");
+    println!("{:<46} {:>10} {:>10}", "Algorithm", "avg-deg", "max-deg");
+    for opt in ["OPT=MIN", "OPT=AVG"] {
+        for pin in ["", "/MINFT=300", "/MINFT=600", "/MINVT=300", "/MINVT=600"] {
+            let alg = format!("GreedyPM */per/{opt}{pin}");
+            let mut d = Summary::new();
+            for (k, t) in traces.iter().enumerate() {
+                let r = run_alg(&alg, t, s.period)?;
+                d.add(r.max_stretch / bounds.get(k, t).max(1.0));
+            }
+            println!("{:<46} {:>10.2} {:>10.2}", alg, d.mean(), d.max());
+            csv.push(format!("grid,{alg},{:.4},{:.4}", d.mean(), d.max()));
+        }
+    }
+
+    // (b) Sort-key ablation: achieved yield of the MCB8 binary search under
+    // Max vs Sum ordering on random live cluster states.
+    use crate::packing::mcb8::{pack_with_key, PackJob, SortKey};
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(s.seed);
+    let mut wins_max = 0usize;
+    let mut wins_sum = 0usize;
+    let mut ties = 0usize;
+    let cases = 200;
+    for _ in 0..cases {
+        let nodes = 16 + rng.below(112) as usize;
+        let njobs = 10 + rng.below(80) as usize;
+        let jobs: Vec<(u32, f64, f64)> = (0..njobs)
+            .map(|_| {
+                (
+                    1 + rng.below(4) as u32,
+                    [0.25, 0.5, 1.0][rng.below(3) as usize],
+                    0.1 * (1 + rng.below(8)) as f64,
+                )
+            })
+            .collect();
+        let achieved = |key: SortKey| -> f64 {
+            let probe = |y: f64| {
+                let pj: Vec<PackJob> = jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(id, &(tasks, need, mem))| PackJob {
+                        id,
+                        tasks,
+                        cpu_req: need * y,
+                        mem,
+                        pinned: None,
+                    })
+                    .collect();
+                pack_with_key(&pj, nodes, key).is_some()
+            };
+            if probe(1.0) {
+                return 1.0;
+            }
+            if !probe(0.0) {
+                return -1.0; // memory-infeasible
+            }
+            let (mut lo, mut hi) = (0.0f64, 1.0f64);
+            while hi - lo > 0.01 {
+                let mid = 0.5 * (lo + hi);
+                if probe(mid) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo
+        };
+        let a = achieved(SortKey::Max);
+        let b = achieved(SortKey::Sum);
+        if (a - b).abs() < 0.011 {
+            ties += 1;
+        } else if a > b {
+            wins_max += 1;
+        } else {
+            wins_sum += 1;
+        }
+    }
+    println!(
+        "\nAblation B — MCB8 list key on {cases} random instances: \
+         max-key wins {wins_max}, sum-key wins {wins_sum}, ties {ties}"
+    );
+    println!("(paper §4.3: max 'performs marginally better' than sum)");
+    csv.push(format!("sortkey,max_wins,{wins_max},{cases}"));
+    csv.push(format!("sortkey,sum_wins,{wins_sum},{cases}"));
+    csv.push(format!("sortkey,ties,{ties},{cases}"));
+    write_csv(&dir.join("ablation.csv"), "kind,item,value,extra", &csv)
+}
+
+fn period_sweep(max_period: f64) -> Vec<f64> {
+    let mut ps = vec![600.0, 1200.0, 2400.0, 4800.0, 7200.0, 12_000.0];
+    if max_period > 12_000.0 {
+        ps.extend([24_000.0, 48_000.0, 60_000.0]);
+    }
+    ps.retain(|&p| p <= max_period);
+    ps
+}
+
+fn named_sets(sets: &TraceSets) -> Vec<(&'static str, Vec<Trace>)> {
+    vec![
+        ("real-world", sets.real_world.clone()),
+        ("unscaled-synthetic", sets.unscaled.clone()),
+        ("scaled-synthetic", sets.scaled.iter().map(|(_, t)| t.clone()).collect()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_sets_have_requested_shape() {
+        let s = Scale { traces: 2, jobs: 50, seed: 7, loads: vec![0.3, 0.7], period: 600.0 };
+        let sets = build_trace_sets(&s);
+        assert_eq!(sets.real_world.len(), 2);
+        assert_eq!(sets.unscaled.len(), 2);
+        assert_eq!(sets.scaled.len(), 4);
+        for (l, t) in &sets.scaled {
+            assert!((t.offered_load() - l).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn period_sweep_respects_cap() {
+        assert!(period_sweep(12_000.0).iter().all(|&p| p <= 12_000.0));
+        assert!(period_sweep(60_000.0).contains(&60_000.0));
+    }
+
+    #[test]
+    fn bound_cache_returns_stable_values() {
+        let t = lublin::generate(3, 30, &lublin::LublinParams::default());
+        let mut c = BoundCache::new();
+        let a = c.get(0, &t);
+        let b = c.get(0, &t);
+        assert_eq!(a, b);
+        assert!(a >= 1.0);
+    }
+}

@@ -1,0 +1,64 @@
+//! The experiment coordinator: CLI dispatch, trace-set construction, and
+//! the per-table / per-figure harnesses that regenerate every table and
+//! figure of the paper's evaluation (§6). See DESIGN.md for the experiment
+//! index and EXPERIMENTS.md for recorded results.
+
+pub mod experiments;
+
+use crate::util::cli::Args;
+use anyhow::Result;
+
+const USAGE: &str = "\
+dfrs — Dynamic Fractional Resource Scheduling vs. Batch Scheduling
+  (reproduction of Casanova, Stillwell, Vivien, INRIA RR-7659, 2011)
+
+USAGE: dfrs <command> [options]
+
+COMMANDS
+  simulate      Run one algorithm over one trace and print metrics
+                  --alg NAME        algorithm (paper name; default
+                                    \"GreedyPM */per/OPT=MIN/MINVT=600\")
+                  --workload KIND   synthetic | hpc2n | swf (default synthetic)
+                  --swf PATH        SWF file when --workload swf
+                  --jobs N          jobs to generate (default 400)
+                  --load L          scale to offered load L (optional)
+                  --seed S          RNG seed (default 1)
+                  --period T        periodic interval seconds (default 600)
+                  --solver S        rust | xla | auto (default auto)
+                  --bound           also compute the offline bound
+  bench TARGET  Regenerate a paper table/figure:
+                  table2 | table3 | table4 | fig1 | fig2 | fig3 | fig4 |
+                  fig9 | all
+                  --traces N   traces per set (default 5)
+                  --jobs N     jobs per synthetic trace (default 200)
+                  --seed S     base seed (default 42)
+                  --out DIR    write CSVs here (default results/)
+                  --max-period T   fig3/fig4 upper period (default 12000)
+                  --full       paper-scale run (slow: 100 traces x 1000 jobs)
+  bound         Offline max-stretch lower bound for a generated trace
+                  --jobs N --seed S --workload KIND
+  gen           Generate a trace and write SWF to stdout or --out FILE
+  list-algs     List all registered algorithm names
+  help          This text
+";
+
+/// Entry point used by `rust/src/main.rs`.
+pub fn run_cli(args: Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "simulate" => experiments::cmd_simulate(&args),
+        "bench" => experiments::cmd_bench(&args),
+        "bound" => experiments::cmd_bound(&args),
+        "gen" => experiments::cmd_gen(&args),
+        "list-algs" => {
+            for name in crate::sched::registry::table2_algorithms() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        "help" | _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}

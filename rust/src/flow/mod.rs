@@ -1,0 +1,241 @@
+//! Dinic max-flow on integer capacities.
+//!
+//! Substrate for the offline max-stretch lower bound (§3.1 of the paper):
+//! feasibility of Linear System (1) is a transportation problem on a
+//! jobs × intervals bipartite graph, checked exactly by max-flow. Real
+//! capacities are scaled to u64 by the caller (see `crate::bound`).
+
+#[derive(Debug, Clone)]
+struct Edge {
+    to: usize,
+    cap: u64,
+    /// Index of the reverse edge in `graph[to]`.
+    rev: usize,
+}
+
+/// Dinic max-flow solver.
+#[derive(Debug, Clone)]
+pub struct Dinic {
+    graph: Vec<Vec<Edge>>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic { graph: vec![Vec::new(); n], level: vec![0; n], iter: vec![0; n] }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Add a directed edge `from -> to` with the given capacity.
+    pub fn add_edge(&mut self, from: usize, to: usize, cap: u64) {
+        assert!(from != to, "self loops are not useful in flow networks");
+        let rev_from = self.graph[to].len();
+        let rev_to = self.graph[from].len();
+        self.graph[from].push(Edge { to, cap, rev: rev_from });
+        self.graph[to].push(Edge { to: from, cap: 0, rev: rev_to });
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.iter_mut().for_each(|l| *l = -1);
+        let mut queue = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        queue.push_back(s);
+        while let Some(v) = queue.pop_front() {
+            for e in &self.graph[v] {
+                if e.cap > 0 && self.level[e.to] < 0 {
+                    self.level[e.to] = self.level[v] + 1;
+                    queue.push_back(e.to);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, v: usize, t: usize, f: u64) -> u64 {
+        if v == t {
+            return f;
+        }
+        while self.iter[v] < self.graph[v].len() {
+            let i = self.iter[v];
+            let (to, cap, rev) = {
+                let e = &self.graph[v][i];
+                (e.to, e.cap, e.rev)
+            };
+            if cap > 0 && self.level[v] < self.level[to] {
+                let d = self.dfs(to, t, f.min(cap));
+                if d > 0 {
+                    self.graph[v][i].cap -= d;
+                    self.graph[to][rev].cap += d;
+                    return d;
+                }
+            }
+            self.iter[v] += 1;
+        }
+        0
+    }
+
+    /// Compute the max flow from `s` to `t`. Consumes capacities; call on a
+    /// fresh graph (or a clone) per query.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> u64 {
+        assert!(s != t);
+        let mut flow = 0;
+        while self.bfs(s, t) {
+            self.iter.iter_mut().for_each(|i| *i = 0);
+            loop {
+                let f = self.dfs(s, t, u64::MAX);
+                if f == 0 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn simple_path() {
+        let mut d = Dinic::new(3);
+        d.add_edge(0, 1, 5);
+        d.add_edge(1, 2, 3);
+        assert_eq!(d.max_flow(0, 2), 3);
+    }
+
+    #[test]
+    fn classic_diamond() {
+        // s=0, t=3. Two paths with a cross edge.
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 10);
+        d.add_edge(0, 2, 10);
+        d.add_edge(1, 2, 2);
+        d.add_edge(1, 3, 4);
+        d.add_edge(2, 3, 9);
+        assert_eq!(d.max_flow(0, 3), 13);
+    }
+
+    #[test]
+    fn disconnected_is_zero() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 10);
+        d.add_edge(2, 3, 10);
+        assert_eq!(d.max_flow(0, 3), 0);
+    }
+
+    #[test]
+    fn parallel_edges_accumulate() {
+        let mut d = Dinic::new(2);
+        d.add_edge(0, 1, 3);
+        d.add_edge(0, 1, 4);
+        assert_eq!(d.max_flow(0, 1), 7);
+    }
+
+    #[test]
+    fn bipartite_matching() {
+        // 3 left, 3 right, perfect matching exists.
+        let mut d = Dinic::new(8);
+        let (s, t) = (6, 7);
+        for l in 0..3 {
+            d.add_edge(s, l, 1);
+            d.add_edge(3 + l, t, 1);
+        }
+        d.add_edge(0, 3, 1);
+        d.add_edge(0, 4, 1);
+        d.add_edge(1, 4, 1);
+        d.add_edge(2, 5, 1);
+        assert_eq!(d.max_flow(s, t), 3);
+    }
+
+    /// Flow value equals a cut capacity we can compute directly on layered
+    /// random transportation instances: flow = min(sum supplies, sum demands)
+    /// when the middle is complete with infinite capacity.
+    #[test]
+    fn prop_transportation_saturates_min_side() {
+        forall(
+            57,
+            50,
+            |rng: &mut Rng| {
+                let l = 1 + rng.below(6) as usize;
+                let r = 1 + rng.below(6) as usize;
+                let supply: Vec<u64> = (0..l).map(|_| rng.below(100)).collect();
+                let demand: Vec<u64> = (0..r).map(|_| rng.below(100)).collect();
+                (supply, demand)
+            },
+            |(supply, demand)| {
+                let l = supply.len();
+                let r = demand.len();
+                let s = l + r;
+                let t = s + 1;
+                let mut d = Dinic::new(l + r + 2);
+                for (i, &c) in supply.iter().enumerate() {
+                    d.add_edge(s, i, c);
+                }
+                for (j, &c) in demand.iter().enumerate() {
+                    d.add_edge(l + j, t, c);
+                }
+                for i in 0..l {
+                    for j in 0..r {
+                        d.add_edge(i, l + j, u64::MAX / 4);
+                    }
+                }
+                let flow = d.max_flow(s, t);
+                let expect = supply.iter().sum::<u64>().min(demand.iter().sum::<u64>());
+                if flow != expect {
+                    return Err(format!("flow {flow} != min-side {expect}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Flow conservation: total out of source equals total into sink, and
+    /// flow never exceeds the original capacity on any edge.
+    #[test]
+    fn prop_random_graph_flow_is_valid() {
+        forall(
+            91,
+            40,
+            |rng: &mut Rng| {
+                let n = 4 + rng.below(8) as usize;
+                let m = n + rng.below(3 * n as u64) as usize;
+                let edges: Vec<(usize, usize, u64)> = (0..m)
+                    .map(|_| {
+                        let a = rng.below(n as u64) as usize;
+                        let mut b = rng.below(n as u64) as usize;
+                        if a == b {
+                            b = (b + 1) % n;
+                        }
+                        (a, b, rng.below(50))
+                    })
+                    .collect();
+                (n, edges)
+            },
+            |(n, edges)| {
+                let mut d = Dinic::new(*n);
+                for &(a, b, c) in edges {
+                    d.add_edge(a, b, c);
+                }
+                let before = d.clone();
+                let flow = d.max_flow(0, n - 1);
+                // Net flow out of source must equal `flow`.
+                let mut net_out = 0i128;
+                for (e_after, e_before) in d.graph[0].iter().zip(before.graph[0].iter()) {
+                    net_out += e_before.cap as i128 - e_after.cap as i128;
+                }
+                if net_out != flow as i128 {
+                    return Err(format!("net out {net_out} != flow {flow}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! # dfrs — Dynamic Fractional Resource Scheduling vs. Batch Scheduling
+//!
+//! A reproduction of Casanova, Stillwell, Vivien (INRIA RR-7659 / CS.DC
+//! 2011): job scheduling for homogeneous clusters where VM technology
+//! shares *fractional* node resources, evaluated against batch scheduling
+//! (FCFS, EASY) via discrete-event simulation over synthetic
+//! (Lublin–Feitelson) and HPC2N-like workloads.
+//!
+//! Architecture (three layers, Python only at build time):
+//! - **L3 (this crate)**: the DFRS coordinator — simulator engine
+//!   ([`sim`]), scheduling algorithms ([`sched`], [`packing`]), workloads
+//!   ([`workload`]), the offline max-stretch bound ([`bound`]), metrics
+//!   ([`metrics`]) and the experiment CLI ([`coordinator`]).
+//! - **L2/L1 (python/compile)**: the max–min yield allocation (§4.6) as a
+//!   JAX program wrapping a Pallas kernel, AOT-lowered to HLO text.
+//! - **Runtime bridge ([`runtime`])**: loads the artifact via the `xla`
+//!   crate (PJRT CPU) and serves the allocation on the scheduling hot path,
+//!   cross-checked against the pure-Rust reference in [`alloc`].
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod alloc;
+pub mod benchx;
+pub mod bound;
+pub mod coordinator;
+pub mod flow;
+pub mod lp;
+pub mod metrics;
+pub mod packing;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,245 @@
+//! Dense tableau simplex for small linear programs.
+//!
+//! Used for the paper's LP (2) (OPT=AVG resource allocation: maximize the
+//! average yield subject to per-node capacity, with the max–min yield as a
+//! floor) and for the /stretch-per OPT=AVG analogue. Problem sizes are tiny
+//! (≤ nodes + jobs rows, ≤ jobs columns), so a dense simplex with Bland's
+//! anti-cycling rule is both simple and fast.
+//!
+//! Form solved: maximize `c·x` subject to `A x ≤ b`, `x ≥ 0`, with `b ≥ 0`
+//! (all call sites shift variables so the origin is feasible).
+
+/// Outcome of a solve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    /// Optimal solution found: (objective value, primal x).
+    Optimal(f64, Vec<f64>),
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve `max c·x s.t. A x <= b, x >= 0` (requires `b >= 0`).
+pub fn simplex(c: &[f64], a: &[Vec<f64>], b: &[f64]) -> LpResult {
+    let m = a.len();
+    let n = c.len();
+    assert_eq!(b.len(), m, "b must have one entry per row of A");
+    for row in a {
+        assert_eq!(row.len(), n, "A rows must match c length");
+    }
+    assert!(b.iter().all(|&x| x >= -EPS), "simplex requires b >= 0");
+
+    // Tableau: m rows x (n + m + 1) columns (slack variables + RHS).
+    let w = n + m + 1;
+    let mut t = vec![vec![0.0; w]; m + 1];
+    for i in 0..m {
+        t[i][..n].copy_from_slice(&a[i]);
+        t[i][n + i] = 1.0;
+        t[i][w - 1] = b[i].max(0.0);
+    }
+    // Objective row: minimize -c·x.
+    for j in 0..n {
+        t[m][j] = -c[j];
+    }
+    let mut basis: Vec<usize> = (n..n + m).collect();
+
+    // Bland's rule bounds iterations; add a hard cap as a backstop.
+    let max_iter = 50 * (m + n).max(16);
+    for _ in 0..max_iter {
+        // Entering column: first with negative reduced cost (Bland).
+        let Some(pivot_col) = (0..w - 1).find(|&j| t[m][j] < -EPS) else {
+            let x = extract(&t, &basis, n, w);
+            return LpResult::Optimal(t[m][w - 1], x);
+        };
+        // Leaving row: min ratio, ties by smallest basis index (Bland).
+        let mut pivot_row: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if t[i][pivot_col] > EPS {
+                let ratio = t[i][w - 1] / t[i][pivot_col];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && pivot_row.map(|r| basis[i] < basis[r]).unwrap_or(true))
+                {
+                    best = ratio;
+                    pivot_row = Some(i);
+                }
+            }
+        }
+        let Some(pr) = pivot_row else {
+            return LpResult::Unbounded;
+        };
+        pivot(&mut t, pr, pivot_col);
+        basis[pr] = pivot_col;
+    }
+    // Should be unreachable with Bland's rule; return current vertex.
+    let x = extract(&t, &basis, n, w);
+    LpResult::Optimal(t[m][w - 1], x)
+}
+
+fn pivot(t: &mut [Vec<f64>], pr: usize, pc: usize) {
+    let piv = t[pr][pc];
+    for v in t[pr].iter_mut() {
+        *v /= piv;
+    }
+    let prow = t[pr].clone();
+    for (i, row) in t.iter_mut().enumerate() {
+        if i == pr {
+            continue;
+        }
+        let f = row[pc];
+        if f.abs() > 0.0 {
+            for (v, p) in row.iter_mut().zip(&prow) {
+                *v -= f * p;
+            }
+        }
+    }
+}
+
+fn extract(t: &[Vec<f64>], basis: &[usize], n: usize, w: usize) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for (i, &bi) in basis.iter().enumerate() {
+        if bi < n {
+            x[bi] = t[i][w - 1];
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Rng;
+
+    fn assert_optimal(r: &LpResult, obj: f64, x: &[f64]) {
+        match r {
+            LpResult::Optimal(v, got) => {
+                assert!((v - obj).abs() < 1e-6, "objective {v} != {obj}");
+                for (g, e) in got.iter().zip(x) {
+                    assert!((g - e).abs() < 1e-6, "x {got:?} != {x:?}");
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_2d() {
+        // max 3x + 5y st x <= 4, 2y <= 12, 3x + 2y <= 18 -> (2, 6), obj 36
+        let r = simplex(
+            &[3.0, 5.0],
+            &[
+                vec![1.0, 0.0],
+                vec![0.0, 2.0],
+                vec![3.0, 2.0],
+            ],
+            &[4.0, 12.0, 18.0],
+        );
+        assert_optimal(&r, 36.0, &[2.0, 6.0]);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic Beale-like degenerate instance; Bland's rule must terminate.
+        let r = simplex(
+            &[10.0, -57.0, -9.0, -24.0],
+            &[
+                vec![0.5, -5.5, -2.5, 9.0],
+                vec![0.5, -1.5, -0.5, 1.0],
+                vec![1.0, 0.0, 0.0, 0.0],
+            ],
+            &[0.0, 0.0, 1.0],
+        );
+        match r {
+            LpResult::Optimal(v, _) => assert!((v - 1.0).abs() < 1e-6, "v={v}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let r = simplex(&[1.0, 0.0], &[vec![-1.0, 1.0]], &[1.0]);
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn zero_objective_is_feasible_origin() {
+        let r = simplex(&[0.0, 0.0], &[vec![1.0, 1.0]], &[1.0]);
+        assert_optimal(&r, 0.0, &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn yield_lp_structure() {
+        // Two nodes, three jobs: job0 on node0 (need .5), job1 on node1
+        // (need .5), job2 on both (need .25 each). Maximize total yield with
+        // caps y <= 1 encoded as rows. Optimum: all can hit their caps?
+        // node0: .5 y0 + .25 y2 <= 1, node1: .5 y1 + .25 y2 <= 1.
+        // y=1 for all gives .75 <= 1 on both nodes -> feasible, obj 3.
+        let r = simplex(
+            &[1.0, 1.0, 1.0],
+            &[
+                vec![0.5, 0.0, 0.25],
+                vec![0.0, 0.5, 0.25],
+                vec![1.0, 0.0, 0.0],
+                vec![0.0, 1.0, 0.0],
+                vec![0.0, 0.0, 1.0],
+            ],
+            &[1.0, 1.0, 1.0, 1.0, 1.0],
+        );
+        assert_optimal(&r, 3.0, &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_solution_is_feasible_and_beats_random_points() {
+        forall(
+            31,
+            40,
+            |rng: &mut Rng| {
+                let n = 1 + rng.below(5) as usize;
+                let m = 1 + rng.below(5) as usize;
+                let c: Vec<f64> = (0..n).map(|_| rng.range(0.0, 2.0)).collect();
+                let a: Vec<Vec<f64>> = (0..m)
+                    .map(|_| (0..n).map(|_| rng.range(0.05, 1.0)).collect())
+                    .collect();
+                let b: Vec<f64> = (0..m).map(|_| rng.range(0.5, 3.0)).collect();
+                (c, a, b)
+            },
+            |(c, a, b)| {
+                // A > 0 and c >= 0 -> bounded. Check feasibility + local optimality.
+                let LpResult::Optimal(obj, x) = simplex(c, a, b) else {
+                    return Err("expected optimal for positive A".into());
+                };
+                for (row, &bi) in a.iter().zip(b.iter()) {
+                    let lhs: f64 = row.iter().zip(&x).map(|(r, xi)| r * xi).sum();
+                    if lhs > bi + 1e-6 {
+                        return Err(format!("infeasible: {lhs} > {bi}"));
+                    }
+                }
+                if x.iter().any(|&xi| xi < -1e-9) {
+                    return Err("negative x".into());
+                }
+                let cx: f64 = c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+                if (cx - obj).abs() > 1e-6 {
+                    return Err(format!("objective mismatch {cx} vs {obj}"));
+                }
+                // Sampled feasible points must not beat the optimum.
+                let mut r2 = Rng::new(obj.to_bits());
+                for _ in 0..20 {
+                    let y: Vec<f64> = (0..x.len()).map(|_| r2.range(0.0, 1.0)).collect();
+                    let feas = a
+                        .iter()
+                        .zip(b.iter())
+                        .all(|(row, &bi)| row.iter().zip(&y).map(|(r, yi)| r * yi).sum::<f64>() <= bi);
+                    if feas {
+                        let cy: f64 = c.iter().zip(&y).map(|(ci, yi)| ci * yi).sum();
+                        if cy > obj + 1e-6 {
+                            return Err(format!("random point beats optimum: {cy} > {obj}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

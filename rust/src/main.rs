@@ -1,0 +1,13 @@
+//! `dfrs` CLI — the L3 coordinator entrypoint.
+//!
+//! Run `dfrs help` for usage. The binary is self-contained once
+//! `make artifacts` has produced the AOT kernel (and falls back to the
+//! pure-Rust allocation solver when the artifact is absent).
+
+fn main() {
+    let args = dfrs::util::cli::Args::from_env();
+    if let Err(e) = dfrs::coordinator::run_cli(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

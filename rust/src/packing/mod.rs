@@ -1,0 +1,12 @@
+//! MCB8 vector packing (§4.3): two-dimensional (CPU, memory) multi-capacity
+//! bin packing after Leinberger et al., with the paper's modifications —
+//! lists sorted by the *maximum* requirement, a binary search on the yield
+//! that turns fluid CPU needs into fixed CPU requirements, pinned jobs
+//! (MINVT/MINFT remap limiting) and lowest-priority job dropping when no
+//! yield is feasible.
+
+pub mod mcb8;
+pub mod search;
+
+pub use mcb8::{pack, PackJob, PackResult};
+pub use search::{mcb8_allocate, Mcb8Outcome};

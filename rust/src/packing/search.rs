@@ -1,0 +1,231 @@
+//! The MCB8 outer loop (§4.3): binary search on the yield to find the
+//! highest Y for which the vector-packing succeeds (accuracy 0.01), with
+//! MINVT/MINFT pinning and lowest-priority-job dropping when no yield is
+//! feasible.
+
+use super::mcb8::{pack, PackJob};
+use crate::sched::priority::sort_by_priority;
+use crate::sim::{JobId, JobState, NodeId, Sim};
+
+/// Remap-limiting rule (§4.3 "Limiting Migration").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PinRule {
+    /// Pin running jobs whose virtual time is below the bound (seconds).
+    MinVt(f64),
+    /// Pin running jobs whose flow time is below the bound (seconds).
+    MinFt(f64),
+}
+
+impl PinRule {
+    pub fn suffix(&self) -> String {
+        match self {
+            PinRule::MinVt(b) => format!("/MINVT={}", *b as u64),
+            PinRule::MinFt(b) => format!("/MINFT={}", *b as u64),
+        }
+    }
+
+    fn pins(&self, sim: &Sim, j: JobId) -> bool {
+        if !matches!(sim.jobs[j].state, JobState::Running) {
+            return false;
+        }
+        match self {
+            PinRule::MinVt(b) => sim.jobs[j].vt < *b,
+            PinRule::MinFt(b) => sim.jobs[j].flow_time(sim.now) < *b,
+        }
+    }
+}
+
+/// Result of a full MCB8 allocation pass.
+#[derive(Debug, Clone)]
+pub struct Mcb8Outcome {
+    /// Placement for every job MCB8 kept; apply with `Sim::apply_mapping`.
+    pub mapping: Vec<(JobId, Vec<NodeId>)>,
+    /// Yield the binary search settled on.
+    pub yield_achieved: f64,
+    /// Jobs dropped (lowest priority first) because no yield was feasible.
+    pub dropped: Vec<JobId>,
+}
+
+/// Yield-accuracy of the binary search (§4.3).
+const ACCURACY: f64 = 0.01;
+
+fn build_pack_jobs(sim: &Sim, candidates: &[JobId], y: f64, pin: Option<PinRule>) -> Vec<PackJob> {
+    candidates
+        .iter()
+        .map(|&j| {
+            let spec = &sim.jobs[j].spec;
+            let pinned = match pin {
+                Some(rule) if rule.pins(sim, j) => Some(sim.jobs[j].placement.clone()),
+                _ => None,
+            };
+            PackJob {
+                id: j,
+                tasks: spec.tasks,
+                cpu_req: (spec.cpu_need * y).min(1.0),
+                mem: spec.mem,
+                pinned,
+            }
+        })
+        .collect()
+}
+
+/// Run the MCB8 allocation over all live jobs (running + paused + pending).
+pub fn mcb8_allocate(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
+    let mut candidates: Vec<JobId> = sim.running();
+    candidates.extend(sim.paused());
+    candidates.extend(sim.pending());
+    sort_by_priority(sim, &mut candidates); // descending priority
+    let nodes = sim.cluster.nodes;
+    let mut dropped = Vec::new();
+
+    loop {
+        if candidates.is_empty() {
+            return Mcb8Outcome { mapping: vec![], yield_achieved: 0.0, dropped };
+        }
+        // Perf (§Perf): build the pack-job vector (with pinned-placement
+        // clones) once per candidate set and only rewrite the CPU
+        // requirement per binary-search probe.
+        let mut pack_jobs = build_pack_jobs(sim, &candidates, 1.0, pin);
+        let needs: Vec<f64> = candidates.iter().map(|&j| sim.jobs[j].spec.cpu_need).collect();
+        let mut try_pack = |y: f64| {
+            for (pj, need) in pack_jobs.iter_mut().zip(&needs) {
+                pj.cpu_req = (need * y).min(1.0);
+            }
+            pack(&pack_jobs, nodes)
+        };
+
+        // Fast path: everything fits at full yield.
+        if let Some(r) = try_pack(1.0) {
+            return Mcb8Outcome { mapping: r.placements, yield_achieved: 1.0, dropped };
+        }
+        // Memory-only feasibility (Y -> 0). If even that fails, drop the
+        // lowest-priority candidate and restart.
+        let Some(mut best) = try_pack(0.0) else {
+            let victim = candidates.pop().unwrap(); // lowest priority last
+            dropped.push(victim);
+            continue;
+        };
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        while hi - lo > ACCURACY {
+            let mid = 0.5 * (lo + hi);
+            match try_pack(mid) {
+                Some(r) => {
+                    best = r;
+                    lo = mid;
+                }
+                None => hi = mid,
+            }
+        }
+        return Mcb8Outcome { mapping: best.placements, yield_achieved: lo, dropped };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::RustSolver;
+    use crate::sim::SimConfig;
+    use crate::workload::{Job, Trace};
+
+    fn sim_with(jobs: Vec<Job>, nodes: usize) -> Sim {
+        let t = Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 };
+        Sim::new(&t, SimConfig::default(), Box::new(RustSolver))
+    }
+
+    fn job(id: u32, tasks: u32, need: f64, mem: f64) -> Job {
+        Job { id, submit: 0.0, tasks, cpu_need: need, mem, proc_time: 1000.0 }
+    }
+
+    #[test]
+    fn all_fit_at_full_yield() {
+        let mut sim = sim_with(vec![job(0, 2, 0.4, 0.2), job(1, 1, 0.3, 0.2)], 4);
+        sim.now = 1.0;
+        let out = mcb8_allocate(&sim, None);
+        assert_eq!(out.yield_achieved, 1.0);
+        assert_eq!(out.mapping.len(), 2);
+        assert!(out.dropped.is_empty());
+    }
+
+    #[test]
+    fn cpu_contention_lowers_yield() {
+        // 4 single-task jobs, need 1.0, tiny memory, 2 nodes: two per node
+        // -> max feasible yield ~0.5.
+        let mut sim = sim_with(
+            vec![job(0, 1, 1.0, 0.1), job(1, 1, 1.0, 0.1), job(2, 1, 1.0, 0.1), job(3, 1, 1.0, 0.1)],
+            2,
+        );
+        sim.now = 1.0;
+        let out = mcb8_allocate(&sim, None);
+        assert!(out.dropped.is_empty());
+        assert!((out.yield_achieved - 0.5).abs() <= ACCURACY, "Y={}", out.yield_achieved);
+        assert_eq!(out.mapping.len(), 4);
+    }
+
+    #[test]
+    fn memory_infeasibility_drops_lowest_priority() {
+        // 3 jobs of 60% memory on 1 node: only one fits regardless of yield.
+        let mut sim = sim_with(
+            vec![job(0, 1, 0.1, 0.6), job(1, 1, 0.1, 0.6), job(2, 1, 0.1, 0.6)],
+            1,
+        );
+        // Give jobs distinct priorities: job 2 has run a lot (low priority).
+        sim.start_job(0, vec![0]);
+        sim.jobs[0].vt = 1.0;
+        sim.now = 100.0;
+        // jobs 1,2 pending with vt=0 -> infinite priority; job 0 lowest.
+        let out = mcb8_allocate(&sim, None);
+        assert_eq!(out.mapping.len(), 1);
+        assert_eq!(out.dropped.len(), 2);
+        assert_eq!(out.dropped[0], 0, "lowest priority (job 0) dropped first");
+    }
+
+    #[test]
+    fn pinned_running_job_keeps_placement() {
+        let mut sim = sim_with(vec![job(0, 2, 0.5, 0.3), job(1, 1, 0.5, 0.3)], 4);
+        sim.start_job(0, vec![2, 3]);
+        sim.jobs[0].vt = 10.0; // < 600 -> pinned under MinVt(600)
+        sim.now = 50.0;
+        let out = mcb8_allocate(&sim, Some(PinRule::MinVt(600.0)));
+        let entry = out.mapping.iter().find(|(j, _)| *j == 0).unwrap();
+        assert_eq!(entry.1, vec![2, 3]);
+    }
+
+    #[test]
+    fn unpinned_after_bound_elapses() {
+        let mut sim = sim_with(vec![job(0, 2, 0.5, 0.3)], 4);
+        sim.start_job(0, vec![2, 3]);
+        sim.jobs[0].vt = 700.0; // above the bound -> free to move
+        sim.now = 800.0;
+        let out = mcb8_allocate(&sim, Some(PinRule::MinVt(600.0)));
+        assert_eq!(out.mapping.len(), 1, "job must still be placed somewhere");
+    }
+
+    #[test]
+    fn minft_pins_by_flow_time() {
+        let mut sim = sim_with(vec![job(0, 1, 0.5, 0.3)], 2);
+        sim.start_job(0, vec![1]);
+        sim.jobs[0].vt = 1e9; // virtual time huge; flow time small
+        sim.now = 100.0;
+        let out = mcb8_allocate(&sim, Some(PinRule::MinFt(600.0)));
+        let entry = out.mapping.iter().find(|(j, _)| *j == 0).unwrap();
+        assert_eq!(entry.1, vec![1], "MINFT pins on flow time");
+    }
+
+    #[test]
+    fn yield_search_monotone_envelope() {
+        // More jobs on the same nodes can only lower the achieved yield.
+        let mut prev = 1.0;
+        for n_jobs in 1..=6u32 {
+            let jobs: Vec<Job> = (0..n_jobs).map(|i| job(i, 1, 1.0, 0.05)).collect();
+            let mut sim = sim_with(jobs, 2);
+            sim.now = 1.0;
+            let out = mcb8_allocate(&sim, None);
+            assert!(
+                out.yield_achieved <= prev + ACCURACY,
+                "yield rose from {prev} to {} at {n_jobs} jobs",
+                out.yield_achieved
+            );
+            prev = out.yield_achieved;
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT runtime: load the AOT-compiled allocation kernel
+//! (`artifacts/maxmin.hlo.txt`, produced by `python/compile/aot.py`) and
+//! execute it on the scheduler hot path.
+//!
+//! Interchange format is HLO *text* (not a serialized proto): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md). The kernel is
+//! compiled for a fixed padded shape (`PAD_NODES` × `PAD_JOBS`); inputs are
+//! zero-padded, outputs sliced back. Problems larger than the padded shape
+//! fall back to the pure-Rust solver (identical semantics, cross-checked in
+//! tests).
+
+use crate::alloc::{maxmin_waterfill, NeedMatrix, YieldSolver};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Padded shape the artifact is compiled for. Must match
+/// `python/compile/model.py` (NODES, JOBS).
+pub const PAD_NODES: usize = 128;
+pub const PAD_JOBS: usize = 256;
+
+/// Yield solver backed by the AOT-compiled XLA executable.
+pub struct XlaSolver {
+    exe: xla::PjRtLoadedExecutable,
+    /// Calls served by the artifact vs. the Rust fallback (telemetry).
+    pub xla_calls: u64,
+    pub fallback_calls: u64,
+}
+
+impl XlaSolver {
+    /// Load and compile the HLO artifact on the CPU PJRT client.
+    pub fn load(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO on PJRT")?;
+        Ok(XlaSolver { exe, xla_calls: 0, fallback_calls: 0 })
+    }
+
+    /// Default artifact location relative to the repo root (override with
+    /// `DFRS_ARTIFACTS`).
+    pub fn default_path() -> std::path::PathBuf {
+        std::path::PathBuf::from(
+            std::env::var("DFRS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )
+        .join("maxmin.hlo.txt")
+    }
+
+    /// Try to load the default artifact; None if absent or unloadable.
+    pub fn try_default() -> Option<Self> {
+        let p = Self::default_path();
+        if p.exists() {
+            match Self::load(&p) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    eprintln!("warning: failed to load XLA artifact: {e:#}");
+                    None
+                }
+            }
+        } else {
+            None
+        }
+    }
+
+    fn run_padded(&mut self, e: &NeedMatrix) -> Result<Vec<f64>> {
+        let mut buf = vec![0f32; PAD_NODES * PAD_JOBS];
+        for i in 0..e.rows {
+            for j in 0..e.cols {
+                buf[i * PAD_JOBS + j] = e.get(i, j) as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&buf).reshape(&[PAD_NODES as i64, PAD_JOBS as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let ys: Vec<f32> = out.to_vec()?;
+        anyhow::ensure!(ys.len() == PAD_JOBS, "artifact returned {} values", ys.len());
+        Ok(ys[..e.cols].iter().map(|&y| y as f64).collect())
+    }
+}
+
+impl YieldSolver for XlaSolver {
+    fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64> {
+        if e.rows > PAD_NODES || e.cols > PAD_JOBS {
+            self.fallback_calls += 1;
+            return maxmin_waterfill(e);
+        }
+        match self.run_padded(e) {
+            Ok(y) => {
+                self.xla_calls += 1;
+                y
+            }
+            Err(err) => {
+                // Execution failures degrade to the reference solver rather
+                // than aborting a long simulation.
+                eprintln!("warning: XLA solver failed ({err:#}); using Rust fallback");
+                self.fallback_calls += 1;
+                maxmin_waterfill(e)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Pick the best available solver: the XLA artifact when present, otherwise
+/// the pure-Rust reference.
+pub fn best_solver() -> Box<dyn YieldSolver> {
+    match XlaSolver::try_default() {
+        Some(s) => Box::new(s),
+        None => Box::new(crate::alloc::RustSolver),
+    }
+}
+
+/// Solver choice by name: "rust", "xla", or "auto".
+pub fn solver_by_name(name: &str) -> anyhow::Result<Box<dyn YieldSolver>> {
+    match name {
+        "rust" => Ok(Box::new(crate::alloc::RustSolver)),
+        "xla" => {
+            let s = XlaSolver::load(&XlaSolver::default_path())?;
+            Ok(Box::new(s))
+        }
+        "auto" => Ok(best_solver()),
+        other => anyhow::bail!("unknown solver {other:?} (rust|xla|auto)"),
+    }
+}

@@ -1,0 +1,224 @@
+//! Batch-scheduling baselines (§5.2): FCFS and EASY backfilling.
+//!
+//! Both allocate *whole nodes* exclusively (one task per node, the job runs
+//! at full speed, yield 1) — the integral, no-time-sharing allocation model
+//! the paper contrasts DFRS against. EASY is given perfect processing-time
+//! estimates (the paper's conservative choice: inaccurate estimates change
+//! batch results only marginally, §5.2).
+
+use super::Policy;
+use crate::sim::{JobId, NodeId, Sim};
+use std::collections::BTreeSet;
+
+/// FCFS with an optional EASY backfilling stage.
+pub struct BatchPolicy {
+    backfill: bool,
+    free: BTreeSet<NodeId>,
+    queue: Vec<JobId>,
+    /// (end_time, node_count) of running jobs, for the shadow computation.
+    running: Vec<(f64, usize, JobId)>,
+    initialized: bool,
+}
+
+impl BatchPolicy {
+    pub fn fcfs() -> Self {
+        BatchPolicy { backfill: false, free: BTreeSet::new(), queue: Vec::new(), running: Vec::new(), initialized: false }
+    }
+
+    pub fn easy() -> Self {
+        BatchPolicy { backfill: true, free: BTreeSet::new(), queue: Vec::new(), running: Vec::new(), initialized: false }
+    }
+
+    fn ensure_init(&mut self, sim: &Sim) {
+        if !self.initialized {
+            self.free = (0..sim.cluster.nodes).collect();
+            self.initialized = true;
+        }
+    }
+
+    fn start(&mut self, sim: &mut Sim, j: JobId) {
+        let tasks = sim.jobs[j].spec.tasks as usize;
+        let placement: Vec<NodeId> = self.free.iter().take(tasks).copied().collect();
+        assert_eq!(placement.len(), tasks);
+        for n in &placement {
+            self.free.remove(n);
+        }
+        self.running.push((sim.now + sim.jobs[j].spec.proc_time, tasks, j));
+        sim.start_job(j, placement);
+        sim.set_yield(j, 1.0);
+    }
+
+    /// Start queued jobs: FCFS head-of-line, then (EASY) backfill behind a
+    /// reservation for the head.
+    fn try_schedule(&mut self, sim: &mut Sim) {
+        // FCFS stage: start from the head while it fits.
+        while let Some(&head) = self.queue.first() {
+            let need = sim.jobs[head].spec.tasks as usize;
+            if need <= self.free.len() {
+                self.queue.remove(0);
+                self.start(sim, head);
+            } else {
+                break;
+            }
+        }
+        if !self.backfill || self.queue.is_empty() {
+            return;
+        }
+        // Reservation for the head: earliest time enough nodes are free,
+        // assuming running jobs end at their (perfectly known) end times.
+        let head = self.queue[0];
+        let head_need = sim.jobs[head].spec.tasks as usize;
+        let mut ends: Vec<(f64, usize)> =
+            self.running.iter().map(|&(e, n, _)| (e, n)).collect();
+        ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut avail = self.free.len();
+        let mut shadow_time = sim.now;
+        for (e, n) in ends {
+            if avail >= head_need {
+                break;
+            }
+            avail += n;
+            shadow_time = e;
+        }
+        // Nodes beyond the head's need at the shadow time may be used by
+        // backfilled jobs that outlive the shadow.
+        let mut extra = avail.saturating_sub(head_need);
+        // Backfill pass over the rest of the queue in order.
+        let mut i = 1;
+        while i < self.queue.len() {
+            let j = self.queue[i];
+            let need = sim.jobs[j].spec.tasks as usize;
+            let p = sim.jobs[j].spec.proc_time;
+            if need <= self.free.len() {
+                let fits_before_shadow = sim.now + p <= shadow_time + 1e-9;
+                let fits_in_extra = need <= extra;
+                if fits_before_shadow || fits_in_extra {
+                    if !fits_before_shadow {
+                        extra -= need;
+                    }
+                    self.queue.remove(i);
+                    self.start(sim, j);
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+impl Policy for BatchPolicy {
+    fn name(&self) -> String {
+        if self.backfill { "EASY".into() } else { "FCFS".into() }
+    }
+
+    fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+        self.ensure_init(sim);
+        self.queue.push(j);
+        self.try_schedule(sim);
+    }
+
+    fn on_complete(&mut self, sim: &mut Sim, j: JobId) {
+        self.ensure_init(sim);
+        if let Some(pos) = self.running.iter().position(|&(_, _, id)| id == j) {
+            let (_, _, _) = self.running.swap_remove(pos);
+        }
+        // Return the job's nodes (engine already freed memory; we track the
+        // exclusive node set ourselves from the job record).
+        for n in 0..sim.cluster.nodes {
+            if sim.cluster.tasks_on[n].is_empty() {
+                self.free.insert(n);
+            }
+        }
+        self.try_schedule(sim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::RustSolver;
+    use crate::sim::{run, SimConfig};
+    use crate::workload::{Job, Trace};
+
+    fn job(id: u32, submit: f64, tasks: u32, p: f64) -> Job {
+        Job { id, submit, tasks, cpu_need: 1.0, mem: 0.5, proc_time: p }
+    }
+
+    fn trace(jobs: Vec<Job>, nodes: usize) -> Trace {
+        Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 }
+    }
+
+    #[test]
+    fn fcfs_runs_in_order() {
+        // 2 nodes; jobs need 2 nodes each: strictly sequential.
+        let t = trace(vec![job(0, 0.0, 2, 100.0), job(1, 0.0, 2, 100.0)], 2);
+        let r = run(&t, &mut BatchPolicy::fcfs(), SimConfig::default(), Box::new(RustSolver));
+        assert!((r.jobs[0].completion.unwrap() - 100.0).abs() < 1e-6);
+        assert!((r.jobs[1].completion.unwrap() - 200.0).abs() < 1e-6);
+        assert!((r.max_stretch - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fcfs_blocks_small_job_behind_big_one() {
+        // Node-hungry head blocks a 1-node job even though a node is free.
+        let t = trace(
+            vec![job(0, 0.0, 2, 1000.0), job(1, 1.0, 2, 1000.0), job(2, 2.0, 1, 100.0)],
+            3,
+        );
+        let r = run(&t, &mut BatchPolicy::fcfs(), SimConfig::default(), Box::new(RustSolver));
+        // FCFS: job1 needs 2 nodes, only 1 free -> waits until 1000. Job2
+        // waits behind job1 even though node 2 is idle.
+        let c2 = r.jobs[2].completion.unwrap();
+        assert!(c2 > 1000.0, "FCFS must not leapfrog: c2={c2}");
+    }
+
+    #[test]
+    fn easy_backfills_small_job() {
+        let t = trace(
+            vec![job(0, 0.0, 2, 1000.0), job(1, 1.0, 2, 1000.0), job(2, 2.0, 1, 100.0)],
+            3,
+        );
+        let r = run(&t, &mut BatchPolicy::easy(), SimConfig::default(), Box::new(RustSolver));
+        // EASY: job2 (1 node, 100 s) finishes by 102 < shadow(1000) -> backfills.
+        let c2 = r.jobs[2].completion.unwrap();
+        assert!((c2 - 102.0).abs() < 1e-6, "EASY should backfill: c2={c2}");
+    }
+
+    #[test]
+    fn easy_backfill_does_not_delay_reservation() {
+        // Head (job1) reserved at t=1000 on 2 nodes. A long 1-node job may
+        // only backfill into the extra node (3-2=1 extra at shadow).
+        let t = trace(
+            vec![
+                job(0, 0.0, 2, 1000.0),
+                job(1, 1.0, 2, 1000.0),
+                job(2, 2.0, 1, 5000.0),
+                job(3, 3.0, 1, 5000.0),
+            ],
+            3,
+        );
+        let r = run(&t, &mut BatchPolicy::easy(), SimConfig::default(), Box::new(RustSolver));
+        // job2 uses the single extra node; job3 would delay the reservation
+        // (needs the 2nd free node that job1's reservation holds) -> waits.
+        let c1 = r.jobs[1].completion.unwrap();
+        assert!((c1 - 2000.0).abs() < 1e-6, "reservation violated: c1={c1}");
+        let c2 = r.jobs[2].completion.unwrap();
+        assert!((c2 - 5002.0).abs() < 1e-6, "extra-node backfill: c2={c2}");
+        let c3 = r.jobs[3].completion.unwrap();
+        assert!(c3 > 5002.0, "job3 must not delay the reservation: c3={c3}");
+    }
+
+    #[test]
+    fn batch_never_preempts() {
+        let t = trace(
+            vec![job(0, 0.0, 2, 300.0), job(1, 5.0, 1, 50.0), job(2, 10.0, 3, 100.0)],
+            3,
+        );
+        for mut p in [BatchPolicy::fcfs(), BatchPolicy::easy()] {
+            let r = run(&t, &mut p, SimConfig::default(), Box::new(RustSolver));
+            assert_eq!(r.preemptions, 0);
+            assert_eq!(r.migrations, 0);
+            assert_eq!(r.gb_moved, 0.0);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! EQUIPARTITION (§3.2, Theorem 4): every live job gets an equal share of
+//! the platform. Included as the theoretical reference point — the proofs
+//! in §3.2 bound its competitive ratio at exactly |J| (and Θ(Δ/ln Δ)); the
+//! tests below exercise the Theorem 4 construction numerically.
+//!
+//! The theory setting is one node and infinite memory; this policy is meant
+//! for single-node, small-memory workloads (tests and demos), not the main
+//! experiments.
+
+use super::Policy;
+use crate::sim::{JobId, Sim};
+
+pub struct Equipartition;
+
+impl Equipartition {
+    fn rebalance(&self, sim: &mut Sim) {
+        let running = sim.running();
+        let m = running.len();
+        if m == 0 {
+            return;
+        }
+        for j in running {
+            let need = sim.jobs[j].spec.cpu_need;
+            // Equal share 1/m of the node, expressed as a yield.
+            let y = (1.0 / (m as f64 * need)).min(1.0);
+            sim.set_yield(j, y);
+        }
+    }
+}
+
+impl Policy for Equipartition {
+    fn name(&self) -> String {
+        "EQUIPARTITION".into()
+    }
+
+    fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+        let tasks = sim.jobs[j].spec.tasks as usize;
+        sim.start_job(j, vec![0; tasks]);
+        self.rebalance(sim);
+    }
+
+    fn on_complete(&mut self, sim: &mut Sim, _j: JobId) {
+        self.rebalance(sim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::RustSolver;
+    use crate::sim::{run, SimConfig};
+    use crate::workload::{Job, Trace};
+
+    fn job(id: u32, submit: f64, p: f64) -> Job {
+        // Tiny memory: the theory assumes memory is not a constraint.
+        Job { id, submit, tasks: 1, cpu_need: 1.0, mem: 0.001, proc_time: p }
+    }
+
+    fn cfg() -> SimConfig {
+        // Theory setting: no penalty, no stretch bound distortion for these
+        // job sizes (all >> 10s anyway).
+        SimConfig { reschedule_penalty: 0.0, stretch_threshold: 1e-9 }
+    }
+
+    #[test]
+    fn equal_shares_two_jobs() {
+        let t = Trace {
+            jobs: vec![job(0, 0.0, 100.0), job(1, 0.0, 100.0)],
+            nodes: 1,
+            cores_per_node: 1,
+            node_mem_gb: 1.0,
+        };
+        let r = run(&t, &mut Equipartition, cfg(), Box::new(RustSolver));
+        // Both progress at 1/2: both complete at t=200 -> stretch 2.
+        for j in &r.jobs {
+            assert!((j.completion.unwrap() - 200.0).abs() < 1e-6);
+        }
+        assert!((r.max_stretch - 2.0).abs() < 1e-9);
+    }
+
+    /// Theorem 4 construction: jobs sized so all complete simultaneously
+    /// under EQUIPARTITION; the n-th job (p=1 unit) sees stretch n while an
+    /// ideal schedule keeps the max stretch near 2 + ln(Δ).
+    #[test]
+    fn theorem4_construction_shows_linear_stretch() {
+        let n = 8usize;
+        let unit = 1000.0; // scale up so the 10s bound stays irrelevant
+        // p_i = (n-1)/(i-1) for i in 3..=n; p_1 = p_2 = n-1 (in `unit`s).
+        let mut p = vec![0.0; n + 1];
+        p[1] = (n - 1) as f64;
+        p[2] = (n - 1) as f64;
+        for i in 3..=n {
+            p[i] = (n - 1) as f64 / (i - 1) as f64;
+        }
+        // r_1 = r_2 = 0; r_i = r_{i-1} + p_{i-1}.
+        let mut r = vec![0.0; n + 1];
+        for i in 3..=n {
+            r[i] = r[i - 1] + p[i - 1];
+        }
+        let jobs: Vec<Job> =
+            (1..=n).map(|i| job(i as u32 - 1, r[i] * unit, p[i] * unit)).collect();
+        let t = Trace { jobs, nodes: 1, cores_per_node: 1, node_mem_gb: 1.0 };
+        let res = run(&t, &mut Equipartition, cfg(), Box::new(RustSolver));
+        // Theorem 4: under EQUIPARTITION all jobs finish together at
+        // r_n + n (in units), so the last job's stretch is ~n.
+        let last = &res.jobs[n - 1];
+        let stretch_last =
+            (last.completion.unwrap() - last.spec.submit) / last.spec.proc_time;
+        assert!(
+            (stretch_last - n as f64).abs() < 0.35 * n as f64,
+            "last job stretch {stretch_last}, expected ~{n}"
+        );
+        // And the max stretch is >= the last job's stretch.
+        assert!(res.max_stretch >= stretch_last - 1e-9);
+    }
+
+    #[test]
+    fn single_job_is_unit_stretch() {
+        let t = Trace {
+            jobs: vec![job(0, 0.0, 500.0)],
+            nodes: 1,
+            cores_per_node: 1,
+            node_mem_gb: 1.0,
+        };
+        let r = run(&t, &mut Equipartition, cfg(), Box::new(RustSolver));
+        assert!((r.max_stretch - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,33 @@
+//! Scheduling policies: the DFRS algorithm family (Table 1 of the paper)
+//! and the batch-scheduling baselines (FCFS, EASY).
+//!
+//! A policy drives the simulation engine through three hooks: job
+//! submission, job completion, and an optional periodic tick (§4.4). The
+//! DFRS combinator (`policy::DfrsPolicy`) composes the per-event actions;
+//! `registry` maps the paper's algorithm names ("GreedyPM */per/OPT=MIN/
+//! MINVT=600") to configured policies.
+
+pub mod batch;
+pub mod equi;
+pub mod greedy;
+pub mod policy;
+pub mod priority;
+pub mod registry;
+pub mod stretch;
+
+use crate::sim::{JobId, Sim};
+
+/// A scheduling policy. Hooks are invoked by `crate::sim::run`.
+pub trait Policy {
+    /// Paper-style algorithm name.
+    fn name(&self) -> String;
+    /// A job has just been submitted (it is in `Pending` state).
+    fn on_submit(&mut self, sim: &mut Sim, j: JobId);
+    /// A job has just completed (resources already freed).
+    fn on_complete(&mut self, sim: &mut Sim, j: JobId);
+    /// Periodic tick, fired every `period()` seconds if set.
+    fn on_tick(&mut self, _sim: &mut Sim) {}
+    fn period(&self) -> Option<f64> {
+        None
+    }
+}

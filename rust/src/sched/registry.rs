@@ -1,0 +1,202 @@
+//! Algorithm registry: map the paper's algorithm names (§4.5 naming scheme)
+//! to configured policies, and enumerate the algorithm sets used by each
+//! experiment (Table 1, Table 2, Figure 1).
+
+use super::batch::BatchPolicy;
+use super::policy::{CompleteAction, DfrsPolicy, PeriodicAction, SubmitAction};
+use super::Policy;
+use crate::alloc::OptMode;
+use crate::packing::search::PinRule;
+
+/// Build a policy from its paper-style name, e.g.
+/// `"GreedyPM */per/OPT=MIN/MINVT=600"`, `"EASY"`, `"/stretch-per/OPT=MAX"`.
+/// `period` is the periodic-application interval in seconds.
+pub fn make_policy(name: &str, period: f64) -> anyhow::Result<Box<dyn Policy>> {
+    match name {
+        "FCFS" => return Ok(Box::new(BatchPolicy::fcfs())),
+        "EASY" => return Ok(Box::new(BatchPolicy::easy())),
+        _ => {}
+    }
+    let mut parts = name.split('/');
+    let head = parts.next().unwrap_or("");
+    let (submit_name, star) = match head.strip_suffix(" *") {
+        Some(s) => (s, true),
+        None => (head, false),
+    };
+    let submit = match submit_name {
+        "" => SubmitAction::Nothing,
+        "Greedy" => SubmitAction::Greedy,
+        "GreedyP" => SubmitAction::GreedyP,
+        "GreedyPM" => SubmitAction::GreedyPM,
+        "MCB8" => SubmitAction::Mcb8,
+        other => anyhow::bail!("unknown submit policy {other:?} in {name:?}"),
+    };
+    let complete = if star {
+        // §4.5: on completion use MCB8 if MCB8 was used on submission,
+        // Greedy otherwise.
+        if submit == SubmitAction::Mcb8 {
+            CompleteAction::Mcb8
+        } else {
+            CompleteAction::Greedy
+        }
+    } else {
+        CompleteAction::Nothing
+    };
+    let mut periodic = PeriodicAction::Nothing;
+    let mut opt = OptMode::MaxMin;
+    let mut pin = None;
+    let mut decay = None;
+    for p in parts {
+        match p {
+            "per" => periodic = PeriodicAction::Mcb8,
+            "stretch-per" => periodic = PeriodicAction::Mcb8Stretch,
+            "OPT=MIN" | "OPT=MAX" => opt = OptMode::MaxMin,
+            "OPT=AVG" => opt = OptMode::Avg,
+            _ => {
+                if let Some(v) = p.strip_prefix("MINVT=") {
+                    pin = Some(PinRule::MinVt(v.parse()?));
+                } else if let Some(v) = p.strip_prefix("MINFT=") {
+                    pin = Some(PinRule::MinFt(v.parse()?));
+                } else if let Some(v) = p.strip_prefix("DECAY=") {
+                    decay = Some(v.parse()?);
+                } else if !p.is_empty() {
+                    anyhow::bail!("unknown name part {p:?} in {name:?}");
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        submit != SubmitAction::Nothing
+            || complete != CompleteAction::Nothing
+            || periodic != PeriodicAction::Nothing,
+        "policy {name:?} does nothing"
+    );
+    Ok(Box::new(DfrsPolicy { submit, complete, periodic, opt, pin, period, decay }))
+}
+
+/// The 18 DFRS rows of Table 2 plus FCFS and EASY, in table order.
+pub fn table2_algorithms() -> Vec<&'static str> {
+    vec![
+        "FCFS",
+        "EASY",
+        "Greedy */OPT=MIN",
+        "GreedyP */OPT=MIN",
+        "GreedyPM */OPT=MIN",
+        "Greedy/per/OPT=MIN",
+        "GreedyP/per/OPT=MIN",
+        "GreedyPM/per/OPT=MIN",
+        "Greedy */per/OPT=MIN",
+        "GreedyP */per/OPT=MIN",
+        "GreedyPM */per/OPT=MIN",
+        "GreedyP/per/OPT=MIN/MINVT=600",
+        "GreedyPM/per/OPT=MIN/MINVT=600",
+        "GreedyP */per/OPT=MIN/MINVT=600",
+        "GreedyPM */per/OPT=MIN/MINVT=600",
+        "MCB8 */OPT=MIN/MINVT=600",
+        "MCB8/per/OPT=MIN/MINVT=600",
+        "MCB8 */per/OPT=MIN/MINVT=600",
+        "/per/OPT=MIN/MINVT=600",
+        "/stretch-per/OPT=MAX/MINVT=600",
+    ]
+}
+
+/// Table 3's algorithm set (§6.3, preemption/migration costs).
+pub fn table3_algorithms() -> Vec<&'static str> {
+    vec![
+        "EASY",
+        "FCFS",
+        "Greedy */OPT=MIN",
+        "GreedyP */OPT=MIN",
+        "GreedyPM */OPT=MIN",
+        "Greedy/per/OPT=MIN",
+        "GreedyP/per/OPT=MIN",
+        "GreedyPM/per/OPT=MIN",
+        "Greedy */per/OPT=MIN",
+        "GreedyP */per/OPT=MIN",
+        "GreedyPM */per/OPT=MIN",
+        "Greedy */per/OPT=MIN/MINVT=600",
+        "GreedyP */per/OPT=MIN/MINVT=600",
+        "GreedyPM */per/OPT=MIN/MINVT=600",
+        "MCB8 */OPT=MIN",
+        "MCB8 */per/OPT=MIN",
+        "MCB8 */per/OPT=MIN/MINVT=600",
+        "/per/OPT=MIN",
+        "/stretch-per/OPT=MAX",
+    ]
+}
+
+/// Figure 1's selected algorithms (degradation vs load).
+pub fn fig1_algorithms() -> Vec<&'static str> {
+    vec![
+        "FCFS",
+        "EASY",
+        "Greedy */OPT=MIN",
+        "GreedyPM */OPT=MIN",
+        "GreedyPM/per/OPT=MIN/MINVT=600",
+        "GreedyPM */per/OPT=MIN/MINVT=600",
+        "/per/OPT=MIN/MINVT=600",
+        "/stretch-per/OPT=MAX/MINVT=600",
+    ]
+}
+
+/// The two best algorithms (§6.4) used in Table 4 / Figures 3-4.
+pub fn best_algorithms() -> Vec<&'static str> {
+    vec![
+        "GreedyP */per/OPT=MIN/MINVT=600",
+        "GreedyPM */per/OPT=MIN/MINVT=600",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_table2_name() {
+        for name in table2_algorithms() {
+            let p = make_policy(name, 600.0).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(p.name(), name, "name round-trip");
+        }
+    }
+
+    #[test]
+    fn round_trips_table3_and_fig1_names() {
+        for name in table3_algorithms().into_iter().chain(fig1_algorithms()) {
+            let p = make_policy(name, 600.0).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(p.name(), name);
+        }
+    }
+
+    #[test]
+    fn batch_policies_resolve() {
+        assert_eq!(make_policy("FCFS", 600.0).unwrap().name(), "FCFS");
+        assert_eq!(make_policy("EASY", 600.0).unwrap().name(), "EASY");
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(make_policy("Greedy/bogus", 600.0).is_err());
+        assert!(make_policy("NotAPolicy/per", 600.0).is_err());
+    }
+
+    #[test]
+    fn mcb8_star_uses_mcb8_on_completion() {
+        // §4.5: the '*' re-uses MCB8 when MCB8 is the submit policy.
+        let p = make_policy("MCB8 */OPT=MIN", 600.0).unwrap();
+        assert_eq!(p.name(), "MCB8 */OPT=MIN");
+    }
+
+    #[test]
+    fn decay_extension_round_trips() {
+        let p = make_policy("GreedyPM */per/OPT=MIN/MINVT=600/DECAY=7200", 600.0).unwrap();
+        assert_eq!(p.name(), "GreedyPM */per/OPT=MIN/MINVT=600/DECAY=7200");
+    }
+
+    #[test]
+    fn period_is_wired() {
+        let p = make_policy("/per/OPT=MIN", 1234.0).unwrap();
+        assert_eq!(p.period(), Some(1234.0));
+        let q = make_policy("Greedy */OPT=MIN", 1234.0).unwrap();
+        assert_eq!(q.period(), None);
+    }
+}

@@ -1,0 +1,691 @@
+//! Discrete-event cluster simulator (§5.1 of the paper).
+//!
+//! The engine owns time, job/cluster state, virtual-time accounting, the
+//! rescheduling penalty, and the metric integrals; scheduling *policies*
+//! (crate::sched) drive it through a small mutation API: place, pause,
+//! migrate, set yields. The engine advances from event to event (submission,
+//! completion, penalty expiry, periodic tick), accruing each running job's
+//! virtual time at its current yield.
+//!
+//! Modelling decisions (documented in DESIGN.md):
+//! - A job's task set is identical; placement is a multiset of nodes (tasks
+//!   may co-locate if memory allows — the paper does not forbid it).
+//! - Preempting a job writes `tasks × mem × node_mem` GB to network storage;
+//!   resuming reads it back; a migration is a save+restore of the moved
+//!   tasks (§5.1 assumes pause/resume migration).
+//! - After a resume or migration the job occupies its allocation but accrues
+//!   no virtual time for `reschedule_penalty` seconds; schedulers are
+//!   unaware of the penalty (§5.1).
+
+pub mod state;
+
+pub use state::{Cluster, JobId, JobSim, JobState, NodeId};
+
+use crate::alloc::YieldSolver;
+use crate::workload::Trace;
+
+/// Engine configuration. Defaults are the paper's (§5.1).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Wall-clock seconds a job makes no progress after a resume/migration.
+    pub reschedule_penalty: f64,
+    /// Bounded-stretch threshold τ (§2.2), seconds.
+    pub stretch_threshold: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { reschedule_penalty: 300.0, stretch_threshold: 10.0 }
+    }
+}
+
+/// Aggregated per-run results.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub jobs: Vec<JobSim>,
+    /// Max bounded stretch over all jobs.
+    pub max_stretch: f64,
+    /// Mean bounded stretch.
+    pub avg_stretch: f64,
+    /// ∫ min(|P|, D(t)) − u(t) dt, node-seconds.
+    pub underutil_area: f64,
+    /// Underutilization / total workload work (normalized, §6.4.1).
+    pub norm_underutil: f64,
+    /// Total data moved by preemptions+migrations, GB.
+    pub gb_moved: f64,
+    /// GB moved / makespan — the paper's "bandwidth consumption" (§6.3).
+    pub gb_per_sec: f64,
+    /// Job-level occurrence counts (§6.3).
+    pub preemptions: u64,
+    pub migrations: u64,
+    /// Occurrences per hour of makespan.
+    pub preempt_per_hour: f64,
+    pub migrate_per_hour: f64,
+    /// Mean occurrences per job.
+    pub preempt_per_job: f64,
+    pub migrate_per_job: f64,
+    /// First submission → last completion, seconds.
+    pub makespan: f64,
+}
+
+/// The simulation engine. Policies receive `&mut Sim` in their hooks.
+pub struct Sim {
+    pub cfg: SimConfig,
+    pub cluster: Cluster,
+    pub jobs: Vec<JobSim>,
+    pub now: f64,
+    pub solver: Box<dyn YieldSolver>,
+    // Metric accumulators.
+    underutil_area: f64,
+    total_work: f64,
+    gb_moved: f64,
+    preemptions: u64,
+    migrations: u64,
+    node_mem_gb: f64,
+}
+
+impl Sim {
+    pub fn new(trace: &Trace, cfg: SimConfig, solver: Box<dyn YieldSolver>) -> Self {
+        let jobs: Vec<JobSim> = trace.jobs.iter().map(|j| JobSim::new(j.clone())).collect();
+        let total_work = trace.jobs.iter().map(|j| j.work()).sum();
+        Sim {
+            cfg,
+            cluster: Cluster::new(trace.nodes),
+            jobs,
+            now: 0.0,
+            solver,
+            underutil_area: 0.0,
+            total_work,
+            gb_moved: 0.0,
+            preemptions: 0,
+            migrations: 0,
+            node_mem_gb: trace.node_mem_gb,
+        }
+    }
+
+    // ----- Mutation API used by policies -------------------------------
+
+    /// Start a pending job or resume a paused one on `placement` (one node
+    /// per task). Resumes incur the rescheduling penalty and a storage read.
+    pub fn start_job(&mut self, j: JobId, placement: Vec<NodeId>) {
+        let job = &self.jobs[j];
+        assert_eq!(placement.len(), job.spec.tasks as usize, "placement arity");
+        assert!(
+            matches!(job.state, JobState::Pending | JobState::Paused),
+            "start_job on job {j} in state {:?}",
+            job.state
+        );
+        let was_paused = matches!(job.state, JobState::Paused);
+        let mem = job.spec.mem;
+        for &n in &placement {
+            self.cluster.add_task(n, j, self.jobs[j].spec.cpu_need, mem);
+        }
+        let job = &mut self.jobs[j];
+        job.placement = placement;
+        job.state = JobState::Running;
+        if was_paused {
+            // Read the saved image back from storage; penalty applies.
+            self.gb_moved += job.spec.tasks as f64 * mem * self.node_mem_gb;
+            job.penalty_until = self.now + self.cfg.reschedule_penalty;
+        }
+        if job.first_start.is_none() {
+            job.first_start = Some(self.now);
+        }
+    }
+
+    /// Preempt a running job: free its resources, save its image.
+    pub fn pause_job(&mut self, j: JobId) {
+        let job = &self.jobs[j];
+        assert!(matches!(job.state, JobState::Running), "pause_job on {:?}", job.state);
+        let mem = job.spec.mem;
+        let need = job.spec.cpu_need;
+        let placement = job.placement.clone();
+        for &n in &placement {
+            self.cluster.remove_task(n, j, need, mem);
+        }
+        let job = &mut self.jobs[j];
+        job.state = JobState::Paused;
+        job.placement.clear();
+        job.yield_now = 0.0;
+        job.preemptions += 1;
+        self.preemptions += 1;
+        self.gb_moved += job.spec.tasks as f64 * mem * self.node_mem_gb;
+    }
+
+    /// Move a running job to a new placement. Tasks whose node changes are
+    /// saved+restored; the job pays the rescheduling penalty if any moved.
+    pub fn migrate_job(&mut self, j: JobId, new_placement: Vec<NodeId>) {
+        let job = &self.jobs[j];
+        assert!(matches!(job.state, JobState::Running));
+        assert_eq!(new_placement.len(), job.spec.tasks as usize);
+        let moved = multiset_diff(&job.placement, &new_placement);
+        if moved == 0 {
+            return;
+        }
+        let mem = job.spec.mem;
+        let need = job.spec.cpu_need;
+        let old = job.placement.clone();
+        for &n in &old {
+            self.cluster.remove_task(n, j, need, mem);
+        }
+        for &n in &new_placement {
+            self.cluster.add_task(n, j, need, mem);
+        }
+        let job = &mut self.jobs[j];
+        job.placement = new_placement;
+        job.migrations += 1;
+        job.penalty_until = self.now + self.cfg.reschedule_penalty;
+        self.migrations += 1;
+        // Save + restore of the moved tasks.
+        self.gb_moved += 2.0 * moved as f64 * mem * self.node_mem_gb;
+    }
+
+    /// Atomically re-map the cluster to a desired global mapping
+    /// (job → placement). Accounting per job:
+    /// - running, absent from mapping → preempted (pause, storage write);
+    /// - running, same placement multiset → untouched;
+    /// - running, different multiset → migrated (save+restore of moved
+    ///   tasks, rescheduling penalty);
+    /// - paused, present → resumed (storage read, penalty);
+    /// - pending, present → fresh start (no cost).
+    ///
+    /// This is how MCB8 outcomes and GreedyPM moves are applied: the diff
+    /// is computed against the *whole* previous mapping so transient
+    /// memory-overflow during the swap is impossible.
+    pub fn apply_mapping(&mut self, mapping: &[(JobId, Vec<NodeId>)]) {
+        use std::collections::HashMap;
+        let new_map: HashMap<JobId, &Vec<NodeId>> =
+            mapping.iter().map(|(j, p)| (*j, p)).collect();
+        // Phase 1: detach every running job from the cluster.
+        let running = self.running();
+        for &j in &running {
+            let need = self.jobs[j].spec.cpu_need;
+            let mem = self.jobs[j].spec.mem;
+            let placement = self.jobs[j].placement.clone();
+            for &n in &placement {
+                self.cluster.remove_task(n, j, need, mem);
+            }
+        }
+        // Phase 2: settle every job named in the mapping.
+        for (j, new_pl) in mapping {
+            let j = *j;
+            let job = &self.jobs[j];
+            assert_eq!(new_pl.len(), job.spec.tasks as usize, "placement arity for job {j}");
+            let need = job.spec.cpu_need;
+            let mem = job.spec.mem;
+            let prev_state = job.state;
+            let old_pl = job.placement.clone();
+            for &n in new_pl {
+                self.cluster.add_task(n, j, need, mem);
+            }
+            let penalty = self.cfg.reschedule_penalty;
+            let now = self.now;
+            match prev_state {
+                JobState::Running => {
+                    let moved = multiset_diff(&old_pl, new_pl);
+                    if moved > 0 {
+                        let job = &mut self.jobs[j];
+                        job.migrations += 1;
+                        job.penalty_until = now + penalty;
+                        self.migrations += 1;
+                        self.gb_moved += 2.0 * moved as f64 * mem * self.node_mem_gb;
+                    }
+                    self.jobs[j].placement = new_pl.clone();
+                }
+                JobState::Paused => {
+                    let job = &mut self.jobs[j];
+                    job.state = JobState::Running;
+                    job.placement = new_pl.clone();
+                    job.penalty_until = now + penalty;
+                    self.gb_moved += job.spec.tasks as f64 * mem * self.node_mem_gb;
+                }
+                JobState::Pending => {
+                    let job = &mut self.jobs[j];
+                    job.state = JobState::Running;
+                    job.placement = new_pl.clone();
+                    if job.first_start.is_none() {
+                        job.first_start = Some(now);
+                    }
+                }
+                JobState::Done => panic!("mapping names completed job {j}"),
+            }
+        }
+        // Phase 3: running jobs not in the mapping are preempted.
+        for &j in &running {
+            if !new_map.contains_key(&j) {
+                let job = &mut self.jobs[j];
+                job.state = JobState::Paused;
+                job.placement.clear();
+                job.yield_now = 0.0;
+                job.preemptions += 1;
+                self.preemptions += 1;
+                self.gb_moved += job.spec.tasks as f64 * job.spec.mem * self.node_mem_gb;
+            }
+        }
+    }
+
+    /// Set the yield of a running job (allocation layer calls this).
+    pub fn set_yield(&mut self, j: JobId, y: f64) {
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&y), "yield {y} out of range");
+        let job = &mut self.jobs[j];
+        debug_assert!(matches!(job.state, JobState::Running));
+        job.yield_now = y.min(1.0);
+    }
+
+    /// Ids of running jobs.
+    pub fn running(&self) -> Vec<JobId> {
+        (0..self.jobs.len())
+            .filter(|&j| matches!(self.jobs[j].state, JobState::Running))
+            .collect()
+    }
+
+    /// Ids of paused jobs.
+    pub fn paused(&self) -> Vec<JobId> {
+        (0..self.jobs.len())
+            .filter(|&j| matches!(self.jobs[j].state, JobState::Paused))
+            .collect()
+    }
+
+    /// Ids of pending (never started, not yet placed) jobs submitted so far.
+    pub fn pending(&self) -> Vec<JobId> {
+        (0..self.jobs.len())
+            .filter(|&j| {
+                matches!(self.jobs[j].state, JobState::Pending)
+                    && self.jobs[j].spec.submit <= self.now + 1e-9
+            })
+            .collect()
+    }
+
+    // ----- Time advancement --------------------------------------------
+
+    /// Accrue virtual time and metric integrals from `self.now` to `t`.
+    fn advance(&mut self, t: f64) {
+        debug_assert!(t >= self.now - 1e-9);
+        let dt = (t - self.now).max(0.0);
+        if dt > 0.0 {
+            // Demand: submitted, not done. Utilization: running, past penalty.
+            let mut demand = 0.0;
+            let mut util = 0.0;
+            for job in &mut self.jobs {
+                match job.state {
+                    JobState::Done => {}
+                    JobState::Pending | JobState::Paused => {
+                        if job.spec.submit <= self.now + 1e-9 {
+                            demand += job.spec.tasks as f64 * job.spec.cpu_need;
+                        }
+                    }
+                    JobState::Running => {
+                        demand += job.spec.tasks as f64 * job.spec.cpu_need;
+                        // Effective progress window beyond the penalty.
+                        let eff_start = job.penalty_until.max(self.now);
+                        let eff = (t - eff_start).max(0.0).min(dt);
+                        job.vt += job.yield_now * eff;
+                        util += job.spec.tasks as f64
+                            * job.spec.cpu_need
+                            * job.yield_now
+                            * (eff / dt);
+                    }
+                }
+            }
+            let cap = self.cluster.nodes as f64;
+            self.underutil_area += (demand.min(cap) - util).max(0.0) * dt;
+        }
+        self.now = t;
+    }
+
+    /// Earliest completion among running jobs (f64::INFINITY if none).
+    fn next_completion(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for job in &self.jobs {
+            if let JobState::Running = job.state {
+                if job.yield_now > 0.0 {
+                    let remaining = (job.spec.proc_time - job.vt).max(0.0);
+                    let start = job.penalty_until.max(self.now);
+                    best = best.min(start + remaining / job.yield_now);
+                }
+            }
+        }
+        best
+    }
+
+    /// Earliest penalty expiry strictly after `now` among running jobs
+    /// (integrals are exact if we stop at these boundaries).
+    fn next_penalty_end(&self) -> f64 {
+        let mut best = f64::INFINITY;
+        for job in &self.jobs {
+            if let JobState::Running = job.state {
+                if job.penalty_until > self.now + 1e-9 {
+                    best = best.min(job.penalty_until);
+                }
+            }
+        }
+        best
+    }
+
+    fn complete_ready_jobs(&mut self) -> Vec<JobId> {
+        let mut done = Vec::new();
+        for j in 0..self.jobs.len() {
+            let job = &self.jobs[j];
+            if matches!(job.state, JobState::Running)
+                && job.vt >= job.spec.proc_time - 1e-6 * job.spec.proc_time.max(1.0)
+            {
+                let need = job.spec.cpu_need;
+                let mem = job.spec.mem;
+                let placement = job.placement.clone();
+                for &n in &placement {
+                    self.cluster.remove_task(n, j, need, mem);
+                }
+                let job = &mut self.jobs[j];
+                job.state = JobState::Done;
+                job.placement.clear();
+                job.yield_now = 0.0;
+                job.completion = Some(self.now);
+                done.push(j);
+            }
+        }
+        done
+    }
+
+    /// Bounded stretch of a completed job (§2.2): τ-floored turnaround over
+    /// τ-floored processing time.
+    pub fn bounded_stretch(&self, j: JobId) -> f64 {
+        let job = &self.jobs[j];
+        let completion = job.completion.expect("job not complete");
+        let ta = (completion - job.spec.submit).max(self.cfg.stretch_threshold);
+        ta / job.spec.proc_time.max(self.cfg.stretch_threshold)
+    }
+}
+
+/// Number of tasks whose node differs between two placements, treating each
+/// placement as a multiset (tasks are identical, so only the multiset
+/// matters for data movement).
+pub fn multiset_diff(old: &[NodeId], new: &[NodeId]) -> usize {
+    let mut a = old.to_vec();
+    let mut b = new.to_vec();
+    a.sort_unstable();
+    b.sort_unstable();
+    let (mut i, mut j, mut common) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Equal => {
+                common += 1;
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+        }
+    }
+    new.len() - common
+}
+
+/// Run `policy` over `trace` to completion and compute metrics.
+pub fn run(
+    trace: &Trace,
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+) -> SimResult {
+    let mut sim = Sim::new(trace, cfg, solver);
+    let n = sim.jobs.len();
+    let mut next_submit_idx = 0usize;
+    let period = policy.period();
+    let mut next_tick = period.map(|p| trace.jobs.first().map(|j| j.submit).unwrap_or(0.0) + p);
+    let mut completed = 0usize;
+    // Hard cap on iterations as a hang backstop (events are O(jobs) each for
+    // submissions/completions plus bounded periodic ticks).
+    let mut guard = 0u64;
+    let guard_max = 10_000_000u64;
+
+    while completed < n {
+        guard += 1;
+        assert!(guard < guard_max, "simulation did not terminate (policy bug?)");
+        let t_submit = if next_submit_idx < n {
+            sim.jobs[next_submit_idx].spec.submit
+        } else {
+            f64::INFINITY
+        };
+        let t_tick = next_tick.unwrap_or(f64::INFINITY);
+        let t_done = sim.next_completion();
+        let t_pen = sim.next_penalty_end();
+        let t_next = t_submit.min(t_tick).min(t_done).min(t_pen);
+        assert!(
+            t_next.is_finite(),
+            "deadlock: {} jobs incomplete, nothing scheduled (policy {})",
+            n - completed,
+            policy.name()
+        );
+        sim.advance(t_next);
+
+        // 1. Completions.
+        let done = sim.complete_ready_jobs();
+        if !done.is_empty() {
+            completed += done.len();
+            for j in done {
+                policy.on_complete(&mut sim, j);
+            }
+        }
+        // 2. Submissions.
+        while next_submit_idx < n && sim.jobs[next_submit_idx].spec.submit <= sim.now + 1e-9 {
+            let j = next_submit_idx;
+            next_submit_idx += 1;
+            policy.on_submit(&mut sim, j);
+        }
+        // 3. Periodic tick.
+        if let (Some(t), Some(p)) = (next_tick, period) {
+            if t <= sim.now + 1e-9 {
+                policy.on_tick(&mut sim);
+                next_tick = Some(t + p);
+            }
+        }
+    }
+
+    // Final metrics.
+    let first_submit = trace.jobs.first().map(|j| j.submit).unwrap_or(0.0);
+    let makespan = (sim.now - first_submit).max(1.0);
+    let stretches: Vec<f64> = (0..n).map(|j| sim.bounded_stretch(j)).collect();
+    let max_stretch = stretches.iter().copied().fold(0.0, f64::max);
+    let avg_stretch = stretches.iter().sum::<f64>() / n as f64;
+    SimResult {
+        max_stretch,
+        avg_stretch,
+        underutil_area: sim.underutil_area,
+        norm_underutil: sim.underutil_area / sim.total_work.max(1e-9),
+        gb_moved: sim.gb_moved,
+        gb_per_sec: sim.gb_moved / makespan,
+        preemptions: sim.preemptions,
+        migrations: sim.migrations,
+        preempt_per_hour: sim.preemptions as f64 / (makespan / 3600.0),
+        migrate_per_hour: sim.migrations as f64 / (makespan / 3600.0),
+        preempt_per_job: sim.preemptions as f64 / n as f64,
+        migrate_per_job: sim.migrations as f64 / n as f64,
+        makespan,
+        jobs: sim.jobs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::RustSolver;
+    use crate::sched::Policy;
+    use crate::workload::Job;
+
+    fn trace(jobs: Vec<Job>) -> Trace {
+        Trace { jobs, nodes: 4, cores_per_node: 4, node_mem_gb: 4.0 }
+    }
+
+    fn job(id: u32, submit: f64, tasks: u32, need: f64, mem: f64, p: f64) -> Job {
+        Job { id, submit, tasks, cpu_need: need, mem, proc_time: p }
+    }
+
+    /// Trivial policy: place every job on node (id % nodes) at yield 1,
+    /// assuming no contention (tests construct disjoint workloads).
+    struct OneShot;
+    impl Policy for OneShot {
+        fn name(&self) -> String {
+            "oneshot".into()
+        }
+        fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+            let tasks = sim.jobs[j].spec.tasks as usize;
+            let nodes = sim.cluster.nodes;
+            let placement: Vec<NodeId> = (0..tasks).map(|k| (j + k) % nodes).collect();
+            sim.start_job(j, placement);
+            sim.set_yield(j, 1.0);
+        }
+        fn on_complete(&mut self, _sim: &mut Sim, _j: JobId) {}
+    }
+
+    #[test]
+    fn single_job_runs_to_completion_at_full_speed() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 100.0)]);
+        let r = run(&t, &mut OneShot, SimConfig::default(), Box::new(RustSolver));
+        let j = &r.jobs[0];
+        assert!(matches!(j.state, JobState::Done));
+        assert!((j.completion.unwrap() - 100.0).abs() < 1e-6);
+        // Stretch bounded at threshold: ta=100, p=100 -> 1.0.
+        assert!((r.max_stretch - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_job_stretch_is_bounded() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 2.0)]);
+        let r = run(&t, &mut OneShot, SimConfig::default(), Box::new(RustSolver));
+        // ta = 2 < 10 -> floored to 10; p = 2 -> floored to 10 -> stretch 1.
+        assert!((r.max_stretch - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_yield_doubles_duration() {
+        struct HalfYield;
+        impl Policy for HalfYield {
+            fn name(&self) -> String {
+                "half".into()
+            }
+            fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+                sim.start_job(j, vec![0]);
+                sim.set_yield(j, 0.5);
+            }
+            fn on_complete(&mut self, _sim: &mut Sim, _j: JobId) {}
+        }
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 0.1, 100.0)]);
+        let r = run(&t, &mut HalfYield, SimConfig::default(), Box::new(RustSolver));
+        assert!((r.jobs[0].completion.unwrap() - 200.0).abs() < 1e-6);
+        // stretch = 200/100 = 2.
+        assert!((r.max_stretch - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_accounting_enforced() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.6, 100.0), job(1, 0.0, 1, 0.5, 0.6, 100.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        sim.start_job(0, vec![0]);
+        assert!(!sim.cluster.fits_mem(0, 0.6), "second 60% task must not fit node 0");
+        assert!(sim.cluster.fits_mem(1, 0.6));
+    }
+
+    #[test]
+    fn pause_resume_pays_penalty_and_bandwidth() {
+        struct PauseResume {
+            paused_once: bool,
+        }
+        impl Policy for PauseResume {
+            fn name(&self) -> String {
+                "pr".into()
+            }
+            fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+                if j == 0 {
+                    sim.start_job(0, vec![0]);
+                    sim.set_yield(0, 1.0);
+                } else {
+                    // Second submission pauses job 0, runs job 1, resumes at completion.
+                    sim.pause_job(0);
+                    self.paused_once = true;
+                    sim.start_job(1, vec![0]);
+                    sim.set_yield(1, 1.0);
+                }
+            }
+            fn on_complete(&mut self, sim: &mut Sim, j: JobId) {
+                if j == 1 {
+                    sim.start_job(0, vec![0]);
+                    sim.set_yield(0, 1.0);
+                }
+            }
+        }
+        let t = trace(vec![
+            job(0, 0.0, 1, 1.0, 0.5, 1000.0),
+            job(1, 100.0, 1, 1.0, 0.5, 500.0),
+        ]);
+        let r = run(
+            &t,
+            &mut PauseResume { paused_once: false },
+            SimConfig::default(),
+            Box::new(RustSolver),
+        );
+        // Job 1: starts at 100, runs 500 -> done at 600.
+        assert!((r.jobs[1].completion.unwrap() - 600.0).abs() < 1e-6);
+        // Job 0: 100 s of work done, resumed at 600 with 300 s penalty ->
+        // progress resumes at 900, 900 s of work left -> done at 1800.
+        assert!(
+            (r.jobs[0].completion.unwrap() - 1800.0).abs() < 1e-6,
+            "completion {}",
+            r.jobs[0].completion.unwrap()
+        );
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.migrations, 0);
+        // Bandwidth: pause writes 0.5*4 GB, resume reads 0.5*4 GB = 4 GB.
+        assert!((r.gb_moved - 4.0).abs() < 1e-9, "gb {}", r.gb_moved);
+    }
+
+    #[test]
+    fn migration_moves_only_changed_tasks() {
+        assert_eq!(multiset_diff(&[0, 1, 2], &[0, 1, 2]), 0);
+        assert_eq!(multiset_diff(&[0, 1, 2], &[0, 1, 3]), 1);
+        assert_eq!(multiset_diff(&[0, 0, 1], &[0, 1, 1]), 1);
+        assert_eq!(multiset_diff(&[0, 1], &[2, 3]), 2);
+    }
+
+    #[test]
+    fn underutilization_zero_for_perfectly_packed() {
+        // One job using the whole cluster at yield 1: demand = util always.
+        let t = trace(vec![job(0, 0.0, 4, 1.0, 0.5, 100.0)]);
+        let r = run(&t, &mut OneShot, SimConfig::default(), Box::new(RustSolver));
+        assert!(r.underutil_area.abs() < 1e-6, "area {}", r.underutil_area);
+    }
+
+    #[test]
+    fn underutilization_counts_waiting_demand() {
+        // Job 1 waits while job 0 runs (sequential policy on one node).
+        struct Fcfs1 {
+            queue: Vec<JobId>,
+        }
+        impl Policy for Fcfs1 {
+            fn name(&self) -> String {
+                "fcfs1".into()
+            }
+            fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+                if sim.running().is_empty() {
+                    sim.start_job(j, vec![0]);
+                    sim.set_yield(j, 1.0);
+                } else {
+                    self.queue.push(j);
+                }
+            }
+            fn on_complete(&mut self, sim: &mut Sim, _j: JobId) {
+                if let Some(j) = self.queue.pop() {
+                    sim.start_job(j, vec![0]);
+                    sim.set_yield(j, 1.0);
+                }
+            }
+        }
+        let t = trace(vec![
+            job(0, 0.0, 1, 1.0, 0.6, 100.0),
+            job(1, 0.0, 1, 1.0, 0.6, 100.0),
+        ]);
+        let r = run(&t, &mut Fcfs1 { queue: vec![] }, SimConfig::default(), Box::new(RustSolver));
+        // For 100 s, demand = 2, util = 1 -> area 100. Then 100 s, demand=util=1.
+        assert!((r.underutil_area - 100.0).abs() < 1e-6, "area {}", r.underutil_area);
+        // Second job: ta = 200 -> stretch 2.
+        assert!((r.max_stretch - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,175 @@
+//! Job and cluster state for the simulator.
+
+use crate::workload::Job;
+
+pub type JobId = usize;
+pub type NodeId = usize;
+
+/// Lifecycle of a job inside the simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted (or not yet submitted) and never admitted.
+    Pending,
+    /// Tasks placed on nodes, progressing at `yield_now` (outside penalty).
+    Running,
+    /// Preempted to storage; holds no resources.
+    Paused,
+    /// Completed.
+    Done,
+}
+
+/// Per-job simulation state.
+#[derive(Debug, Clone)]
+pub struct JobSim {
+    pub spec: Job,
+    pub state: JobState,
+    /// Virtual time: ∫ yield dt since release (§4.1).
+    pub vt: f64,
+    /// Current yield (0 unless running).
+    pub yield_now: f64,
+    /// One node per task while running.
+    pub placement: Vec<NodeId>,
+    /// No progress before this instant (rescheduling penalty).
+    pub penalty_until: f64,
+    pub completion: Option<f64>,
+    pub first_start: Option<f64>,
+    pub preemptions: u32,
+    pub migrations: u32,
+}
+
+impl JobSim {
+    pub fn new(spec: Job) -> Self {
+        JobSim {
+            spec,
+            state: JobState::Pending,
+            vt: 0.0,
+            yield_now: 0.0,
+            placement: Vec::new(),
+            penalty_until: 0.0,
+            completion: None,
+            first_start: None,
+            preemptions: 0,
+            migrations: 0,
+        }
+    }
+
+    /// Flow time (time since submission) at instant `now`.
+    pub fn flow_time(&self, now: f64) -> f64 {
+        (now - self.spec.submit).max(0.0)
+    }
+}
+
+/// Homogeneous cluster: per-node CPU load (sum of placed tasks' needs; may
+/// exceed 1 — CPU is overloadable), free memory (rigid, never negative) and
+/// the multiset of placed tasks.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: usize,
+    pub cpu_load: Vec<f64>,
+    pub free_mem: Vec<f64>,
+    /// Tasks on each node as (job, count).
+    pub tasks_on: Vec<Vec<(JobId, u32)>>,
+}
+
+impl Cluster {
+    pub fn new(nodes: usize) -> Self {
+        Cluster {
+            nodes,
+            cpu_load: vec![0.0; nodes],
+            free_mem: vec![1.0; nodes],
+            tasks_on: vec![Vec::new(); nodes],
+        }
+    }
+
+    /// Whether one task with memory requirement `mem` fits on `n`.
+    pub fn fits_mem(&self, n: NodeId, mem: f64) -> bool {
+        self.free_mem[n] + 1e-9 >= mem
+    }
+
+    pub fn add_task(&mut self, n: NodeId, j: JobId, need: f64, mem: f64) {
+        assert!(
+            self.fits_mem(n, mem),
+            "memory overflow on node {n}: free {} < {mem}",
+            self.free_mem[n]
+        );
+        self.free_mem[n] -= mem;
+        self.cpu_load[n] += need;
+        if let Some(e) = self.tasks_on[n].iter_mut().find(|(id, _)| *id == j) {
+            e.1 += 1;
+        } else {
+            self.tasks_on[n].push((j, 1));
+        }
+    }
+
+    pub fn remove_task(&mut self, n: NodeId, j: JobId, need: f64, mem: f64) {
+        let pos = self.tasks_on[n]
+            .iter()
+            .position(|(id, _)| *id == j)
+            .unwrap_or_else(|| panic!("job {j} has no task on node {n}"));
+        if self.tasks_on[n][pos].1 > 1 {
+            self.tasks_on[n][pos].1 -= 1;
+        } else {
+            self.tasks_on[n].swap_remove(pos);
+        }
+        self.free_mem[n] = (self.free_mem[n] + mem).min(1.0);
+        self.cpu_load[n] = (self.cpu_load[n] - need).max(0.0);
+    }
+
+    /// Maximum CPU load over all nodes (Λ in §4.6).
+    pub fn max_load(&self) -> f64 {
+        self.cpu_load.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Node indices sorted by ascending CPU load (Greedy's preference).
+    pub fn by_load(&self) -> Vec<NodeId> {
+        let mut idx: Vec<NodeId> = (0..self.nodes).collect();
+        idx.sort_by(|&a, &b| self.cpu_load[a].partial_cmp(&self.cpu_load[b]).unwrap());
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_remove_roundtrip() {
+        let mut c = Cluster::new(2);
+        c.add_task(0, 7, 0.5, 0.3);
+        c.add_task(0, 7, 0.5, 0.3);
+        assert_eq!(c.tasks_on[0], vec![(7, 2)]);
+        assert!((c.cpu_load[0] - 1.0).abs() < 1e-12);
+        assert!((c.free_mem[0] - 0.4).abs() < 1e-12);
+        c.remove_task(0, 7, 0.5, 0.3);
+        assert_eq!(c.tasks_on[0], vec![(7, 1)]);
+        c.remove_task(0, 7, 0.5, 0.3);
+        assert!(c.tasks_on[0].is_empty());
+        assert!((c.free_mem[0] - 1.0).abs() < 1e-12);
+        assert!(c.cpu_load[0].abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "memory overflow")]
+    fn memory_overflow_panics() {
+        let mut c = Cluster::new(1);
+        c.add_task(0, 0, 0.1, 0.7);
+        c.add_task(0, 1, 0.1, 0.7);
+    }
+
+    #[test]
+    fn cpu_may_overload() {
+        let mut c = Cluster::new(1);
+        c.add_task(0, 0, 0.9, 0.1);
+        c.add_task(0, 1, 0.9, 0.1);
+        assert!((c.cpu_load[0] - 1.8).abs() < 1e-12);
+        assert!((c.max_load() - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn by_load_sorts_ascending() {
+        let mut c = Cluster::new(3);
+        c.add_task(1, 0, 0.9, 0.1);
+        c.add_task(2, 1, 0.4, 0.1);
+        assert_eq!(c.by_load(), vec![0, 2, 1]);
+    }
+}

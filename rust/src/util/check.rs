@@ -1,0 +1,63 @@
+//! Lightweight property-based testing helper (proptest is unavailable in
+//! this offline build). `forall` runs a property over `n` randomly generated
+//! cases from a seeded generator; on failure it reports the case index and
+//! the seed so the exact input can be regenerated, and retries nothing
+//! (deterministic, no shrinking — failures print the full generated value
+//! via `Debug` instead).
+
+use crate::util::rng::Rng;
+
+/// Run `prop` on `n` cases produced by `gen`. Panics with diagnostics on the
+/// first failing case.
+pub fn forall<T, G, P>(seed: u64, n: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed on case {i}/{n} (seed {seed}):\n  {msg}\n  input: {case:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            100,
+            |r| r.below(1000),
+            |&x| {
+                count += 1;
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(2, 50, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, `--flag`, and positional
+//! arguments. Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argument vector (excluding argv[0]).
+    pub fn parse<I, S>(argv: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().map(Into::into).peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(vec![
+            "bench", "table2", "--traces", "20", "--load=0.7", "--verbose", "--seed", "42",
+        ]);
+        assert_eq!(a.positional, vec!["bench", "table2"]);
+        assert_eq!(a.usize_or("traces", 0), 20);
+        assert!((a.f64_or("load", 0.0) - 0.7).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.u64_or("seed", 0), 42);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(vec!["run", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.usize_or("jobs", 400), 400);
+        assert_eq!(a.str_or("alg", "easy"), "easy");
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let a = Args::parse(vec!["--n", "abc"]);
+        a.usize_or("n", 1);
+    }
+}

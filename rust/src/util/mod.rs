@@ -1,0 +1,46 @@
+//! Shared utilities: deterministic RNG + distributions, summary statistics,
+//! CLI parsing, and a property-testing helper. These replace the crates.io
+//! `rand`/`clap`/`proptest` stack, which is unavailable in the offline build.
+
+pub mod check;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+
+/// Format a float like the paper's tables (thousands separators, one
+/// decimal): `5_869.3` -> "5,869.3".
+pub fn fmt_paper(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let neg = x < 0.0;
+    let x = x.abs();
+    let whole = x.trunc() as i64;
+    let frac = ((x - whole as f64) * 10.0).round() as i64;
+    let (whole, frac) = if frac == 10 { (whole + 1, 0) } else { (whole, frac) };
+    let mut s = whole.to_string();
+    let mut grouped = String::new();
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            grouped.push(',');
+        }
+        grouped.push(*b as char);
+    }
+    s = grouped;
+    format!("{}{}.{}", if neg { "-" } else { "" }, s, frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_paper_matches_table_style() {
+        assert_eq!(fmt_paper(5869.34), "5,869.3");
+        assert_eq!(fmt_paper(13.55), "13.6");
+        assert_eq!(fmt_paper(0.0), "0.0");
+        assert_eq!(fmt_paper(21718.42), "21,718.4");
+        assert_eq!(fmt_paper(999.99), "1,000.0");
+    }
+}

@@ -1,0 +1,280 @@
+//! Deterministic pseudo-random number generation and the distributions the
+//! workload models need (uniform, exponential, gamma, hyper-gamma, normal).
+//!
+//! The crates.io `rand` stack is unavailable in this offline build, so this
+//! module provides a small, well-tested replacement: a SplitMix64-seeded
+//! xoshiro256++ generator (Blackman & Vigna) plus Marsaglia–Tsang gamma
+//! sampling. Everything is deterministic given a seed, which the experiment
+//! harness relies on for reproducibility.
+
+/// xoshiro256++ PRNG. Fast, 256-bit state, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed via SplitMix64 expansion.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next_sm = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next_sm(), next_sm(), next_sm(), next_sm()];
+        Rng { s }
+    }
+
+    /// Derive an independent stream (for per-trace seeding).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's nearly-divisionless method.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with the given mean (inverse-CDF).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let mut u = self.f64();
+        if u <= 0.0 {
+            u = f64::MIN_POSITIVE;
+        }
+        -mean * (1.0 - u).ln()
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = self.range(-1.0, 1.0);
+            let v = self.range(-1.0, 1.0);
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang (2000), with the
+    /// standard boost for k < 1.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma params must be positive");
+        if shape < 1.0 {
+            // Gamma(k) = Gamma(k+1) * U^(1/k)
+            let x = self.gamma(shape + 1.0, 1.0);
+            let mut u = self.f64();
+            if u <= 0.0 {
+                u = f64::MIN_POSITIVE;
+            }
+            return scale * x * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.f64();
+            let x2 = x * x;
+            if u < 1.0 - 0.0331 * x2 * x2 {
+                return scale * d * v3;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x2 + d * (1.0 - v3 + v3.ln()) {
+                return scale * d * v3;
+            }
+        }
+    }
+
+    /// Hyper-gamma: with probability `p` draw Gamma(a1, b1), else Gamma(a2, b2).
+    /// This is the runtime distribution family of the Lublin–Feitelson model.
+    pub fn hyper_gamma(&mut self, p: f64, a1: f64, b1: f64, a2: f64, b2: f64) -> f64 {
+        if self.chance(p) {
+            self.gamma(a1, b1)
+        } else {
+            self.gamma(a2, b2)
+        }
+    }
+
+    /// Two-stage uniform (Lublin–Feitelson job-size building block): with
+    /// probability `prob` draw U[lo, med], else U[med, hi].
+    pub fn two_stage_uniform(&mut self, lo: f64, med: f64, hi: f64, prob: f64) -> f64 {
+        if self.chance(prob) {
+            self.range(lo, med)
+        } else {
+            self.range(med, hi)
+        }
+    }
+
+    /// Random shuffle (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f64> = (0..20000).map(|_| r.f64()).collect();
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let (mean, var) = moments(&xs);
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn below_is_unbiased_and_in_range() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..50000).map(|_| r.exponential(3.0)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - 3.0).abs() < 0.1, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.6, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let xs: Vec<f64> = (0..50000).map(|_| r.normal()).collect();
+        let (mean, var) = moments(&xs);
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_above_one() {
+        let mut r = Rng::new(17);
+        let (k, t) = (4.2, 0.94);
+        let xs: Vec<f64> = (0..50000).map(|_| r.gamma(k, t)).collect();
+        let (mean, var) = moments(&xs);
+        assert!((mean - k * t).abs() < 0.05 * k * t, "mean={mean}");
+        assert!((var - k * t * t).abs() < 0.1 * k * t * t, "var={var}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_below_one() {
+        let mut r = Rng::new(19);
+        let (k, t) = (0.45, 2.0);
+        let xs: Vec<f64> = (0..80000).map(|_| r.gamma(k, t)).collect();
+        let (mean, _) = moments(&xs);
+        assert!((mean - k * t).abs() < 0.05 * k * t, "mean={mean}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn two_stage_uniform_respects_bounds() {
+        let mut r = Rng::new(23);
+        for _ in 0..10000 {
+            let x = r.two_stage_uniform(0.5, 3.0, 7.0, 0.7);
+            assert!((0.5..7.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng::new(29);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,248 @@
+//! Synthetic workload generation after the Lublin–Feitelson model
+//! (U. Lublin, D. G. Feitelson, "The workload on parallel supercomputers:
+//! modeling the characteristics of rigid jobs", JPDC 63(11), 2003) — the
+//! model the paper uses for its synthetic traces (§5.3.2), augmented with
+//! the paper's CPU-need and memory-requirement rules.
+//!
+//! Structure follows the published model exactly: job size is a two-stage
+//! log-uniform with emphasis on powers of two; runtime is hyper-Gamma with
+//! the branch probability linear in log2(size); interarrivals are Gamma
+//! modulated by a daily cycle. Constants are the batch-job parameters from
+//! the reference implementation (`m_lublin99.c`) to the precision available
+//! offline; DESIGN.md records this substitution. The experiments rescale
+//! interarrival times to hit target offered loads (§5.3.2), which removes
+//! sensitivity to the absolute arrival-rate constants.
+//!
+//! The paper's augmentation (§5.3.2), applied on top:
+//! - quad-core nodes; a single-task job is sequential (CPU need 25%),
+//!   multi-task jobs have multi-threaded CPU-bound tasks (CPU need 100%);
+//! - memory per task: 10% with probability 0.55, else 10·x% with
+//!   x ~ U{2..10} (Setia et al. informed model).
+
+use super::{Job, Trace};
+use crate::util::rng::Rng;
+
+/// Parameters of the Lublin–Feitelson batch model plus the paper's
+/// augmentation. Defaults reproduce §5.3.2.
+#[derive(Debug, Clone)]
+pub struct LublinParams {
+    pub nodes: usize,
+    pub cores_per_node: u32,
+    pub node_mem_gb: f64,
+    /// Probability a job is serial (1 "processor").
+    pub serial_prob: f64,
+    /// Probability a parallel job size is rounded to a power of two.
+    pub pow2_prob: f64,
+    /// Two-stage uniform over log2(size): [ulow, umed] w.p. uprob else [umed, uhi].
+    pub ulow: f64,
+    pub umed_offset: f64,
+    pub uprob: f64,
+    /// Runtime hyper-Gamma: branch 1 Gamma(a1,b1), branch 2 Gamma(a2,b2) on
+    /// ln(runtime); branch-1 probability p = pa·log2(size) + pb, clamped.
+    pub a1: f64,
+    pub b1: f64,
+    pub a2: f64,
+    pub b2: f64,
+    pub pa: f64,
+    pub pb: f64,
+    /// Gamma interarrival during the daily peak, seconds.
+    pub arrive_shape: f64,
+    pub arrive_scale: f64,
+    /// Memory model: P(task mem = 10%), else 10·U{2..10}%.
+    pub small_mem_prob: f64,
+}
+
+impl Default for LublinParams {
+    fn default() -> Self {
+        LublinParams {
+            nodes: 128,
+            cores_per_node: 4,
+            node_mem_gb: 4.0,
+            serial_prob: 0.244,
+            pow2_prob: 0.576,
+            ulow: 0.8,
+            umed_offset: 2.5, // umed = uhi - offset
+            uprob: 0.86,
+            a1: 4.2,
+            b1: 0.94,
+            a2: 312.0,
+            b2: 0.03,
+            pa: -0.0054,
+            pb: 0.78,
+            arrive_shape: 1.0,
+            arrive_scale: 450.0,
+            small_mem_prob: 0.55,
+        }
+    }
+}
+
+/// Relative arrival intensity by hour of day (two-peak working-hours cycle,
+/// normalized to mean 1.0 below). Shape follows Lublin's fitted daily cycle:
+/// a deep overnight trough and a broad 8h–18h plateau.
+const DAILY_CYCLE: [f64; 24] = [
+    0.4, 0.3, 0.25, 0.22, 0.22, 0.25, 0.35, 0.55, 0.90, 1.30, 1.60, 1.70, 1.65, 1.70, 1.75, 1.70,
+    1.55, 1.40, 1.20, 1.00, 0.85, 0.70, 0.55, 0.45,
+];
+
+fn cycle_weight(t_seconds: f64) -> f64 {
+    let hour = ((t_seconds / 3600.0) % 24.0).floor() as usize % 24;
+    let mean: f64 = DAILY_CYCLE.iter().sum::<f64>() / 24.0;
+    DAILY_CYCLE[hour] / mean
+}
+
+/// Draw a job size in processors (§ "jobs type and size" of the model).
+fn sample_size(rng: &mut Rng, p: &LublinParams) -> u32 {
+    if rng.chance(p.serial_prob) {
+        return 1;
+    }
+    let uhi = (p.nodes as f64).log2();
+    let umed = (uhi - p.umed_offset).max(p.ulow + 0.1);
+    let l = rng.two_stage_uniform(p.ulow, umed, uhi, p.uprob);
+    let size = if rng.chance(p.pow2_prob) {
+        2f64.powf(l.round())
+    } else {
+        2f64.powf(l).round()
+    };
+    (size as u32).clamp(2, p.nodes as u32)
+}
+
+/// Draw a runtime in seconds: ln(runtime) ~ hyper-Gamma with size-linked
+/// branch probability (longer jobs tend to be wider in the model).
+fn sample_runtime(rng: &mut Rng, p: &LublinParams, size: u32) -> f64 {
+    let prob = (p.pa * (size as f64).log2().max(0.0) + p.pb).clamp(0.05, 0.95);
+    let ln_rt = rng.hyper_gamma(prob, p.a1, p.b1, p.a2, p.b2);
+    ln_rt.exp().clamp(1.0, 5.0 * 86_400.0)
+}
+
+/// Draw the paper's per-task memory requirement (§5.3.2).
+fn sample_mem(rng: &mut Rng, p: &LublinParams) -> f64 {
+    if rng.chance(p.small_mem_prob) {
+        0.10
+    } else {
+        0.10 * (2 + rng.below(9)) as f64 // 10·x%, x ∈ {2..10}
+    }
+}
+
+/// Generate `n_jobs` jobs. Interarrivals are Gamma thinned by the daily
+/// cycle; the paper's CPU-need rules map "processors" to tasks:
+/// size 1 -> one sequential task (need 1/cores); size k>1 -> k
+/// multi-threaded CPU-bound tasks... but a task saturating a quad-core node
+/// would need 100%; the paper assumes multi-task jobs have CPU need 100%
+/// per task and one task per processor-group. We follow §5.3.2 verbatim:
+/// one-task jobs are sequential (need = 1/cores); all other jobs have
+/// `size` tasks with need 100%.
+pub fn generate(seed: u64, n_jobs: usize, params: &LublinParams) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::with_capacity(n_jobs);
+    let mut t = 0.0f64;
+    for id in 0..n_jobs {
+        // Thinning: draw candidate interarrivals until one survives the
+        // cycle weight at its landing time.
+        loop {
+            let gap = rng.gamma(params.arrive_shape, params.arrive_scale);
+            t += gap;
+            let w = cycle_weight(t);
+            if rng.f64() < w / 2.0 {
+                break;
+            }
+        }
+        let size = sample_size(&mut rng, params);
+        let proc_time = sample_runtime(&mut rng, params, size);
+        let (tasks, cpu_need, mem) = if size == 1 {
+            (1u32, 1.0 / params.cores_per_node as f64, sample_mem(&mut rng, params))
+        } else {
+            (size, 1.0, sample_mem(&mut rng, params))
+        };
+        jobs.push(Job { id: id as u32, submit: t, tasks, cpu_need, mem, proc_time });
+    }
+    Trace {
+        jobs,
+        nodes: params.nodes,
+        cores_per_node: params.cores_per_node,
+        node_mem_gb: params.node_mem_gb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_valid_traces() {
+        for seed in 0..5 {
+            let t = generate(seed, 500, &LublinParams::default());
+            t.validate().expect("trace must validate");
+            assert_eq!(t.jobs.len(), 500);
+        }
+    }
+
+    #[test]
+    fn serial_fraction_near_parameter() {
+        let t = generate(1, 4000, &LublinParams::default());
+        let serial = t.jobs.iter().filter(|j| j.tasks == 1).count() as f64 / 4000.0;
+        assert!((serial - 0.244).abs() < 0.03, "serial fraction {serial}");
+    }
+
+    #[test]
+    fn sequential_tasks_use_quarter_node() {
+        let t = generate(2, 1000, &LublinParams::default());
+        for j in &t.jobs {
+            if j.tasks == 1 {
+                assert!((j.cpu_need - 0.25).abs() < 1e-12);
+            } else {
+                assert_eq!(j.cpu_need, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn memory_distribution_matches_model() {
+        let t = generate(3, 8000, &LublinParams::default());
+        let small = t.jobs.iter().filter(|j| (j.mem - 0.1).abs() < 1e-9).count() as f64 / 8000.0;
+        assert!((small - 0.55).abs() < 0.03, "small-mem fraction {small}");
+        for j in &t.jobs {
+            let x = (j.mem / 0.10).round();
+            assert!((1.0..=10.0).contains(&x), "mem {} not a multiple of 10%", j.mem);
+            assert!((j.mem - 0.10 * x).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn runtimes_heavy_tailed_but_bounded() {
+        let t = generate(4, 4000, &LublinParams::default());
+        let mean = t.jobs.iter().map(|j| j.proc_time).sum::<f64>() / 4000.0;
+        let max = t.jobs.iter().map(|j| j.proc_time).fold(0.0, f64::max);
+        // Short-class median ~ e^{4.2·0.94}≈52 s; long class hours. Mean
+        // should land between minutes and a day; max must respect the clamp.
+        assert!(mean > 60.0 && mean < 86_400.0, "mean runtime {mean}");
+        assert!(max <= 5.0 * 86_400.0);
+    }
+
+    #[test]
+    fn arrival_span_is_days_for_1000_jobs() {
+        // §5.3.2: 1000 jobs span on the order of 4-6 days (before load
+        // scaling). Accept 1-20 days to avoid overfitting constants.
+        let t = generate(5, 1000, &LublinParams::default());
+        let span = t.jobs.last().unwrap().submit - t.jobs[0].submit;
+        assert!(
+            span > 86_400.0 && span < 20.0 * 86_400.0,
+            "span {} days",
+            span / 86_400.0
+        );
+    }
+
+    #[test]
+    fn power_of_two_sizes_common() {
+        let t = generate(6, 4000, &LublinParams::default());
+        let par: Vec<&Job> = t.jobs.iter().filter(|j| j.tasks > 1).collect();
+        let pow2 = par.iter().filter(|j| j.tasks.is_power_of_two()).count() as f64;
+        assert!(pow2 / par.len() as f64 > 0.5, "pow2 fraction {}", pow2 / par.len() as f64);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(7, 100, &LublinParams::default());
+        let b = generate(7, 100, &LublinParams::default());
+        assert_eq!(a.jobs, b.jobs);
+    }
+}

@@ -1,0 +1,150 @@
+//! Workloads: the job model (§2.2 of the paper), the Lublin–Feitelson
+//! synthetic generator (§5.3.2), the SWF trace parser with the paper's
+//! HPC2N preprocessing rules (§5.3.1), an HPC2N-like trace synthesizer
+//! (substitution for the non-redistributable archive log), and load
+//! scaling / week-splitting utilities.
+
+pub mod hpc2n;
+pub mod lublin;
+pub mod scale;
+pub mod swf;
+
+/// One job request, as the DFRS scheduler sees it (§2.2): `tasks` identical
+/// tasks, each with a CPU need and memory requirement expressed as fractions
+/// of one node, plus the (hidden from the scheduler) processing time used by
+/// the simulator to decide completion and by the offline bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: u32,
+    /// Submission (release) time in seconds.
+    pub submit: f64,
+    /// Number of tasks, each placed on some node.
+    pub tasks: u32,
+    /// CPU need per task, in (0, 1]: fraction of a node's CPU the task uses
+    /// when running at full speed.
+    pub cpu_need: f64,
+    /// Memory requirement per task, in (0, 1]: rigid fraction of node memory.
+    pub mem: f64,
+    /// Processing time on a dedicated system, seconds (non-clairvoyant
+    /// schedulers never read this; EASY reads it as its "perfect estimate").
+    pub proc_time: f64,
+}
+
+impl Job {
+    /// Total work of the job in node-seconds: tasks × need × time.
+    pub fn work(&self) -> f64 {
+        self.tasks as f64 * self.cpu_need * self.proc_time
+    }
+}
+
+/// A workload trace bound to a platform description.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub jobs: Vec<Job>,
+    /// Number of homogeneous nodes in the cluster.
+    pub nodes: usize,
+    /// Cores per node (1 task can use at most 1/cores CPU if sequential).
+    pub cores_per_node: u32,
+    /// Node memory in GB (for preemption/migration bandwidth accounting).
+    pub node_mem_gb: f64,
+}
+
+impl Trace {
+    /// Offered load (§5.3.2): total work / (nodes × span of arrivals..last
+    /// possible completion). We use the paper's convention of dividing by
+    /// the arrival span, which is how interarrival scaling hits a target.
+    pub fn offered_load(&self) -> f64 {
+        if self.jobs.len() < 2 {
+            return 0.0;
+        }
+        let first = self.jobs.iter().map(|j| j.submit).fold(f64::INFINITY, f64::min);
+        let last = self.jobs.iter().map(|j| j.submit).fold(0.0, f64::max);
+        let span = (last - first).max(1.0);
+        let work: f64 = self.jobs.iter().map(|j| j.work()).sum();
+        work / (self.nodes as f64 * span)
+    }
+
+    /// Sanity-check invariants every generator must satisfy.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.jobs.is_empty() {
+            return Err("empty trace".into());
+        }
+        let mut last = f64::NEG_INFINITY;
+        for j in &self.jobs {
+            if j.submit < last {
+                return Err(format!("job {} submits out of order", j.id));
+            }
+            last = j.submit;
+            if j.tasks == 0 || j.tasks as usize > self.nodes {
+                return Err(format!("job {} has {} tasks on {} nodes", j.id, j.tasks, self.nodes));
+            }
+            if !(j.cpu_need > 0.0 && j.cpu_need <= 1.0) {
+                return Err(format!("job {} cpu_need {} out of (0,1]", j.id, j.cpu_need));
+            }
+            if !(j.mem > 0.0 && j.mem <= 1.0) {
+                return Err(format!("job {} mem {} out of (0,1]", j.id, j.mem));
+            }
+            if !(j.proc_time > 0.0) {
+                return Err(format!("job {} nonpositive proc_time", j.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u32, submit: f64) -> Job {
+        Job { id, submit, tasks: 2, cpu_need: 1.0, mem: 0.1, proc_time: 100.0 }
+    }
+
+    #[test]
+    fn work_is_tasks_times_need_times_time() {
+        let j = Job { id: 0, submit: 0.0, tasks: 4, cpu_need: 0.5, mem: 0.1, proc_time: 10.0 };
+        assert_eq!(j.work(), 20.0);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed() {
+        let t = Trace {
+            jobs: vec![job(0, 0.0), job(1, 5.0)],
+            nodes: 8,
+            cores_per_node: 4,
+            node_mem_gb: 4.0,
+        };
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_order() {
+        let t = Trace {
+            jobs: vec![job(0, 5.0), job(1, 0.0)],
+            nodes: 8,
+            cores_per_node: 4,
+            node_mem_gb: 4.0,
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_oversized_job() {
+        let mut j = job(0, 0.0);
+        j.tasks = 9;
+        let t = Trace { jobs: vec![j], nodes: 8, cores_per_node: 4, node_mem_gb: 4.0 };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn offered_load_scales_with_span() {
+        let t = Trace {
+            jobs: vec![job(0, 0.0), job(1, 100.0)],
+            nodes: 2,
+            cores_per_node: 4,
+            node_mem_gb: 4.0,
+        };
+        // work = 2 jobs * 2 tasks * 1.0 * 100 = 400; span 100; nodes 2 -> 2.0
+        assert!((t.offered_load() - 2.0).abs() < 1e-12);
+    }
+}

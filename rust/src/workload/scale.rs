@@ -1,0 +1,133 @@
+//! Load scaling and trace slicing (§5.3.2): multiply interarrival times by a
+//! computed constant so the trace's offered load hits a target in
+//! {0.1, ..., 0.9}, keeping the job mix identical; split long traces into
+//! week-long segments (how the paper turns the 182-week HPC2N log into 182
+//! experimental scenarios).
+
+use super::Trace;
+
+/// Rescale interarrival gaps by a single constant so that `offered_load()`
+/// equals `target`. Keeps the first submit time and the job mix.
+pub fn scale_to_load(trace: &Trace, target: f64) -> Trace {
+    assert!(target > 0.0, "target load must be positive");
+    let current = trace.offered_load();
+    assert!(current > 0.0, "cannot scale an empty/degenerate trace");
+    // load ∝ 1/span, and span ∝ gap multiplier, so multiply gaps by
+    // current/target.
+    let k = current / target;
+    let mut out = trace.clone();
+    let t0 = trace.jobs[0].submit;
+    let mut prev_orig = t0;
+    let mut prev_new = t0;
+    for (j_new, j_old) in out.jobs.iter_mut().zip(trace.jobs.iter()) {
+        let gap = j_old.submit - prev_orig;
+        prev_orig = j_old.submit;
+        prev_new += gap * k;
+        j_new.submit = prev_new;
+    }
+    out
+}
+
+/// Split a trace into consecutive segments of `seconds` of *submission*
+/// time, re-basing submit times to each segment start. Segments with fewer
+/// than `min_jobs` jobs are dropped (degenerate weeks carry no signal).
+pub fn split_segments(trace: &Trace, seconds: f64, min_jobs: usize) -> Vec<Trace> {
+    let mut out = Vec::new();
+    if trace.jobs.is_empty() {
+        return out;
+    }
+    let t0 = trace.jobs[0].submit;
+    let mut current: Vec<super::Job> = Vec::new();
+    let mut seg_idx = 0usize;
+    for j in &trace.jobs {
+        let idx = ((j.submit - t0) / seconds).floor() as usize;
+        if idx != seg_idx {
+            if current.len() >= min_jobs {
+                out.push(Trace {
+                    jobs: std::mem::take(&mut current),
+                    nodes: trace.nodes,
+                    cores_per_node: trace.cores_per_node,
+                    node_mem_gb: trace.node_mem_gb,
+                });
+            } else {
+                current.clear();
+            }
+            seg_idx = idx;
+        }
+        let mut j2 = j.clone();
+        j2.submit = j.submit - t0 - seg_idx as f64 * seconds;
+        j2.id = current.len() as u32;
+        current.push(j2);
+    }
+    if current.len() >= min_jobs {
+        out.push(Trace {
+            jobs: current,
+            nodes: trace.nodes,
+            cores_per_node: trace.cores_per_node,
+            node_mem_gb: trace.node_mem_gb,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::lublin::{generate, LublinParams};
+
+    #[test]
+    fn scaling_hits_target_load() {
+        let t = generate(11, 500, &LublinParams::default());
+        for target in [0.1, 0.5, 0.9] {
+            let s = scale_to_load(&t, target);
+            assert!(
+                (s.offered_load() - target).abs() < 1e-9,
+                "load {} != {target}",
+                s.offered_load()
+            );
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_job_mix() {
+        let t = generate(12, 200, &LublinParams::default());
+        let s = scale_to_load(&t, 0.7);
+        assert_eq!(t.jobs.len(), s.jobs.len());
+        for (a, b) in t.jobs.iter().zip(s.jobs.iter()) {
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.proc_time, b.proc_time);
+            assert_eq!(a.mem, b.mem);
+        }
+    }
+
+    #[test]
+    fn scaling_preserves_arrival_order() {
+        let t = generate(13, 300, &LublinParams::default());
+        let s = scale_to_load(&t, 0.3);
+        for w in s.jobs.windows(2) {
+            assert!(w[0].submit <= w[1].submit);
+        }
+    }
+
+    #[test]
+    fn split_covers_all_jobs_when_dense() {
+        let t = generate(14, 800, &LublinParams::default());
+        let weeks = split_segments(&t, 86_400.0, 1);
+        let total: usize = weeks.iter().map(|w| w.jobs.len()).sum();
+        assert_eq!(total, 800);
+        for w in &weeks {
+            w.validate().unwrap();
+            assert!(w.jobs.iter().all(|j| j.submit < 86_400.0 + 1e-9));
+        }
+    }
+
+    #[test]
+    fn split_drops_sparse_segments() {
+        let t = generate(15, 400, &LublinParams::default());
+        let weeks = split_segments(&t, 3600.0, 10);
+        for w in &weeks {
+            assert!(w.jobs.len() >= 10);
+        }
+    }
+}

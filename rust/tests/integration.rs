@@ -1,0 +1,133 @@
+//! Integration tests across modules: every Table-1 algorithm over real
+//! generated workloads, batch-vs-DFRS ordering (the paper's headline
+//! claim at small scale), bound consistency, and the SWF round trip.
+
+use dfrs::alloc::RustSolver;
+use dfrs::bound::max_stretch_lower_bound;
+use dfrs::sched::registry::{make_policy, table2_algorithms};
+use dfrs::sim::{run, JobState, SimConfig, SimResult};
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::{hpc2n, scale, swf};
+
+fn run_named(alg: &str, trace: &dfrs::workload::Trace) -> SimResult {
+    let mut p = make_policy(alg, 600.0).unwrap();
+    run(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver))
+}
+
+#[test]
+fn every_table2_algorithm_completes_a_synthetic_trace() {
+    let trace = generate(11, 80, &LublinParams::default());
+    for alg in table2_algorithms() {
+        let r = run_named(alg, &trace);
+        assert!(
+            r.jobs.iter().all(|j| matches!(j.state, JobState::Done)),
+            "{alg}: jobs left incomplete"
+        );
+        assert!(r.max_stretch >= 1.0 - 1e-9, "{alg}: stretch {}", r.max_stretch);
+    }
+}
+
+#[test]
+fn every_table2_algorithm_completes_an_hpc2n_trace() {
+    let trace = hpc2n::generate(13, 80);
+    for alg in table2_algorithms() {
+        let r = run_named(alg, &trace);
+        assert!(
+            r.jobs.iter().all(|j| matches!(j.state, JobState::Done)),
+            "{alg}: jobs left incomplete"
+        );
+    }
+}
+
+#[test]
+fn dfrs_beats_batch_on_contended_trace() {
+    // The paper's headline (§6.1): DFRS outperforms EASY/FCFS by a wide
+    // margin on max stretch. At this tiny scale we require a strict win.
+    let trace = scale::scale_to_load(&generate(17, 120, &LublinParams::default()), 0.7);
+    let easy = run_named("EASY", &trace);
+    let fcfs = run_named("FCFS", &trace);
+    let best = run_named("GreedyPM */per/OPT=MIN/MINVT=600", &trace);
+    assert!(
+        best.max_stretch < easy.max_stretch,
+        "DFRS {} !< EASY {}",
+        best.max_stretch,
+        easy.max_stretch
+    );
+    assert!(easy.max_stretch <= fcfs.max_stretch + 1e-9, "EASY should not lose to FCFS");
+}
+
+#[test]
+fn degradation_from_bound_is_at_least_one() {
+    // No algorithm can beat the clairvoyant offline bound.
+    let trace = generate(19, 60, &LublinParams::default());
+    let b = max_stretch_lower_bound(&trace, 10.0, 1e-3);
+    for alg in ["EASY", "GreedyPM */per/OPT=MIN/MINVT=600", "MCB8 */OPT=MIN/MINVT=600"] {
+        let r = run_named(alg, &trace);
+        assert!(
+            r.max_stretch >= b * (1.0 - 1e-6),
+            "{alg}: stretch {} below bound {b}",
+            r.max_stretch
+        );
+    }
+}
+
+#[test]
+fn swf_export_runs_through_the_real_loader() {
+    let trace = hpc2n::generate(23, 60);
+    let text = swf::to_swf(&trace);
+    let dir = std::env::temp_dir().join("dfrs_swf_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.swf");
+    std::fs::write(&path, text).unwrap();
+    let loaded = swf::load_hpc2n(&path).unwrap();
+    assert_eq!(loaded.jobs.len(), trace.jobs.len());
+    let r = run_named("GreedyP */per/OPT=MIN/MINVT=600", &loaded);
+    assert!(r.jobs.iter().all(|j| j.completion.is_some()));
+}
+
+#[test]
+fn load_scaling_shifts_batch_stretch() {
+    // Higher offered load => contention => (weakly) worse max stretch.
+    let base = generate(29, 120, &LublinParams::default());
+    let lo = run_named("EASY", &scale::scale_to_load(&base, 0.2));
+    let hi = run_named("EASY", &scale::scale_to_load(&base, 0.9));
+    assert!(
+        hi.max_stretch >= lo.max_stretch,
+        "load 0.9 stretch {} < load 0.2 stretch {}",
+        hi.max_stretch,
+        lo.max_stretch
+    );
+}
+
+#[test]
+fn periodic_algorithms_respect_the_period() {
+    // With a huge period and no submit/complete hooks, nothing can start
+    // before the first tick.
+    let trace = generate(31, 20, &LublinParams::default());
+    let mut p = make_policy("/per/OPT=MIN", 50_000.0).unwrap();
+    let r = run(&trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+    let t0 = trace.jobs[0].submit;
+    for j in &r.jobs {
+        assert!(j.first_start.unwrap() >= t0 + 50_000.0 - 1e-6);
+    }
+}
+
+#[test]
+fn underutilization_is_normalized_sanely() {
+    let trace = scale::scale_to_load(&generate(37, 100, &LublinParams::default()), 0.5);
+    for alg in ["EASY", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        let r = run_named(alg, &trace);
+        assert!(r.norm_underutil >= 0.0, "{alg}");
+        assert!(r.norm_underutil < 50.0, "{alg}: absurd underutil {}", r.norm_underutil);
+    }
+}
+
+#[test]
+fn bandwidth_only_from_preemption_and_migration() {
+    let trace = generate(41, 80, &LublinParams::default());
+    let r = run_named("Greedy */OPT=MIN", &trace);
+    // Plain Greedy* never pauses nor migrates.
+    assert_eq!(r.preemptions, 0);
+    assert_eq!(r.migrations, 0);
+    assert_eq!(r.gb_moved, 0.0);
+}

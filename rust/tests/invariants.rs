@@ -1,0 +1,235 @@
+//! Property-based invariants over the coordinator: for randomized traces
+//! and every algorithm family, the simulation must preserve memory
+//! capacity, yield bounds, virtual-time conservation, and event accounting.
+//! (In-repo `forall` helper replaces proptest — see rust/src/util/check.rs.)
+
+use dfrs::alloc::RustSolver;
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run, JobState, SimConfig, SimResult};
+use dfrs::util::check::forall;
+use dfrs::util::rng::Rng;
+use dfrs::workload::{Job, Trace};
+
+/// Random small trace with adversarial shapes (tiny + huge jobs, bursts).
+fn random_trace(rng: &mut Rng) -> Trace {
+    let nodes = 2 + rng.below(10) as usize;
+    let n_jobs = 3 + rng.below(25) as usize;
+    let mut t = 0.0;
+    let jobs = (0..n_jobs)
+        .map(|id| {
+            t += if rng.chance(0.3) { 0.0 } else { rng.exponential(400.0) };
+            Job {
+                id: id as u32,
+                submit: t,
+                tasks: 1 + rng.below(nodes as u64 / 2 + 1) as u32,
+                cpu_need: [0.25, 0.5, 1.0][rng.below(3) as usize],
+                mem: 0.1 * (1 + rng.below(8)) as f64,
+                proc_time: if rng.chance(0.2) {
+                    rng.range(1.0, 10.0)
+                } else {
+                    rng.range(60.0, 20_000.0)
+                },
+            }
+        })
+        .collect();
+    Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 }
+}
+
+fn check_result(alg: &str, _trace: &Trace, r: &SimResult) -> Result<(), String> {
+    // 1. Completion: every job done, completion after submit.
+    for j in &r.jobs {
+        if !matches!(j.state, JobState::Done) {
+            return Err(format!("{alg}: job {} not done", j.spec.id));
+        }
+        let c = j.completion.unwrap();
+        if c < j.spec.submit - 1e-9 {
+            return Err(format!("{alg}: job {} completes before submit", j.spec.id));
+        }
+        // 2. Work conservation: virtual time ≈ processing time at completion.
+        let tol = 1e-3 * j.spec.proc_time.max(1.0);
+        if (j.vt - j.spec.proc_time).abs() > tol {
+            return Err(format!(
+                "{alg}: job {} vt {} != p {}",
+                j.spec.id, j.vt, j.spec.proc_time
+            ));
+        }
+        // 3. No job finishes faster than dedicated speed.
+        if c - j.spec.submit < j.spec.proc_time * (1.0 - 1e-6) {
+            return Err(format!("{alg}: job {} ran faster than dedicated", j.spec.id));
+        }
+    }
+    // 4. Stretch sanity.
+    if r.max_stretch < 1.0 - 1e-9 || !r.max_stretch.is_finite() {
+        return Err(format!("{alg}: bad max stretch {}", r.max_stretch));
+    }
+    if r.avg_stretch > r.max_stretch + 1e-9 {
+        return Err(format!("{alg}: avg > max stretch"));
+    }
+    // 5. Accounting sanity.
+    if r.gb_moved < 0.0 || r.underutil_area < -1e-6 {
+        return Err(format!("{alg}: negative accounting"));
+    }
+    let migs: u32 = r.jobs.iter().map(|j| j.migrations).sum();
+    let pres: u32 = r.jobs.iter().map(|j| j.preemptions).sum();
+    if migs as u64 != r.migrations || pres as u64 != r.preemptions {
+        return Err(format!("{alg}: per-job counters disagree with totals"));
+    }
+    Ok(())
+}
+
+fn prop_for(alg: &'static str, seed: u64, cases: usize) {
+    forall(seed, cases, random_trace, |trace| {
+        let mut p = make_policy(alg, 600.0).map_err(|e| e.to_string())?;
+        let r = run(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+        check_result(alg, trace, &r)
+    });
+}
+
+#[test]
+fn invariants_easy() {
+    prop_for("EASY", 100, 30);
+}
+
+#[test]
+fn invariants_fcfs() {
+    prop_for("FCFS", 101, 30);
+}
+
+#[test]
+fn invariants_greedy_star() {
+    prop_for("Greedy */OPT=MIN", 102, 30);
+}
+
+#[test]
+fn invariants_greedyp_star() {
+    prop_for("GreedyP */OPT=MIN", 103, 30);
+}
+
+#[test]
+fn invariants_greedypm_star_per_minvt() {
+    prop_for("GreedyPM */per/OPT=MIN/MINVT=600", 104, 25);
+}
+
+#[test]
+fn invariants_greedyp_per_avg() {
+    prop_for("GreedyP/per/OPT=AVG", 105, 20);
+}
+
+#[test]
+fn invariants_mcb8_star() {
+    prop_for("MCB8 */OPT=MIN/MINVT=600", 106, 20);
+}
+
+#[test]
+fn invariants_per_only() {
+    prop_for("/per/OPT=MIN", 107, 20);
+}
+
+#[test]
+fn invariants_stretch_per() {
+    prop_for("/stretch-per/OPT=MAX/MINVT=600", 108, 20);
+}
+
+/// The Theorem-1 bound must lower-bound every policy's max bounded stretch
+/// on arbitrary traces (the clairvoyant relaxation can only be better).
+#[test]
+fn bound_is_a_true_lower_bound_across_policies() {
+    forall(200, 12, random_trace, |trace| {
+        let b = dfrs::bound::max_stretch_lower_bound(trace, 10.0, 1e-3);
+        if b < 1.0 - 1e-9 {
+            return Err(format!("bound {b} below 1"));
+        }
+        for alg in ["FCFS", "EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+            let mut p = make_policy(alg, 600.0).map_err(|e| e.to_string())?;
+            let r = run(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+            if r.max_stretch < b * (1.0 - 1e-6) {
+                return Err(format!(
+                    "{alg} achieved stretch {} below the bound {b}",
+                    r.max_stretch
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Failure injection: traces built to poke corner cases.
+#[test]
+fn corner_simultaneous_submissions() {
+    let jobs: Vec<Job> = (0..8)
+        .map(|id| Job {
+            id,
+            submit: 0.0,
+            tasks: 2,
+            cpu_need: 1.0,
+            mem: 0.4,
+            proc_time: 100.0,
+        })
+        .collect();
+    let trace = Trace { jobs, nodes: 4, cores_per_node: 4, node_mem_gb: 4.0 };
+    for alg in ["EASY", "GreedyP */OPT=MIN", "MCB8 */OPT=MIN/MINVT=600"] {
+        let mut p = make_policy(alg, 600.0).unwrap();
+        let r = run(&trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+        check_result(alg, &trace, &r).unwrap();
+    }
+}
+
+#[test]
+fn corner_memory_saturating_jobs() {
+    // Every job wants 100% of a node's memory: zero co-location possible.
+    let jobs: Vec<Job> = (0..6)
+        .map(|id| Job {
+            id,
+            submit: id as f64 * 10.0,
+            tasks: 1,
+            cpu_need: 0.5,
+            mem: 1.0,
+            proc_time: 500.0,
+        })
+        .collect();
+    let trace = Trace { jobs, nodes: 2, cores_per_node: 4, node_mem_gb: 4.0 };
+    for alg in ["GreedyPM */per/OPT=MIN/MINVT=600", "/per/OPT=MIN"] {
+        let mut p = make_policy(alg, 600.0).unwrap();
+        let r = run(&trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+        check_result(alg, &trace, &r).unwrap();
+    }
+}
+
+#[test]
+fn corner_single_instant_burst_of_tiny_jobs() {
+    let jobs: Vec<Job> = (0..20)
+        .map(|id| Job {
+            id,
+            submit: 5.0,
+            tasks: 1,
+            cpu_need: 0.25,
+            mem: 0.1,
+            proc_time: 1.0,
+        })
+        .collect();
+    let trace = Trace { jobs, nodes: 2, cores_per_node: 4, node_mem_gb: 4.0 };
+    let mut p = make_policy("GreedyP */OPT=MIN", 600.0).unwrap();
+    let r = run(&trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+    check_result("GreedyP */OPT=MIN", &trace, &r).unwrap();
+    // Bounded stretch keeps these launch-failure-sized jobs near 1.
+    assert!(r.max_stretch < 3.0, "max stretch {}", r.max_stretch);
+}
+
+#[test]
+fn corner_wide_job_spanning_whole_cluster() {
+    let mut jobs = vec![Job {
+        id: 0,
+        submit: 0.0,
+        tasks: 8,
+        cpu_need: 1.0,
+        mem: 0.9,
+        proc_time: 1000.0,
+    }];
+    jobs.push(Job { id: 1, submit: 1.0, tasks: 8, cpu_need: 1.0, mem: 0.9, proc_time: 100.0 });
+    let trace = Trace { jobs, nodes: 8, cores_per_node: 4, node_mem_gb: 4.0 };
+    for alg in ["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        let mut p = make_policy(alg, 600.0).unwrap();
+        let r = run(&trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver));
+        check_result(alg, &trace, &r).unwrap();
+    }
+}

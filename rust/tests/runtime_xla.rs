@@ -1,0 +1,101 @@
+//! Cross-check the AOT-compiled XLA allocation kernel against the
+//! pure-Rust reference, and exercise the runtime on the scheduling hot
+//! path end-to-end. Tests are skipped (with a notice) when
+//! `artifacts/maxmin.hlo.txt` has not been built (`make artifacts`).
+
+use dfrs::alloc::{maxmin_waterfill, NeedMatrix, YieldSolver};
+use dfrs::runtime::XlaSolver;
+use dfrs::util::rng::Rng;
+
+fn load_solver() -> Option<XlaSolver> {
+    let s = XlaSolver::try_default();
+    if s.is_none() {
+        eprintln!("SKIP: artifacts/maxmin.hlo.txt missing; run `make artifacts`");
+    }
+    s
+}
+
+fn random_matrix(rng: &mut Rng, nodes: usize, jobs: usize) -> NeedMatrix {
+    let mut e = NeedMatrix::zeros(nodes, jobs);
+    for j in 0..jobs {
+        if rng.chance(0.8) {
+            let need = rng.range(0.05, 1.0);
+            let tasks = 1 + rng.below(3);
+            for _ in 0..tasks {
+                e.add(rng.below(nodes as u64) as usize, j, need);
+            }
+        }
+    }
+    e
+}
+
+#[test]
+fn xla_matches_rust_reference_on_random_cases() {
+    let Some(mut solver) = load_solver() else { return };
+    let mut rng = Rng::new(2024);
+    for case in 0..25 {
+        let nodes = 1 + rng.below(64) as usize;
+        let jobs = 1 + rng.below(120) as usize;
+        let e = random_matrix(&mut rng, nodes, jobs);
+        let want = maxmin_waterfill(&e);
+        let got = solver.maxmin(&e);
+        assert_eq!(got.len(), want.len());
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-4,
+                "case {case}: job {j} xla={g} rust={w} (n={nodes}, m={jobs})"
+            );
+        }
+    }
+    assert!(solver.xla_calls >= 25, "calls must hit the artifact");
+    assert_eq!(solver.fallback_calls, 0);
+}
+
+#[test]
+fn xla_handles_paper_sized_cluster() {
+    let Some(mut solver) = load_solver() else { return };
+    let mut rng = Rng::new(7);
+    // The paper's platform: 128 nodes; near the artifact's max job count.
+    let e = random_matrix(&mut rng, 128, 250);
+    let got = solver.maxmin(&e);
+    let want = maxmin_waterfill(&e);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn oversized_problems_fall_back_to_rust() {
+    let Some(mut solver) = load_solver() else { return };
+    let mut rng = Rng::new(8);
+    let e = random_matrix(&mut rng, 130, 10); // rows > PAD_NODES
+    let got = solver.maxmin(&e);
+    assert_eq!(got, maxmin_waterfill(&e));
+    assert_eq!(solver.fallback_calls, 1);
+}
+
+#[test]
+fn full_simulation_with_xla_solver_matches_rust_solver() {
+    let Some(solver) = load_solver() else { return };
+    use dfrs::sched::registry::make_policy;
+    use dfrs::sim::{run, SimConfig};
+    use dfrs::workload::lublin::{generate, LublinParams};
+
+    let trace = generate(5, 60, &LublinParams::default());
+    let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
+
+    let mut p1 = make_policy(alg, 600.0).unwrap();
+    let r_rust = run(&trace, p1.as_mut(), SimConfig::default(), Box::new(dfrs::alloc::RustSolver));
+    let mut p2 = make_policy(alg, 600.0).unwrap();
+    let r_xla = run(&trace, p2.as_mut(), SimConfig::default(), Box::new(solver));
+
+    // The solvers are numerically equivalent (f32 rounding aside), so the
+    // schedules must agree closely.
+    assert!(
+        (r_rust.max_stretch - r_xla.max_stretch).abs() < 0.05 * r_rust.max_stretch.max(1.0),
+        "rust {} vs xla {}",
+        r_rust.max_stretch,
+        r_xla.max_stretch
+    );
+    assert_eq!(r_rust.preemptions, r_xla.preemptions);
+}
