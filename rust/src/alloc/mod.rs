@@ -172,14 +172,16 @@ impl OptMode {
 
 /// Build the need matrix for the currently running jobs of a simulation.
 /// Returns the matrix plus the job id of each column.
+///
+/// This runs at every scheduling event (and inside every MCB8 binary-search
+/// probe), so the column lookup binary-searches the sorted running-id
+/// vector instead of building a hash map per call.
 pub fn need_matrix(sim: &Sim) -> (NeedMatrix, Vec<JobId>) {
-    let running = sim.running();
-    let col_of: std::collections::HashMap<JobId, usize> =
-        running.iter().enumerate().map(|(c, &j)| (j, c)).collect();
+    let running = sim.running(); // ascending ids in both engine modes
     let mut e = NeedMatrix::zeros(sim.cluster.nodes, running.len());
     for i in 0..sim.cluster.nodes {
         for &(j, count) in &sim.cluster.tasks_on[i] {
-            if let Some(&c) = col_of.get(&j) {
+            if let Ok(c) = running.binary_search(&j) {
                 e.add(i, c, sim.jobs[j].spec.cpu_need * count as f64);
             }
         }

@@ -34,7 +34,9 @@ COMMANDS
                   --seed S     base seed (default 42)
                   --out DIR    write CSVs here (default results/)
                   --max-period T   fig3/fig4 upper period (default 12000)
-                  --full       paper-scale run (slow: 100 traces x 1000 jobs)
+                  --full       paper-scale run (100 traces x 1000 jobs)
+                  --workers N  grid workers (default: all cores; 1 = serial;
+                               results are identical at any worker count)
   bound         Offline max-stretch lower bound for a generated trace
                   --jobs N --seed S --workload KIND
   gen           Generate a trace and write SWF to stdout or --out FILE

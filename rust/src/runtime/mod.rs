@@ -9,106 +9,182 @@
 //! zero-padded, outputs sliced back. Problems larger than the padded shape
 //! fall back to the pure-Rust solver (identical semantics, cross-checked in
 //! tests).
+//!
+//! The whole bridge sits behind the `pjrt` cargo feature: the `xla` crate
+//! is not part of the offline registry snapshot, so the default build
+//! compiles a stub `XlaSolver` that reports the feature as unavailable and
+//! serves every call from the pure-Rust reference. `best_solver()` and
+//! `solver_by_name("auto")` degrade gracefully either way; only an explicit
+//! `--solver xla` errors when the bridge (or the artifact) is missing.
 
-use crate::alloc::{maxmin_waterfill, NeedMatrix, YieldSolver};
-use anyhow::{Context, Result};
-use std::path::Path;
+use crate::alloc::YieldSolver;
+use std::path::PathBuf;
 
 /// Padded shape the artifact is compiled for. Must match
 /// `python/compile/model.py` (NODES, JOBS).
 pub const PAD_NODES: usize = 128;
 pub const PAD_JOBS: usize = 256;
 
-/// Yield solver backed by the AOT-compiled XLA executable.
-pub struct XlaSolver {
-    exe: xla::PjRtLoadedExecutable,
-    /// Calls served by the artifact vs. the Rust fallback (telemetry).
-    pub xla_calls: u64,
-    pub fallback_calls: u64,
+/// Default artifact location relative to the repo root (override with
+/// `DFRS_ARTIFACTS`).
+pub fn artifact_path() -> PathBuf {
+    PathBuf::from(std::env::var("DFRS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+        .join("maxmin.hlo.txt")
 }
 
-impl XlaSolver {
-    /// Load and compile the HLO artifact on the CPU PJRT client.
-    pub fn load(path: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compile HLO on PJRT")?;
-        Ok(XlaSolver { exe, xla_calls: 0, fallback_calls: 0 })
+#[cfg(feature = "pjrt")]
+mod bridge {
+    use super::{artifact_path, PAD_JOBS, PAD_NODES};
+    use crate::alloc::{maxmin_waterfill, NeedMatrix, YieldSolver};
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// Yield solver backed by the AOT-compiled XLA executable.
+    pub struct XlaSolver {
+        exe: xla::PjRtLoadedExecutable,
+        /// Calls served by the artifact vs. the Rust fallback (telemetry).
+        pub xla_calls: u64,
+        pub fallback_calls: u64,
     }
 
-    /// Default artifact location relative to the repo root (override with
-    /// `DFRS_ARTIFACTS`).
-    pub fn default_path() -> std::path::PathBuf {
-        std::path::PathBuf::from(
-            std::env::var("DFRS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-        )
-        .join("maxmin.hlo.txt")
-    }
+    impl XlaSolver {
+        /// Load and compile the HLO artifact on the CPU PJRT client.
+        pub fn load(path: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compile HLO on PJRT")?;
+            Ok(XlaSolver { exe, xla_calls: 0, fallback_calls: 0 })
+        }
 
-    /// Try to load the default artifact; None if absent or unloadable.
-    pub fn try_default() -> Option<Self> {
-        let p = Self::default_path();
-        if p.exists() {
-            match Self::load(&p) {
-                Ok(s) => Some(s),
-                Err(e) => {
-                    eprintln!("warning: failed to load XLA artifact: {e:#}");
-                    None
+        /// Default artifact location (see [`super::artifact_path`]).
+        pub fn default_path() -> std::path::PathBuf {
+            artifact_path()
+        }
+
+        /// Try to load the default artifact; None if absent or unloadable.
+        pub fn try_default() -> Option<Self> {
+            let p = Self::default_path();
+            if p.exists() {
+                match Self::load(&p) {
+                    Ok(s) => Some(s),
+                    Err(e) => {
+                        eprintln!("warning: failed to load XLA artifact: {e:#}");
+                        None
+                    }
+                }
+            } else {
+                None
+            }
+        }
+
+        fn run_padded(&mut self, e: &NeedMatrix) -> Result<Vec<f64>> {
+            let mut buf = vec![0f32; PAD_NODES * PAD_JOBS];
+            for i in 0..e.rows {
+                for j in 0..e.cols {
+                    buf[i * PAD_JOBS + j] = e.get(i, j) as f32;
                 }
             }
-        } else {
+            let lit = xla::Literal::vec1(&buf).reshape(&[PAD_NODES as i64, PAD_JOBS as i64])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let ys: Vec<f32> = out.to_vec()?;
+            anyhow::ensure!(ys.len() == PAD_JOBS, "artifact returned {} values", ys.len());
+            Ok(ys[..e.cols].iter().map(|&y| y as f64).collect())
+        }
+    }
+
+    impl YieldSolver for XlaSolver {
+        fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64> {
+            if e.rows > PAD_NODES || e.cols > PAD_JOBS {
+                self.fallback_calls += 1;
+                return maxmin_waterfill(e);
+            }
+            match self.run_padded(e) {
+                Ok(y) => {
+                    self.xla_calls += 1;
+                    y
+                }
+                Err(err) => {
+                    // Execution failures degrade to the reference solver
+                    // rather than aborting a long simulation.
+                    eprintln!("warning: XLA solver failed ({err:#}); using Rust fallback");
+                    self.fallback_calls += 1;
+                    maxmin_waterfill(e)
+                }
+            }
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod bridge {
+    use super::artifact_path;
+    use crate::alloc::{maxmin_waterfill, NeedMatrix, YieldSolver};
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// Stub compiled when the `pjrt` feature is off: loading always fails
+    /// with a clear message, and any instance (none can be constructed via
+    /// `load`) would serve calls from the pure-Rust reference.
+    pub struct XlaSolver {
+        pub xla_calls: u64,
+        pub fallback_calls: u64,
+    }
+
+    impl XlaSolver {
+        pub fn load(path: &Path) -> Result<Self> {
+            anyhow::bail!(
+                "XLA solver unavailable: dfrs was built without the `pjrt` feature \
+                 (artifact {}). Enabling it needs the vendored `xla` crate: follow the \
+                 [features] note in rust/Cargo.toml, then rebuild with `--features pjrt`",
+                path.display()
+            )
+        }
+
+        pub fn default_path() -> std::path::PathBuf {
+            artifact_path()
+        }
+
+        /// Always None without the bridge; prints a notice when an artifact
+        /// exists that a `pjrt` build would have used.
+        pub fn try_default() -> Option<Self> {
+            let p = Self::default_path();
+            if p.exists() {
+                eprintln!(
+                    "notice: {} present but dfrs was built without the `pjrt` feature \
+                     (see the [features] note in rust/Cargo.toml); using the pure-Rust \
+                     solver",
+                    p.display()
+                );
+            }
             None
         }
     }
 
-    fn run_padded(&mut self, e: &NeedMatrix) -> Result<Vec<f64>> {
-        let mut buf = vec![0f32; PAD_NODES * PAD_JOBS];
-        for i in 0..e.rows {
-            for j in 0..e.cols {
-                buf[i * PAD_JOBS + j] = e.get(i, j) as f32;
-            }
-        }
-        let lit = xla::Literal::vec1(&buf).reshape(&[PAD_NODES as i64, PAD_JOBS as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let ys: Vec<f32> = out.to_vec()?;
-        anyhow::ensure!(ys.len() == PAD_JOBS, "artifact returned {} values", ys.len());
-        Ok(ys[..e.cols].iter().map(|&y| y as f64).collect())
-    }
-}
-
-impl YieldSolver for XlaSolver {
-    fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64> {
-        if e.rows > PAD_NODES || e.cols > PAD_JOBS {
+    impl YieldSolver for XlaSolver {
+        fn maxmin(&mut self, e: &NeedMatrix) -> Vec<f64> {
             self.fallback_calls += 1;
-            return maxmin_waterfill(e);
+            maxmin_waterfill(e)
         }
-        match self.run_padded(e) {
-            Ok(y) => {
-                self.xla_calls += 1;
-                y
-            }
-            Err(err) => {
-                // Execution failures degrade to the reference solver rather
-                // than aborting a long simulation.
-                eprintln!("warning: XLA solver failed ({err:#}); using Rust fallback");
-                self.fallback_calls += 1;
-                maxmin_waterfill(e)
-            }
-        }
-    }
 
-    fn name(&self) -> &'static str {
-        "xla"
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
     }
 }
 
-/// Pick the best available solver: the XLA artifact when present, otherwise
-/// the pure-Rust reference.
+pub use bridge::XlaSolver;
+
+/// Pick the best available solver: the XLA artifact when present (and the
+/// `pjrt` feature is compiled in), otherwise the pure-Rust reference.
 pub fn best_solver() -> Box<dyn YieldSolver> {
     match XlaSolver::try_default() {
         Some(s) => Box::new(s),

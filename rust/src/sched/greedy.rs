@@ -8,27 +8,103 @@
 //! in decreasing priority order, any marked job that can keep running in
 //! the remaining memory). GreedyPM additionally tries to *move* (rather
 //! than pause) the marked jobs by re-placing them with Greedy.
+//!
+//! Admission trials run against a *shadow* of the cluster. The indexed
+//! engine uses [`ShadowLoads`] — just the per-node load/free-memory
+//! vectors, cloned by two memcpys — while the reference (seed) engine
+//! clones the full [`Cluster`] including its task multisets, as the seed
+//! code did. Both shadows make identical placement decisions; the
+//! [`PlacementState`] trait is the common interface.
 
 use crate::sim::{Cluster, JobId, NodeId, Sim};
 
+/// Minimal node-capacity view a Greedy placement trial needs. The `job`
+/// parameter exists so the [`Cluster`] implementation can keep its task
+/// multiset bookkeeping; [`ShadowLoads`] ignores it.
+pub trait PlacementState: Clone {
+    fn node_count(&self) -> usize;
+    fn load(&self, n: NodeId) -> f64;
+    fn fits(&self, n: NodeId, mem: f64) -> bool;
+    fn place(&mut self, n: NodeId, job: JobId, need: f64, mem: f64);
+    fn unplace(&mut self, n: NodeId, job: JobId, need: f64, mem: f64);
+}
+
+impl PlacementState for Cluster {
+    fn node_count(&self) -> usize {
+        self.nodes
+    }
+    fn load(&self, n: NodeId) -> f64 {
+        self.cpu_load[n]
+    }
+    fn fits(&self, n: NodeId, mem: f64) -> bool {
+        self.fits_mem(n, mem)
+    }
+    fn place(&mut self, n: NodeId, job: JobId, need: f64, mem: f64) {
+        self.add_task(n, job, need, mem);
+    }
+    fn unplace(&mut self, n: NodeId, job: JobId, need: f64, mem: f64) {
+        self.remove_task(n, job, need, mem);
+    }
+}
+
+/// Allocation-light cluster shadow: per-node CPU load and free memory only.
+/// Cloning copies two flat `f64` vectors instead of the cluster's per-node
+/// task lists, which makes the O(waiting) admission sweeps cheap.
+#[derive(Debug, Clone)]
+pub struct ShadowLoads {
+    pub cpu_load: Vec<f64>,
+    pub free_mem: Vec<f64>,
+}
+
+impl ShadowLoads {
+    pub fn of(cluster: &Cluster) -> Self {
+        ShadowLoads { cpu_load: cluster.cpu_load.clone(), free_mem: cluster.free_mem.clone() }
+    }
+}
+
+impl PlacementState for ShadowLoads {
+    fn node_count(&self) -> usize {
+        self.cpu_load.len()
+    }
+    fn load(&self, n: NodeId) -> f64 {
+        self.cpu_load[n]
+    }
+    fn fits(&self, n: NodeId, mem: f64) -> bool {
+        // Identical tolerance to Cluster::fits_mem.
+        self.free_mem[n] + 1e-9 >= mem
+    }
+    fn place(&mut self, n: NodeId, _job: JobId, need: f64, mem: f64) {
+        debug_assert!(self.fits(n, mem), "shadow memory overflow on node {n}");
+        self.free_mem[n] -= mem;
+        self.cpu_load[n] += need;
+    }
+    fn unplace(&mut self, n: NodeId, _job: JobId, need: f64, mem: f64) {
+        // Same clamping as Cluster::remove_task.
+        self.free_mem[n] = (self.free_mem[n] + mem).min(1.0);
+        self.cpu_load[n] = (self.cpu_load[n] - need).max(0.0);
+    }
+}
+
 /// Greedy placement of `tasks` tasks (need, mem) onto `shadow`, mutating it.
 /// Returns the chosen node per task, or None if some task cannot fit.
-pub fn greedy_place(shadow: &mut Cluster, tasks: u32, need: f64, mem: f64) -> Option<Vec<NodeId>> {
+pub fn greedy_place<S: PlacementState>(
+    shadow: &mut S,
+    tasks: u32,
+    need: f64,
+    mem: f64,
+) -> Option<Vec<NodeId>> {
     let mut placement = Vec::with_capacity(tasks as usize);
     for _ in 0..tasks {
         // Lowest CPU load among nodes with enough free memory.
         let mut best: Option<NodeId> = None;
-        for n in 0..shadow.nodes {
-            if shadow.fits_mem(n, mem)
-                && best
-                    .map(|b| shadow.cpu_load[n] < shadow.cpu_load[b])
-                    .unwrap_or(true)
+        for n in 0..shadow.node_count() {
+            if shadow.fits(n, mem) && best.map(|b| shadow.load(n) < shadow.load(b)).unwrap_or(true)
             {
                 best = Some(n);
             }
         }
         let n = best?;
-        shadow.add_task(n, usize::MAX, need, mem); // job id irrelevant in shadow
+        shadow.place(n, usize::MAX, need, mem); // job id irrelevant in shadow
         placement.push(n);
     }
     Some(placement)
@@ -48,9 +124,14 @@ pub struct Admission {
 /// Plain Greedy admission: place or postpone.
 pub fn admit_greedy(sim: &Sim, j: JobId) -> Option<Admission> {
     let spec = &sim.jobs[j].spec;
-    let mut shadow = sim.cluster.clone();
-    greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem)
-        .map(|placement| Admission { placement, pause: vec![], migrate: vec![] })
+    let placement = if sim.is_reference() {
+        let mut shadow = sim.cluster.clone();
+        greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem)
+    } else {
+        let mut shadow = ShadowLoads::of(&sim.cluster);
+        greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem)
+    };
+    placement.map(|placement| Admission { placement, pause: vec![], migrate: vec![] })
 }
 
 /// GreedyP/GreedyPM admission (§4.2). `migrate_marked` selects GreedyPM.
@@ -62,11 +143,24 @@ pub fn admit_greedy(sim: &Sim, j: JobId) -> Option<Admission> {
 /// 3. GreedyPM: try to re-place still-marked jobs with Greedy (migration);
 ///    whatever cannot be re-placed is paused.
 pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
-    let spec = sim.jobs[j].spec.clone();
     // Fast path: fits as-is.
     if let Some(adm) = admit_greedy(sim, j) {
         return adm;
     }
+    if sim.is_reference() {
+        admit_forced_with(sim, j, migrate_marked, sim.cluster.clone())
+    } else {
+        admit_forced_with(sim, j, migrate_marked, ShadowLoads::of(&sim.cluster))
+    }
+}
+
+fn admit_forced_with<S: PlacementState>(
+    sim: &Sim,
+    j: JobId,
+    migrate_marked: bool,
+    mut shadow: S,
+) -> Admission {
+    let spec = sim.jobs[j].spec.clone();
 
     // Step 1: mark running jobs by ascending priority until j would fit.
     let mut by_prio = sim.running();
@@ -74,13 +168,12 @@ pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
     by_prio.reverse(); // ascending priority (lowest first)
 
     let mut marked: Vec<JobId> = Vec::new();
-    let mut shadow = sim.cluster.clone();
     let mut placement: Option<Vec<NodeId>> = None;
     for &m in &by_prio {
         // Remove m's resources from the shadow.
         let ms = &sim.jobs[m].spec;
         for &n in &sim.jobs[m].placement {
-            shadow.remove_task(n, m, ms.cpu_need, ms.mem);
+            shadow.unplace(n, m, ms.cpu_need, ms.mem);
         }
         marked.push(m);
         let mut trial = shadow.clone();
@@ -99,7 +192,6 @@ pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
     // Step 2: un-mark in decreasing priority where memory still allows the
     // job to keep running at its current placement.
     let mut still_marked: Vec<JobId> = Vec::new();
-    let mut keep: Vec<JobId> = Vec::new();
     for &m in marked.iter().rev() {
         let ms = &sim.jobs[m].spec;
         let pl = &sim.jobs[m].placement;
@@ -107,8 +199,8 @@ pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
             let mut trial = shadow.clone();
             let mut ok = true;
             for &n in pl {
-                if trial.fits_mem(n, ms.mem) {
-                    trial.add_task(n, m, ms.cpu_need, ms.mem);
+                if trial.fits(n, ms.mem) {
+                    trial.place(n, m, ms.cpu_need, ms.mem);
                 } else {
                     ok = false;
                     break;
@@ -119,9 +211,7 @@ pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
             }
             ok
         };
-        if fits {
-            keep.push(m);
-        } else {
+        if !fits {
             still_marked.push(m);
         }
     }
@@ -145,7 +235,6 @@ pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
             None => pause.push(m),
         }
     }
-    let _ = keep;
     Admission { placement, pause, migrate }
 }
 
@@ -179,11 +268,31 @@ pub fn opportunistic_start(sim: &mut Sim) {
     let mut waiting: Vec<JobId> = sim.paused();
     waiting.extend(sim.pending());
     crate::sched::priority::sort_by_priority(sim, &mut waiting);
+    if sim.is_reference() {
+        for w in waiting {
+            let spec = sim.jobs[w].spec.clone();
+            let mut shadow = sim.cluster.clone();
+            if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
+                sim.start_job(w, pl);
+            }
+        }
+        return;
+    }
+    // Indexed fast path. Greedy placement can only fail on memory (CPU is
+    // overloadable), so a job needing more memory than the emptiest node
+    // offers is skipped without building a shadow — the attempt would fail
+    // identically. This caps the sweep at O(waiting) plus real attempts.
+    let max_free = |c: &Cluster| c.free_mem.iter().copied().fold(0.0f64, f64::max);
+    let mut free_cap = max_free(&sim.cluster);
     for w in waiting {
         let spec = sim.jobs[w].spec.clone();
-        let mut shadow = sim.cluster.clone();
+        if free_cap + 1e-9 < spec.mem {
+            continue; // cannot fit any node; identical to a failed attempt
+        }
+        let mut shadow = ShadowLoads::of(&sim.cluster);
         if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
             sim.start_job(w, pl);
+            free_cap = max_free(&sim.cluster);
         }
     }
 }
@@ -193,6 +302,7 @@ mod tests {
     use super::*;
     use crate::alloc::RustSolver;
     use crate::sim::SimConfig;
+    use crate::util::rng::Rng;
     use crate::workload::{Job, Trace};
 
     fn sim_with(jobs: Vec<Job>, nodes: usize) -> Sim {
@@ -235,6 +345,36 @@ mod tests {
         let mut sorted = pl.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, vec![0, 1], "two tasks must spread to both empty nodes");
+    }
+
+    #[test]
+    fn shadow_loads_places_identically_to_cluster() {
+        // Random live clusters: the two shadow implementations must make
+        // the same placement decisions, task for task.
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let nodes = 2 + rng.below(8) as usize;
+            let mut cluster = Cluster::new(nodes);
+            for j in 0..rng.below(12) {
+                let n = rng.below(nodes as u64) as usize;
+                let mem = 0.05 * (1 + rng.below(6)) as f64;
+                if cluster.fits_mem(n, mem) {
+                    cluster.add_task(n, j as usize, rng.range(0.1, 1.0), mem);
+                }
+            }
+            let tasks = 1 + rng.below(4) as u32;
+            let need = rng.range(0.1, 1.0);
+            let mem = 0.1 * (1 + rng.below(8)) as f64;
+            let via_cluster = {
+                let mut s = cluster.clone();
+                greedy_place(&mut s, tasks, need, mem)
+            };
+            let via_loads = {
+                let mut s = ShadowLoads::of(&cluster);
+                greedy_place(&mut s, tasks, need, mem)
+            };
+            assert_eq!(via_cluster, via_loads);
+        }
     }
 
     #[test]
@@ -300,7 +440,12 @@ mod tests {
         // un-mark pass must keep the higher-priority of the marked pair if
         // memory allows (0.3 + 0.6 <= 1.0 => one can stay).
         let mut sim = sim_with(
-            vec![job(0, 1, 0.2, 0.3), job(1, 1, 0.2, 0.3), job(2, 1, 0.2, 0.3), job(3, 1, 0.2, 0.6)],
+            vec![
+                job(0, 1, 0.2, 0.3),
+                job(1, 1, 0.2, 0.3),
+                job(2, 1, 0.2, 0.3),
+                job(3, 1, 0.2, 0.6),
+            ],
             1,
         );
         sim.start_job(0, vec![0]);
@@ -325,5 +470,20 @@ mod tests {
         sim.pause_job(0);
         opportunistic_start(&mut sim);
         assert!(matches!(sim.jobs[0].state, crate::sim::JobState::Running));
+    }
+
+    #[test]
+    fn opportunistic_start_memory_precheck_skips_only_infeasible_jobs() {
+        // Node 0 holds 0.8 memory; a 0.9-mem job cannot start anywhere but
+        // a 0.2-mem job later in the queue still must.
+        let mut sim = sim_with(
+            vec![job(0, 1, 0.2, 0.8), job(1, 1, 0.2, 0.9), job(2, 1, 0.2, 0.2)],
+            1,
+        );
+        sim.start_job(0, vec![0]);
+        sim.now = 10.0;
+        opportunistic_start(&mut sim);
+        assert!(matches!(sim.jobs[1].state, crate::sim::JobState::Pending));
+        assert!(matches!(sim.jobs[2].state, crate::sim::JobState::Running));
     }
 }

@@ -1,0 +1,128 @@
+//! Event calendar for the simulation engine: a lazily-invalidated min-heap
+//! of timed per-job events (DESIGN.md §Engine internals).
+//!
+//! The engine schedules an entry every time it assigns a job a rescheduling
+//! penalty; entries are never removed eagerly. Instead, a query pops and
+//! discards entries that can no longer be the answer — entries at or before
+//! the query cutoff (simulation time only moves forward and a job's
+//! `penalty_until` only grows), and entries whose `(job, time)` no longer
+//! matches the job's live state (the caller supplies the validity
+//! predicate). This makes scheduling O(log n) and querying O(log n)
+//! amortized, with no per-event rebuild.
+
+use super::JobId;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Total-ordered wrapper for finite, non-negative event times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeKey(pub f64);
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Min-heap of `(time, job)` events with lazy invalidation.
+#[derive(Debug, Clone, Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Reverse<(TimeKey, JobId)>>,
+}
+
+impl EventCalendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that job `j` has an event at time `t`.
+    pub fn schedule(&mut self, t: f64, j: JobId) {
+        self.heap.push(Reverse((TimeKey(t), j)));
+    }
+
+    /// Earliest event strictly after `cutoff` for which `valid(job, time)`
+    /// holds, or `f64::INFINITY`. Entries at or before the cutoff and stale
+    /// entries are discarded permanently — callers must guarantee that both
+    /// can never become answers again (true for rescheduling penalties:
+    /// `cutoff` tracks `sim.now`, which is non-decreasing, and a job's
+    /// penalty expiry only moves forward, re-scheduling a fresh entry).
+    pub fn next_after(&mut self, cutoff: f64, valid: impl Fn(JobId, f64) -> bool) -> f64 {
+        while let Some(&Reverse((TimeKey(t), j))) = self.heap.peek() {
+            if t > cutoff && valid(j, t) {
+                return t;
+            }
+            self.heap.pop();
+        }
+        f64::INFINITY
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_earliest_future_event() {
+        let mut c = EventCalendar::new();
+        c.schedule(300.0, 0);
+        c.schedule(100.0, 1);
+        c.schedule(200.0, 2);
+        assert_eq!(c.next_after(0.0, |_, _| true), 100.0);
+        // Entries at or before the cutoff are dropped.
+        assert_eq!(c.next_after(150.0, |_, _| true), 200.0);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn skips_stale_entries() {
+        let mut c = EventCalendar::new();
+        c.schedule(100.0, 0);
+        c.schedule(200.0, 1);
+        // Job 0's entry no longer matches its state: it must be discarded.
+        assert_eq!(c.next_after(0.0, |j, _| j != 0), 200.0);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn empty_calendar_is_infinity() {
+        let mut c = EventCalendar::new();
+        assert_eq!(c.next_after(0.0, |_, _| true), f64::INFINITY);
+        c.schedule(5.0, 0);
+        assert_eq!(c.next_after(10.0, |_, _| true), f64::INFINITY);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn superseded_entries_resolve_to_the_newest() {
+        // A job re-penalized later has two entries; validity keyed on the
+        // current expiry keeps only the newest.
+        let mut c = EventCalendar::new();
+        c.schedule(100.0, 0);
+        c.schedule(400.0, 0);
+        let current = 400.0;
+        assert_eq!(c.next_after(0.0, |_, t| t == current), 400.0);
+    }
+
+    #[test]
+    fn time_key_total_order() {
+        let mut v = [TimeKey(3.0), TimeKey(1.0), TimeKey(2.0)];
+        v.sort();
+        assert_eq!(v, [TimeKey(1.0), TimeKey(2.0), TimeKey(3.0)]);
+    }
+}

@@ -59,6 +59,69 @@ impl JobSim {
     }
 }
 
+/// Sorted set of job ids, the engine's index structure for per-state job
+/// sets (DESIGN.md §Engine internals). Backed by a sorted `Vec` so that
+/// iteration is contiguous and always in ascending id order — the order the
+/// seed engine's full scans produced, which metric accumulation and policy
+/// determinism rely on.
+#[derive(Debug, Clone, Default)]
+pub struct IndexSet {
+    ids: Vec<JobId>,
+}
+
+impl IndexSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert `j`; returns true if it was not already present.
+    pub fn insert(&mut self, j: JobId) -> bool {
+        match self.ids.binary_search(&j) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.ids.insert(pos, j);
+                true
+            }
+        }
+    }
+
+    /// Remove `j`; returns true if it was present.
+    pub fn remove(&mut self, j: JobId) -> bool {
+        match self.ids.binary_search(&j) {
+            Ok(pos) => {
+                self.ids.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    pub fn contains(&self, j: JobId) -> bool {
+        self.ids.binary_search(&j).is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Ascending ids, no allocation.
+    pub fn as_slice(&self) -> &[JobId] {
+        &self.ids
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, JobId> {
+        self.ids.iter()
+    }
+
+    pub fn to_vec(&self) -> Vec<JobId> {
+        self.ids.clone()
+    }
+}
+
 /// Homogeneous cluster: per-node CPU load (sum of placed tasks' needs; may
 /// exceed 1 — CPU is overloadable), free memory (rigid, never negative) and
 /// the multiset of placed tasks.
@@ -131,6 +194,23 @@ impl Cluster {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn index_set_stays_sorted_and_deduplicated() {
+        let mut s = IndexSet::new();
+        assert!(s.insert(5));
+        assert!(s.insert(1));
+        assert!(s.insert(3));
+        assert!(!s.insert(3), "duplicate insert must be a no-op");
+        assert_eq!(s.as_slice(), &[1, 3, 5]);
+        assert!(s.contains(3));
+        assert!(!s.contains(2));
+        assert!(s.remove(3));
+        assert!(!s.remove(3));
+        assert_eq!(s.to_vec(), vec![1, 5]);
+        assert_eq!(s.len(), 2);
+        assert!(!s.is_empty());
+    }
 
     #[test]
     fn add_remove_roundtrip() {

@@ -1,0 +1,160 @@
+//! The indexed event-calendar engine must reproduce the reference (seed
+//! full-scan) engine bit for bit: same event order, same f64 accumulator
+//! arithmetic, same SimResult — across every algorithm family and workload
+//! shape. This is the acceptance oracle for the engine rework (DESIGN.md
+//! §Engine internals) and the determinism contract the parallel experiment
+//! grid relies on.
+
+use dfrs::alloc::RustSolver;
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run_with, EngineKind, SimConfig, SimResult};
+use dfrs::util::check::forall;
+use dfrs::util::rng::Rng;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::{hpc2n, scale, Job, Trace};
+
+fn run_engine(alg: &str, trace: &Trace, engine: EngineKind) -> SimResult {
+    let mut p = make_policy(alg, 600.0).unwrap();
+    run_with(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver), engine)
+}
+
+/// Bit-level equality of every metric and every per-job trajectory.
+fn assert_identical(ctx: &str, a: &SimResult, b: &SimResult) {
+    let f = |x: f64| x.to_bits();
+    assert_eq!(
+        f(a.max_stretch),
+        f(b.max_stretch),
+        "{ctx}: max_stretch {} vs {}",
+        a.max_stretch,
+        b.max_stretch
+    );
+    assert_eq!(f(a.avg_stretch), f(b.avg_stretch), "{ctx}: avg_stretch");
+    assert_eq!(
+        f(a.underutil_area),
+        f(b.underutil_area),
+        "{ctx}: underutil_area {} vs {}",
+        a.underutil_area,
+        b.underutil_area
+    );
+    assert_eq!(f(a.norm_underutil), f(b.norm_underutil), "{ctx}: norm_underutil");
+    assert_eq!(f(a.gb_moved), f(b.gb_moved), "{ctx}: gb_moved");
+    assert_eq!(f(a.gb_per_sec), f(b.gb_per_sec), "{ctx}: gb_per_sec");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(f(a.preempt_per_hour), f(b.preempt_per_hour), "{ctx}: preempt_per_hour");
+    assert_eq!(f(a.migrate_per_hour), f(b.migrate_per_hour), "{ctx}: migrate_per_hour");
+    assert_eq!(f(a.preempt_per_job), f(b.preempt_per_job), "{ctx}: preempt_per_job");
+    assert_eq!(f(a.migrate_per_job), f(b.migrate_per_job), "{ctx}: migrate_per_job");
+    assert_eq!(f(a.makespan), f(b.makespan), "{ctx}: makespan");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{ctx}: job count");
+    for (j, (x, y)) in a.jobs.iter().zip(&b.jobs).enumerate() {
+        assert_eq!(f(x.vt), f(y.vt), "{ctx}: job {j} vt {} vs {}", x.vt, y.vt);
+        assert_eq!(
+            x.completion.map(f),
+            y.completion.map(f),
+            "{ctx}: job {j} completion {:?} vs {:?}",
+            x.completion,
+            y.completion
+        );
+        assert_eq!(x.first_start.map(f), y.first_start.map(f), "{ctx}: job {j} first_start");
+        assert_eq!(x.preemptions, y.preemptions, "{ctx}: job {j} preemptions");
+        assert_eq!(x.migrations, y.migrations, "{ctx}: job {j} migrations");
+    }
+}
+
+fn check(alg: &str, trace: &Trace, label: &str) {
+    let indexed = run_engine(alg, trace, EngineKind::Indexed);
+    let reference = run_engine(alg, trace, EngineKind::Reference);
+    assert_identical(&format!("{label} / {alg}"), &indexed, &reference);
+}
+
+/// Every algorithm family of Table 1, plus the batch baselines.
+const ALGS: &[&str] = &[
+    "FCFS",
+    "EASY",
+    "Greedy */OPT=MIN",
+    "GreedyP */OPT=MIN",
+    "GreedyPM */OPT=MIN",
+    "GreedyP/per/OPT=AVG",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "MCB8 */OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+    "/stretch-per/OPT=MAX/MINVT=600",
+];
+
+#[test]
+fn engines_agree_on_an_unscaled_synthetic_trace() {
+    let trace = generate(11, 90, &LublinParams::default());
+    for alg in ALGS {
+        check(alg, &trace, "lublin-90");
+    }
+}
+
+#[test]
+fn engines_agree_under_heavy_load() {
+    // High offered load exercises forced admission, preemption chains and
+    // long waiting queues — the paths the indexed engine reworked most.
+    let trace = scale::scale_to_load(&generate(17, 110, &LublinParams::default()), 0.9);
+    for alg in ["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        check(alg, &trace, "lublin-110@0.9");
+    }
+}
+
+#[test]
+fn engines_agree_on_an_hpc2n_trace() {
+    let trace = hpc2n::generate(23, 80);
+    for alg in ["Greedy */OPT=MIN", "MCB8 */OPT=MIN/MINVT=600"] {
+        check(alg, &trace, "hpc2n-80");
+    }
+}
+
+/// Random adversarial traces (bursts, tiny and huge jobs) — the same
+/// generator shape the invariants suite uses.
+fn random_trace(rng: &mut Rng) -> Trace {
+    let nodes = 2 + rng.below(10) as usize;
+    let n_jobs = 3 + rng.below(25) as usize;
+    let mut t = 0.0;
+    let jobs = (0..n_jobs)
+        .map(|id| {
+            t += if rng.chance(0.3) { 0.0 } else { rng.exponential(400.0) };
+            Job {
+                id: id as u32,
+                submit: t,
+                tasks: 1 + rng.below(nodes as u64 / 2 + 1) as u32,
+                cpu_need: [0.25, 0.5, 1.0][rng.below(3) as usize],
+                mem: 0.1 * (1 + rng.below(8)) as f64,
+                proc_time: if rng.chance(0.2) {
+                    rng.range(1.0, 10.0)
+                } else {
+                    rng.range(60.0, 20_000.0)
+                },
+            }
+        })
+        .collect();
+    Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 }
+}
+
+#[test]
+fn engines_agree_on_random_traces() {
+    forall(300, 15, random_trace, |trace| {
+        for alg in ["GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+            let indexed = run_engine(alg, trace, EngineKind::Indexed);
+            let reference = run_engine(alg, trace, EngineKind::Reference);
+            if indexed.max_stretch.to_bits() != reference.max_stretch.to_bits()
+                || indexed.underutil_area.to_bits() != reference.underutil_area.to_bits()
+                || indexed.gb_moved.to_bits() != reference.gb_moved.to_bits()
+                || indexed.preemptions != reference.preemptions
+                || indexed.migrations != reference.migrations
+            {
+                return Err(format!(
+                    "{alg}: engines diverged (max_stretch {} vs {}, area {} vs {})",
+                    indexed.max_stretch,
+                    reference.max_stretch,
+                    indexed.underutil_area,
+                    reference.underutil_area
+                ));
+            }
+        }
+        Ok(())
+    });
+}
