@@ -1,0 +1,92 @@
+//! Scenario engine demo: the same workload and algorithms under a dynamic
+//! platform — node failures with repairs, maintenance drains, arrival
+//! bursts and elastic capacity — compared against the static baseline.
+//!
+//! Run: `cargo run --release --example failures [-- --jobs 200 --load 0.7]`
+//! CI smoke mode: `cargo run --example failures -- --smoke`
+//!
+//! Also shows the scenario *spec* path: the hand-written text format is
+//! parsed, validated and run like any built-in.
+
+use dfrs::scenario::{self, Scenario};
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run_scenario, EngineKind, SimConfig};
+use dfrs::util::cli::Args;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let jobs = if smoke { 60 } else { args.usize_or("jobs", 200) };
+    let load = args.f64_or("load", 0.7);
+    let trace = scale_to_load(&generate(args.u64_or("seed", 13), jobs, &LublinParams::default()), load);
+    println!(
+        "workload: {} jobs on {} nodes, offered load {:.2}{}",
+        trace.jobs.len(),
+        trace.nodes,
+        trace.offered_load(),
+        if smoke { " (smoke mode)" } else { "" }
+    );
+
+    let algs = ["EASY", "GreedyPM */per/OPT=MIN/MINVT=600"];
+    let scenarios = ["none", "failures", "drain", "burst", "elastic"];
+    println!(
+        "\n{:<40} {:<10} {:>11} {:>9} {:>9} {:>10}",
+        "algorithm", "scenario", "max-stretch", "interrupt", "pmtn/job", "avail-util"
+    );
+    for alg in algs {
+        for name in scenarios {
+            let scn = scenario::builtin(name, &trace).map_err(anyhow::Error::msg)?;
+            scn.validate(trace.nodes).map_err(anyhow::Error::msg)?;
+            let mut policy = make_policy(alg, 600.0)?;
+            let r = run_scenario(
+                &trace,
+                policy.as_mut(),
+                SimConfig::default(),
+                Box::new(dfrs::alloc::RustSolver),
+                EngineKind::Indexed,
+                &scn,
+            );
+            println!(
+                "{:<40} {:<10} {:>11.1} {:>9} {:>9.2} {:>10.3}",
+                alg, name, r.max_stretch, r.interrupted_jobs, r.preempt_per_job, r.avail_utilization
+            );
+        }
+    }
+
+    // The declarative text format: a morning rack outage plus a burst.
+    let spec = "\
+name = rack-outage
+fail   node=0 at=2000 until=20000
+fail   node=1 at=2000 until=20000
+drain  node=2 at=1000 until=30000
+burst  factor=3 from=0 until=10000
+";
+    let custom: Scenario = dfrs::scenario::spec::parse(spec).map_err(anyhow::Error::msg)?;
+    custom.validate(trace.nodes).map_err(anyhow::Error::msg)?;
+    let mut policy = make_policy("GreedyPM */per/OPT=MIN/MINVT=600", 600.0)?;
+    let r = run_scenario(
+        &trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(dfrs::alloc::RustSolver),
+        EngineKind::Indexed,
+        &custom,
+    );
+    println!(
+        "\nspec-file scenario {:?}: {} events, {} modulators -> max stretch {:.1}, \
+         {} interruptions, avail-util {:.3}",
+        custom.name,
+        custom.events.len(),
+        custom.arrivals.len(),
+        r.max_stretch,
+        r.interrupted_jobs,
+        r.avail_utilization
+    );
+    println!(
+        "\ntakeaway: DFRS absorbs platform dynamics by requeueing and re-packing;\n\
+         batch scheduling pays for every disturbance with queue-wide delays."
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Scenario-engine benchmark: indexed vs reference (seed full-scan) event
+//! loop on a 1000-job Lublin trace under a failure/repair scenario, plus
+//! the empty-scenario baseline. Verifies bit-identical SimResults between
+//! the engines in every case and writes `BENCH_scenario_engine.json` at the
+//! repo root.
+//!
+//! Run: `cargo bench --bench scenario_engine [-- --jobs 1000 --seed 7]`
+//! (`--quick` drops to 300 jobs for a smoke run).
+
+use dfrs::alloc::RustSolver;
+use dfrs::scenario::{builtin, Scenario};
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run_scenario, EngineKind, SimConfig, SimResult};
+use dfrs::util::cli::Args;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+use dfrs::workload::Trace;
+use std::time::Instant;
+
+const ALG: &str = "Greedy */OPT=MIN";
+
+fn timed(trace: &Trace, engine: EngineKind, scenario: &Scenario) -> (f64, SimResult) {
+    let mut policy = make_policy(ALG, 600.0).expect("policy");
+    let t0 = Instant::now();
+    let r = run_scenario(
+        trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        engine,
+        scenario,
+    );
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Bit-level agreement of the metrics the acceptance criteria name.
+fn bit_identical(a: &SimResult, b: &SimResult) -> bool {
+    let f = |x: f64| x.to_bits();
+    f(a.max_stretch) == f(b.max_stretch)
+        && f(a.avg_stretch) == f(b.avg_stretch)
+        && f(a.underutil_area) == f(b.underutil_area)
+        && f(a.gb_moved) == f(b.gb_moved)
+        && a.preemptions == b.preemptions
+        && a.migrations == b.migrations
+        && a.interrupted_jobs == b.interrupted_jobs
+        && f(a.avail_node_seconds) == f(b.avail_node_seconds)
+        && f(a.makespan) == f(b.makespan)
+        && a.jobs.iter().zip(&b.jobs).all(|(x, y)| {
+            f(x.vt) == f(y.vt) && x.completion.map(f) == y.completion.map(f)
+        })
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(argv);
+    let jobs = if args.flag("quick") { 300 } else { args.usize_or("jobs", 1000) };
+    let seed = args.u64_or("seed", 7);
+    let base = scale_to_load(&generate(seed, jobs, &LublinParams::default()), 0.7);
+    let nodes = base.nodes;
+    println!("== scenario-engine benchmark: indexed vs seed loop under platform dynamics ==");
+    println!("trace: lublin seed={seed}, {jobs} jobs x {nodes} nodes @ load 0.7; policy: {ALG}\n");
+
+    let failures = builtin("failures", &base).expect("failures scenario");
+    let cases: Vec<(&str, Scenario)> =
+        vec![("empty", Scenario::default()), ("failure-repair", failures)];
+    let mut entries = Vec::new();
+    let mut headline = f64::NAN;
+    let mut all_identical = true;
+    for (label, scenario) in &cases {
+        let (t_ref, r_ref) = timed(&base, EngineKind::Reference, scenario);
+        let (t_idx, r_idx) = timed(&base, EngineKind::Indexed, scenario);
+        let speedup = t_ref / t_idx.max(1e-12);
+        let identical = bit_identical(&r_ref, &r_idx);
+        all_identical &= identical;
+        if *label == "failure-repair" {
+            headline = speedup;
+        }
+        println!(
+            "{label:<15} seed engine {t_ref:>8.3}s  indexed {t_idx:>8.3}s  speedup {speedup:>6.2}x  \
+             bit-identical: {identical}  interrupted: {}",
+            r_idx.interrupted_jobs
+        );
+        entries.push(format!(
+            "{{\"label\": \"{label}\", \"seed_engine_s\": {t_ref:.4}, \
+             \"indexed_engine_s\": {t_idx:.4}, \"speedup\": {speedup:.2}, \
+             \"bit_identical\": {identical}, \"max_stretch\": {:.6}, \
+             \"interrupted_jobs\": {}, \"avail_node_seconds\": {:.0}}}",
+            r_idx.max_stretch, r_idx.interrupted_jobs, r_idx.avail_node_seconds
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"scenario_engine\",\n  \"algorithm\": \"{ALG}\",\n  \
+         \"trace\": {{\"generator\": \"lublin\", \"jobs\": {jobs}, \"nodes\": {nodes}, \
+         \"seed\": {seed}, \"load\": 0.7}},\n  \"runs\": [\n    {}\n  ],\n  \
+         \"speedup\": {headline:.2},\n  \"speedup_note\": \"headline = failure-repair case; \
+         scenario events must not erode the indexed engine's advantage\",\n  \
+         \"bit_identical\": {all_identical}\n}}\n",
+        entries.join(",\n    ")
+    );
+    let out =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scenario_engine.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+    if !all_identical {
+        eprintln!("ERROR: engines diverged under a scenario — see tests/engine_equivalence.rs");
+        std::process::exit(1);
+    }
+}

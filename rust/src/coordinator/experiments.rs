@@ -14,10 +14,11 @@
 
 use crate::bound::max_stretch_lower_bound;
 use crate::metrics::{print_table, TableRow};
+use crate::scenario;
 use crate::sched::registry::{
     best_algorithms, fig1_algorithms, make_policy, table2_algorithms, table3_algorithms,
 };
-use crate::sim::{run, SimConfig, SimResult};
+use crate::sim::{run, run_scenario, EngineKind, SimConfig, SimResult};
 use crate::util::cli::Args;
 use crate::util::stats::Summary;
 use crate::workload::{hpc2n, lublin, scale, swf, Trace};
@@ -102,6 +103,14 @@ impl BoundCache {
     }
 }
 
+fn parse_engine(name: &str) -> Result<EngineKind> {
+    match name {
+        "indexed" => Ok(EngineKind::Indexed),
+        "reference" | "seed" => Ok(EngineKind::Reference),
+        other => anyhow::bail!("unknown engine {other:?} (indexed | reference)"),
+    }
+}
+
 fn run_alg(name: &str, trace: &Trace, period: f64) -> Result<SimResult> {
     let mut policy = make_policy(name, period)?;
     // Sweep harnesses use the Rust reference solver: it is numerically
@@ -162,20 +171,34 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 1);
     let jobs = args.usize_or("jobs", 400);
     let period = args.f64_or("period", 600.0);
+    let engine = parse_engine(&args.str_or("engine", "indexed"))?;
     let trace = load_workload(args, seed, jobs)?;
     let trace = match args.get("load") {
         Some(l) => scale::scale_to_load(&trace, l.parse()?),
         None => trace,
     };
+    let scn_name = args.str_or("scenario", "none");
+    let scn = scenario::load(&scn_name, &trace).map_err(|e| anyhow::anyhow!(e))?;
+    scn.validate(trace.nodes).map_err(|e| anyhow::anyhow!("scenario {scn_name:?}: {e}"))?;
     let mut policy = make_policy(&alg, period)?;
     let solver = crate::runtime::solver_by_name(&args.str_or("solver", "auto"))?;
     let t0 = std::time::Instant::now();
-    let r = run(&trace, policy.as_mut(), SimConfig::default(), solver);
+    let r = run_scenario(&trace, policy.as_mut(), SimConfig::default(), solver, engine, &scn);
     let wall = t0.elapsed().as_secs_f64();
     println!("algorithm          : {alg}");
     println!("jobs               : {}", trace.jobs.len());
     println!("nodes              : {}", trace.nodes);
     println!("offered load       : {:.3}", trace.offered_load());
+    if !scn.is_empty() {
+        println!(
+            "scenario           : {} ({} events, {} arrival modulators)",
+            scn.name,
+            scn.events.len(),
+            scn.arrivals.len()
+        );
+        println!("interrupted jobs   : {}", r.interrupted_jobs);
+        println!("avail utilization  : {:.3}", r.avail_utilization);
+    }
     println!("max stretch        : {:.2}", r.max_stretch);
     println!("avg stretch        : {:.2}", r.avg_stretch);
     println!("norm underutil     : {:.3}", r.norm_underutil);
@@ -255,6 +278,7 @@ fn cmd_bench_target(args: &Args) -> Result<()> {
         "fig4" => bench_fig4(args),
         "fig9" => bench_fig9(args),
         "ablation" => bench_ablation(args),
+        "scenarios" => bench_scenarios(args),
         "all" => {
             for t in ["table2", "table3", "table4", "fig1", "fig2", "fig3", "fig4", "fig9"] {
                 let mut a2 = args.clone();
@@ -564,6 +588,117 @@ pub fn bench_fig9(args: &Args) -> Result<()> {
     write_csv(&dir.join("fig9.csv"), "period,gb_per_sec", &csv)
 }
 
+/// The algorithm sweep of the scenario grid: the batch baseline, a
+/// preemptive greedy, and the paper's recommended algorithm.
+fn scenario_grid_algorithms() -> Vec<&'static str> {
+    vec!["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"]
+}
+
+/// Scenario grid (ROADMAP: "as many scenarios as you can imagine"): run the
+/// algorithm sweep against every built-in platform scenario — failures,
+/// drains, arrival bursts, diurnal waves and elastic capacity — on scaled
+/// synthetic traces. One table row per (algorithm, scenario) with stretch,
+/// interruption counts and availability-weighted utilization; the "none"
+/// row reproduces the static-platform numbers exactly.
+///
+/// The grid is algorithm × scenario × trace and runs on the rayon pool like
+/// every other harness: scenarios are immutable data compiled per cell, so
+/// the output is byte-identical at any `--workers` count (DESIGN.md
+/// §Determinism under rayon).
+pub fn bench_scenarios(args: &Args) -> Result<()> {
+    let s = Scale::from_args(args);
+    let dir = out_dir(args);
+    let load = args.f64_or("load", 0.7);
+    let traces: Vec<Trace> = (0..s.traces)
+        .map(|i| {
+            scale::scale_to_load(
+                &lublin::generate(s.seed + i as u64, s.jobs, &lublin::LublinParams::default()),
+                load,
+            )
+        })
+        .collect();
+    // The whole built-in catalogue, so the CSV and --scenario can't drift.
+    let scenario_names = scenario::BUILTIN_NAMES;
+    let algs = scenario_grid_algorithms();
+    let mut csv = Vec::new();
+    println!(
+        "\nScenario grid — platform dynamics ({} traces x {} jobs, load {load})",
+        traces.len(),
+        s.jobs
+    );
+    println!(
+        "{:<40} {:<10} {:>11} {:>11} {:>9} {:>9} {:>10}",
+        "Algorithm", "scenario", "max-stretch", "avg-stretch", "interrupt", "pmtn/job", "avail-util"
+    );
+    // Flattened alg × scenario × trace grid, row-major, in parallel.
+    let (n_algs, n_scn, n_tr) = (algs.len(), scenario_names.len(), traces.len());
+    let grid: Vec<(usize, usize, usize)> = (0..n_algs)
+        .flat_map(|a| (0..n_scn).flat_map(move |sc| (0..n_tr).map(move |k| (a, sc, k))))
+        .collect();
+    let cells: Vec<[f64; 5]> = par_grid(&grid, |_, &(a, sc, k)| {
+        let trace = &traces[k];
+        let scn = scenario::builtin(scenario_names[sc], trace).map_err(|e| anyhow::anyhow!(e))?;
+        let mut policy = make_policy(algs[a], s.period)?;
+        let r = run_scenario(
+            trace,
+            policy.as_mut(),
+            SimConfig::default(),
+            Box::new(crate::alloc::RustSolver),
+            EngineKind::Indexed,
+            &scn,
+        );
+        Ok([
+            r.max_stretch,
+            r.avg_stretch,
+            r.interrupted_jobs as f64,
+            r.preempt_per_job,
+            r.avail_utilization,
+        ])
+    })?;
+    let per_scn = traces.len();
+    let per_alg = scenario_names.len() * per_scn;
+    for (a, alg) in algs.iter().enumerate() {
+        for (sc, scn_name) in scenario_names.iter().enumerate() {
+            let mut cols = [
+                Summary::new(),
+                Summary::new(),
+                Summary::new(),
+                Summary::new(),
+                Summary::new(),
+            ];
+            for k in 0..per_scn {
+                let cell = &cells[a * per_alg + sc * per_scn + k];
+                for (c, &v) in cols.iter_mut().zip(cell.iter()) {
+                    c.add(v);
+                }
+            }
+            println!(
+                "{:<40} {:<10} {:>11.1} {:>11.2} {:>9.1} {:>9.2} {:>10.3}",
+                alg,
+                scn_name,
+                cols[0].mean(),
+                cols[1].mean(),
+                cols[2].mean(),
+                cols[3].mean(),
+                cols[4].mean()
+            );
+            csv.push(format!(
+                "{alg},{scn_name},{:.4},{:.4},{:.2},{:.4},{:.4}",
+                cols[0].mean(),
+                cols[1].mean(),
+                cols[2].mean(),
+                cols[3].mean(),
+                cols[4].mean()
+            ));
+        }
+    }
+    write_csv(
+        &dir.join("scenarios.csv"),
+        "algorithm,scenario,max_stretch,avg_stretch,interrupted,pmtn_job,avail_util",
+        &csv,
+    )
+}
+
 /// Ablations for the design choices DESIGN.md calls out:
 /// (a) Appendix-A parameter sweep — OPT=MIN vs OPT=AVG crossed with the
 ///     remap-limiting rules (none / MINVT / MINFT at 300/600 s);
@@ -744,6 +879,47 @@ mod tests {
             .unwrap();
             assert_eq!(par, serial);
         }
+    }
+
+    #[test]
+    fn scenario_axis_is_deterministic_and_nontrivial() {
+        let t = scale::scale_to_load(
+            &lublin::generate(5, 60, &lublin::LublinParams::default()),
+            0.7,
+        );
+        let scn = crate::scenario::builtin("failures", &t).unwrap();
+        let run_once = || {
+            let mut p = make_policy("GreedyP */OPT=MIN", 600.0).unwrap();
+            run_scenario(
+                &t,
+                p.as_mut(),
+                SimConfig::default(),
+                Box::new(crate::alloc::RustSolver),
+                EngineKind::Indexed,
+                &scn,
+            )
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.max_stretch.to_bits(), b.max_stretch.to_bits());
+        assert_eq!(a.interrupted_jobs, b.interrupted_jobs);
+        assert_eq!(a.avail_node_seconds.to_bits(), b.avail_node_seconds.to_bits());
+        // Failures must actually disturb the run: jobs interrupted, or at
+        // least capacity visibly removed for the outage windows.
+        assert!(
+            a.interrupted_jobs > 0 || a.avail_node_seconds < t.nodes as f64 * a.makespan - 1.0,
+            "failures scenario was a no-op (interrupted {}, avail {})",
+            a.interrupted_jobs,
+            a.avail_node_seconds
+        );
+    }
+
+    #[test]
+    fn parse_engine_accepts_both_engines() {
+        assert!(matches!(parse_engine("indexed").unwrap(), EngineKind::Indexed));
+        assert!(matches!(parse_engine("reference").unwrap(), EngineKind::Reference));
+        assert!(matches!(parse_engine("seed").unwrap(), EngineKind::Reference));
+        assert!(parse_engine("warp").is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The experiment coordinator: CLI dispatch, trace-set construction, and
 //! the per-table / per-figure harnesses that regenerate every table and
-//! figure of the paper's evaluation (§6). See DESIGN.md for the experiment
+//! figure of the paper's evaluation (§6), plus the scenario grid that goes
+//! beyond the paper's static platform. See DESIGN.md for the experiment
 //! index and EXPERIMENTS.md for recorded results.
 
 pub mod experiments;
@@ -25,28 +26,72 @@ COMMANDS
                   --seed S          RNG seed (default 1)
                   --period T        periodic interval seconds (default 600)
                   --solver S        rust | xla | auto (default auto)
+                  --engine E        indexed | reference event loop
+                                    (default indexed; results identical)
+                  --scenario S      platform dynamics: a built-in name
+                                    (none | failures | drain | burst |
+                                    diurnal | elastic | chaos) or a path to
+                                    a scenario spec file (default none)
                   --bound           also compute the offline bound
-  bench TARGET  Regenerate a paper table/figure:
+  bench TARGET  Regenerate a paper table/figure, or run the scenario grid:
                   table2 | table3 | table4 | fig1 | fig2 | fig3 | fig4 |
-                  fig9 | all
+                  fig9 | ablation | scenarios | all
+                  (\"all\" = the paper set; \"scenarios\" runs the platform-
+                  dynamics grid: algorithms x built-in scenarios)
                   --traces N   traces per set (default 5)
                   --jobs N     jobs per synthetic trace (default 200)
                   --seed S     base seed (default 42)
                   --out DIR    write CSVs here (default results/)
+                  --period T   periodic interval seconds (default 600)
+                  --load L     offered load for the scenario grid (default 0.7)
                   --max-period T   fig3/fig4 upper period (default 12000)
                   --full       paper-scale run (100 traces x 1000 jobs)
                   --workers N  grid workers (default: all cores; 1 = serial;
                                results are identical at any worker count)
   bound         Offline max-stretch lower bound for a generated trace
-                  --jobs N --seed S --workload KIND
+                  --jobs N --seed S --workload KIND --swf PATH
   gen           Generate a trace and write SWF to stdout or --out FILE
   list-algs     List all registered algorithm names
   help          This text
+
+Unknown flags are rejected (not silently ignored); run a command with a
+typo'd flag to see the accepted set.
 ";
+
+/// Per-command accepted `--key value` options and bare `--flag` switches.
+/// `run_cli` rejects anything outside these sets with a helpful error
+/// instead of silently ignoring it.
+///
+/// Maintenance note: these sets mirror the `args.*_or`/`args.get` call
+/// sites in `experiments.rs` and the USAGE text above — a flag added to a
+/// harness must be added here (and to USAGE) or it is rejected at
+/// dispatch. `usage_documents_the_new_flags` pins the current set.
+fn check_args(cmd: &str, args: &Args) -> Result<()> {
+    let (opts, flags): (&[&str], &[&str]) = match cmd {
+        "simulate" => (
+            &[
+                "alg", "workload", "swf", "jobs", "load", "seed", "period", "solver", "engine",
+                "scenario",
+            ],
+            &["bound"],
+        ),
+        "bench" => (
+            &["traces", "jobs", "seed", "out", "period", "load", "max-period", "workers"],
+            &["full"],
+        ),
+        "bound" => (&["jobs", "seed", "workload", "swf"], &[]),
+        "gen" => (&["jobs", "seed", "workload", "swf", "out"], &[]),
+        "list-algs" => (&[], &[]),
+        _ => return Ok(()),
+    };
+    args.check_known(opts, flags)
+        .map_err(|e| anyhow::anyhow!("{e}\n(run `dfrs help` for usage)"))
+}
 
 /// Entry point used by `rust/src/main.rs`.
 pub fn run_cli(args: Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    check_args(cmd, &args)?;
     match cmd {
         "simulate" => experiments::cmd_simulate(&args),
         "bench" => experiments::cmd_bench(&args),
@@ -61,6 +106,36 @@ pub fn run_cli(args: Args) -> Result<()> {
         "help" | _ => {
             println!("{USAGE}");
             Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_flags_are_rejected_per_command() {
+        let a = Args::parse(vec!["simulate", "--algo", "EASY"]);
+        let e = run_cli(a).unwrap_err().to_string();
+        assert!(e.contains("unknown option --algo"), "{e}");
+        assert!(e.contains("--alg"), "should list the accepted spelling: {e}");
+
+        let b = Args::parse(vec!["bench", "table2", "--turbo"]);
+        let e = run_cli(b).unwrap_err().to_string();
+        assert!(e.contains("unknown flag --turbo"), "{e}");
+    }
+
+    #[test]
+    fn help_ignores_stray_arguments() {
+        assert!(run_cli(Args::parse(vec!["help", "--whatever"])).is_ok());
+        assert!(run_cli(Args::parse(Vec::<String>::new())).is_ok());
+    }
+
+    #[test]
+    fn usage_documents_the_new_flags() {
+        for needle in ["--engine", "--workers", "--scenario", "scenarios"] {
+            assert!(USAGE.contains(needle), "USAGE must document {needle}");
         }
     }
 }

@@ -39,6 +39,7 @@ pub mod lp;
 pub mod metrics;
 pub mod packing;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod sim;
 pub mod util;

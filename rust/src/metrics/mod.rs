@@ -51,11 +51,21 @@ pub fn print_table(title: &str, rows: &[TableRow]) {
 /// Piecewise-constant demand/utilization series for Figure 2. The engine
 /// tracks only the underutilization integral; this helper replays a result
 /// into a plottable CSV (time, demand, capped demand, utilization).
+///
+/// Degenerate inputs yield degenerate-but-sane output: an empty result or
+/// `samples == 0` returns no rows, a non-finite/non-positive makespan
+/// returns no rows (instead of NaN times), and `samples == 1` is promoted
+/// to two samples so the series always spans `[0, makespan]` rather than
+/// emitting a single t=0 row.
 pub fn figure2_series(result: &SimResult, nodes: usize, samples: usize) -> Vec<(f64, f64, f64)> {
     let horizon = result.makespan;
+    if result.jobs.is_empty() || samples == 0 || !horizon.is_finite() || horizon <= 0.0 {
+        return Vec::new();
+    }
+    let samples = samples.max(2);
     let mut out = Vec::with_capacity(samples);
     for k in 0..samples {
-        let t = horizon * k as f64 / (samples - 1).max(1) as f64;
+        let t = horizon * k as f64 / (samples - 1) as f64;
         let mut demand = 0.0;
         let mut util = 0.0;
         for j in &result.jobs {
@@ -123,5 +133,30 @@ mod tests {
         assert!((series[1].1 - 1.0).abs() < 1e-9);
         // Demand never exceeds capacity after capping.
         assert!(series.iter().all(|&(_, d, _)| d <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn figure2_series_degenerate_inputs_stay_finite() {
+        let t = simple_trace();
+        let r = run(&t, &mut BatchPolicy::fcfs(), SimConfig::default(), Box::new(RustSolver));
+        // samples == 0: no rows.
+        assert!(figure2_series(&r, 1, 0).is_empty());
+        // samples == 1: promoted to a [0, makespan] pair, no division by
+        // zero, all values finite.
+        let s1 = figure2_series(&r, 1, 1);
+        assert_eq!(s1.len(), 2);
+        assert!((s1[0].0 - 0.0).abs() < 1e-12);
+        assert!((s1[1].0 - r.makespan).abs() < 1e-9);
+        assert!(s1.iter().all(|&(t, d, u)| t.is_finite() && d.is_finite() && u.is_finite()));
+        // Empty result set: no rows instead of NaNs.
+        let mut empty = r.clone();
+        empty.jobs.clear();
+        assert!(figure2_series(&empty, 1, 10).is_empty());
+        // Pathological makespan: no rows instead of NaN times.
+        let mut bad = r.clone();
+        bad.makespan = f64::NAN;
+        assert!(figure2_series(&bad, 1, 10).is_empty());
+        bad.makespan = 0.0;
+        assert!(figure2_series(&bad, 1, 10).is_empty());
     }
 }

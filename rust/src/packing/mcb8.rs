@@ -52,12 +52,34 @@ pub enum SortKey {
 /// Attempt to pack all jobs; returns None if any task cannot be placed.
 /// Uses the paper's `SortKey::Max` ordering.
 pub fn pack(jobs: &[PackJob], nodes: usize) -> Option<PackResult> {
-    pack_with_key(jobs, nodes, SortKey::Max)
+    pack_masked(jobs, nodes, SortKey::Max, None)
 }
 
 /// `pack` with an explicit list-ordering key (ablation entry point).
 pub fn pack_with_key(jobs: &[PackJob], nodes: usize, sort_key: SortKey) -> Option<PackResult> {
-    let mut state: Vec<NodeState> = (0..nodes).map(|_| NodeState { cpu: 1.0, mem: 1.0 }).collect();
+    pack_masked(jobs, nodes, sort_key, None)
+}
+
+/// `pack` with an availability mask (scenario engine): `blocked[n]` nodes
+/// get zero capacity, so no task — pinned or free — lands on a down or
+/// draining node. `None` (or an all-false mask) is the static platform and
+/// packs identically to the pre-scenario code.
+pub fn pack_masked(
+    jobs: &[PackJob],
+    nodes: usize,
+    sort_key: SortKey,
+    blocked: Option<&[bool]>,
+) -> Option<PackResult> {
+    let is_blocked = |n: usize| blocked.map(|b| b[n]).unwrap_or(false);
+    let mut state: Vec<NodeState> = (0..nodes)
+        .map(|n| {
+            if is_blocked(n) {
+                NodeState { cpu: 0.0, mem: 0.0 }
+            } else {
+                NodeState { cpu: 1.0, mem: 1.0 }
+            }
+        })
+        .collect();
     let mut placements: Vec<(usize, Vec<NodeId>)> =
         jobs.iter().map(|j| (j.id, Vec::with_capacity(j.tasks as usize))).collect();
 
@@ -233,6 +255,24 @@ mod tests {
             PackJob { id: 1, tasks: 1, cpu_req: 0.8, mem: 0.5, pinned: Some(vec![0]) },
         ];
         assert!(pack(&jobs, 2).is_none());
+    }
+
+    #[test]
+    fn masked_nodes_take_no_tasks() {
+        let jobs = vec![job(0, 2, 0.4, 0.4)];
+        let blocked = vec![true, false, true];
+        let r = pack_masked(&jobs, 3, SortKey::Max, Some(&blocked)).expect("fits on node 1");
+        assert_eq!(r.placements[0].1, vec![1, 1]);
+        // A pinned placement on a blocked node is infeasible at any yield.
+        let pinned =
+            vec![PackJob { id: 0, tasks: 1, cpu_req: 0.0, mem: 0.1, pinned: Some(vec![0]) }];
+        assert!(pack_masked(&pinned, 3, SortKey::Max, Some(&blocked)).is_none());
+        // Everything blocked: nothing fits.
+        assert!(pack_masked(&jobs, 3, SortKey::Max, Some(&[true, true, true][..])).is_none());
+        // An all-false mask is the static platform.
+        let a = pack_masked(&jobs, 3, SortKey::Max, Some(&[false, false, false][..]));
+        let b = pack(&jobs, 3);
+        assert_eq!(a.unwrap().placements, b.unwrap().placements);
     }
 
     #[test]

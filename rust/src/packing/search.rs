@@ -3,7 +3,7 @@
 //! MINVT/MINFT pinning and lowest-priority-job dropping when no yield is
 //! feasible.
 
-use super::mcb8::{pack, PackJob};
+use super::mcb8::{pack_masked, PackJob, SortKey};
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
 
@@ -54,8 +54,16 @@ fn build_pack_jobs(sim: &Sim, candidates: &[JobId], y: f64, pin: Option<PinRule>
         .iter()
         .map(|&j| {
             let spec = &sim.jobs[j].spec;
+            // A job whose placement touches a down/draining node is never
+            // pinned: releasing it lets the packing migrate it off (this is
+            // how MCB8-family policies evacuate a draining node).
             let pinned = match pin {
-                Some(rule) if rule.pins(sim, j) => Some(sim.jobs[j].placement.clone()),
+                Some(rule)
+                    if rule.pins(sim, j)
+                        && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
+                {
+                    Some(sim.jobs[j].placement.clone())
+                }
                 _ => None,
             };
             PackJob {
@@ -76,6 +84,9 @@ pub fn mcb8_allocate(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
     candidates.extend(sim.pending());
     sort_by_priority(sim, &mut candidates); // descending priority
     let nodes = sim.cluster.nodes;
+    // Scenario engine: down/draining nodes receive no tasks. All-false on a
+    // static platform, where the masked pack is identical to the plain one.
+    let blocked: Vec<bool> = (0..nodes).map(|n| !sim.cluster.can_place(n)).collect();
     let mut dropped = Vec::new();
 
     loop {
@@ -91,7 +102,7 @@ pub fn mcb8_allocate(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
             for (pj, need) in pack_jobs.iter_mut().zip(&needs) {
                 pj.cpu_req = (need * y).min(1.0);
             }
-            pack(&pack_jobs, nodes)
+            pack_masked(&pack_jobs, nodes, SortKey::Max, Some(&blocked))
         };
 
         // Fast path: everything fits at full yield.
@@ -209,6 +220,23 @@ mod tests {
         let out = mcb8_allocate(&sim, Some(PinRule::MinFt(600.0)));
         let entry = out.mapping.iter().find(|(j, _)| *j == 0).unwrap();
         assert_eq!(entry.1, vec![1], "MINFT pins on flow time");
+    }
+
+    #[test]
+    fn allocation_avoids_unavailable_nodes_and_releases_their_pins() {
+        let mut sim = sim_with(vec![job(0, 1, 0.5, 0.3), job(1, 1, 0.5, 0.3)], 3);
+        sim.start_job(0, vec![0]);
+        sim.jobs[0].vt = 10.0; // would be pinned under MinVt(600) when healthy
+        sim.now = 50.0;
+        sim.cluster.draining[0] = true;
+        let out = mcb8_allocate(&sim, Some(PinRule::MinVt(600.0)));
+        assert!(out.dropped.is_empty());
+        assert_eq!(out.mapping.len(), 2);
+        for (j, pl) in &out.mapping {
+            for &n in pl {
+                assert_ne!(n, 0, "job {j} placed on the draining node");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Arrival-rate modulation: deterministic time-warps of a trace's
+//! submission process.
+//!
+//! A modulator is a rate-multiplier function `m(t)` over *original*
+//! submission time. [`modulate`] divides each interarrival gap by the rate
+//! at the gap's midpoint, so `m > 1` compresses arrivals (bursts raise the
+//! instantaneous offered load) and `m < 1` stretches them. The warp is
+//! monotone — the trace stays sorted, which both engines' submission
+//! cursors rely on — and touches nothing but submission times, so it
+//! composes with any generator or SWF log.
+
+use super::Scenario;
+use crate::workload::Trace;
+
+/// Combined rate multipliers are floored here so the warp stays finite and
+/// strictly monotone even when modulators multiply out near zero.
+pub const MIN_RATE: f64 = 0.05;
+
+/// One arrival-rate modulator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMod {
+    /// Multiply the arrival rate by `factor` for original submission times
+    /// in `[from, until)`.
+    Burst { from: f64, until: f64, factor: f64 },
+    /// Sinusoidal day/night wave:
+    /// `rate(t) = 1 + amplitude · sin(2π (t − phase) / period)`.
+    Diurnal { period: f64, amplitude: f64, phase: f64 },
+}
+
+impl ArrivalMod {
+    /// Rate multiplier at original time `t`.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            ArrivalMod::Burst { from, until, factor } => {
+                if t >= from && t < until {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+            ArrivalMod::Diurnal { period, amplitude, phase } => {
+                1.0 + amplitude * (std::f64::consts::TAU * (t - phase) / period).sin()
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ArrivalMod::Burst { from, until, factor } => {
+                if !(factor > 0.0 && factor.is_finite()) {
+                    return Err(format!("burst factor {factor} must be positive and finite"));
+                }
+                if !(until > from) {
+                    return Err(format!("burst window [{from}, {until}) is empty"));
+                }
+                Ok(())
+            }
+            ArrivalMod::Diurnal { period, amplitude, .. } => {
+                if !(period > 0.0 && period.is_finite()) {
+                    return Err(format!("diurnal period {period} must be positive and finite"));
+                }
+                if !(0.0..1.0).contains(&amplitude) {
+                    return Err(format!(
+                        "diurnal amplitude {amplitude} must be in [0, 1) so the rate stays positive"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Warp the trace's submission times under `scenario`'s modulators. The
+/// first job keeps its submission time; every later gap is divided by the
+/// combined rate at the gap's original-time midpoint. Processing times,
+/// resource needs and the platform are untouched.
+pub fn modulate(scenario: &Scenario, trace: &Trace) -> Trace {
+    let mut out = trace.clone();
+    if scenario.arrivals.is_empty() || out.jobs.is_empty() {
+        return out;
+    }
+    let mut prev_orig = out.jobs[0].submit;
+    let mut prev_new = prev_orig;
+    for job in out.jobs.iter_mut() {
+        let t = job.submit;
+        let gap = (t - prev_orig).max(0.0);
+        let rate = scenario.rate_at(0.5 * (t + prev_orig));
+        let nt = prev_new + gap / rate;
+        prev_orig = t;
+        prev_new = nt;
+        job.submit = nt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Job;
+
+    fn trace(submits: &[f64]) -> Trace {
+        let jobs = submits
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| Job {
+                id: i as u32,
+                submit: s,
+                tasks: 1,
+                cpu_need: 0.5,
+                mem: 0.2,
+                proc_time: 300.0,
+            })
+            .collect();
+        Trace { jobs, nodes: 8, cores_per_node: 4, node_mem_gb: 4.0 }
+    }
+
+    #[test]
+    fn burst_compresses_only_the_window() {
+        let t = trace(&[0.0, 100.0, 200.0, 1000.0, 1100.0]);
+        // Double the rate for original times in [50, 250).
+        let s = Scenario::new("b").burst(50.0, 250.0, 2.0);
+        let m = s.modulate_arrivals(&t);
+        // Gaps 0->100 (mid 50) and 100->200 (mid 150) halve; later gaps are
+        // outside the window and keep their length.
+        assert!((m.jobs[0].submit - 0.0).abs() < 1e-9);
+        assert!((m.jobs[1].submit - 50.0).abs() < 1e-9);
+        assert!((m.jobs[2].submit - 100.0).abs() < 1e-9);
+        assert!((m.jobs[3].submit - 900.0).abs() < 1e-9);
+        assert!((m.jobs[4].submit - 1000.0).abs() < 1e-9);
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn warp_preserves_order_under_any_modulators() {
+        let t = trace(&[0.0, 10.0, 10.0, 500.0, 2000.0, 2000.0, 9000.0]);
+        let s = Scenario::new("d")
+            .diurnal(3600.0, 0.9, 120.0)
+            .burst(0.0, 5000.0, 7.0)
+            .burst(400.0, 600.0, 0.01); // floors at MIN_RATE
+        let m = s.modulate_arrivals(&t);
+        assert!(m.jobs.windows(2).all(|w| w[0].submit <= w[1].submit));
+        assert!(m.jobs.iter().all(|j| j.submit.is_finite()));
+        assert!(m.validate().is_ok());
+    }
+
+    #[test]
+    fn empty_modulators_return_the_trace_unchanged() {
+        let t = trace(&[0.0, 70.0, 300.0]);
+        let m = Scenario::default().modulate_arrivals(&t);
+        for (a, b) in t.jobs.iter().zip(&m.jobs) {
+            assert_eq!(a.submit.to_bits(), b.submit.to_bits());
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_around_one() {
+        let d = ArrivalMod::Diurnal { period: 86_400.0, amplitude: 0.5, phase: 0.0 };
+        assert!((d.rate_at(0.0) - 1.0).abs() < 1e-12);
+        assert!((d.rate_at(21_600.0) - 1.5).abs() < 1e-9); // quarter period
+        assert!((d.rate_at(64_800.0) - 0.5).abs() < 1e-9); // three quarters
+        assert!(d.validate().is_ok());
+    }
+}

@@ -1,0 +1,398 @@
+//! Scenario engine: declarative cluster dynamics layered on the simulator.
+//!
+//! The paper (§5) evaluates every algorithm on a static, always-healthy
+//! cluster. Real platforms are not static: nodes fail and are repaired,
+//! operators drain machines for maintenance, elastic deployments grow and
+//! shrink capacity (Multiverse-style provisioning), and arrival processes
+//! carry bursts and diurnal waves. A [`Scenario`] describes those dynamics
+//! declaratively — as timed [`ClusterEvent`]s plus arrival-rate modulators
+//! ([`ArrivalMod`]) — and `sim::run_scenario` compiles them onto the event
+//! calendar of either engine.
+//!
+//! Event semantics (DESIGN.md §Scenario engine):
+//! - **Fail(n)**: node `n` goes down abruptly. Every job with a task on it
+//!   is *killed*: its in-memory image is lost (no storage write), its
+//!   virtual time resets to zero, and it is requeued as pending; its next
+//!   start pays the rescheduling penalty. Down nodes accept no placements
+//!   and do not count as capacity.
+//! - **Repair(n)**: node `n` is healthy again.
+//! - **DrainStart(n) / DrainEnd(n)**: maintenance drain. Running tasks stay
+//!   (and still count as capacity), but no *new* task may be placed on the
+//!   node; MCB8-family remaps migrate jobs off a draining node because the
+//!   pin rules release jobs whose placement touches one.
+//! - **Shrink(k) / Grow(k)**: elastic capacity. Shrink takes the `k`
+//!   highest-indexed up nodes offline *gracefully* — jobs there are
+//!   preempted (image saved, normal preemption accounting) and can resume
+//!   elsewhere. Grow revives the shrunk nodes first (so elastic legs pair
+//!   up and never consume the revival a scheduled Repair expects), then
+//!   other down nodes lowest-index-first, then extends the cluster with
+//!   brand-new nodes.
+//!
+//! Scenarios come from three places: programmatic builders on [`Scenario`],
+//! the text format parsed by [`spec::parse`], and the [`builtin`] catalogue
+//! used by the experiment grid's `--scenario` axis. An empty scenario is
+//! guaranteed to reproduce the static-platform results bit for bit
+//! (`tests/engine_equivalence.rs`).
+
+pub mod arrivals;
+pub mod spec;
+
+pub use arrivals::ArrivalMod;
+
+use crate::sim::NodeId;
+use crate::workload::Trace;
+
+/// One timed platform mutation. See the module docs for semantics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClusterEvent {
+    /// Abrupt node failure: kills and requeues the jobs on the node.
+    Fail(NodeId),
+    /// Failed node comes back.
+    Repair(NodeId),
+    /// Maintenance drain begins: no new placements on the node.
+    DrainStart(NodeId),
+    /// Drain lifted.
+    DrainEnd(NodeId),
+    /// Gracefully remove `k` nodes (highest-index up nodes first).
+    Shrink(usize),
+    /// Add `k` nodes (revive down nodes, then extend the pool).
+    Grow(usize),
+}
+
+/// A declarative platform scenario: timed cluster events plus arrival-rate
+/// modulation. `Scenario::default()` is the empty scenario (static,
+/// always-healthy platform — today's behaviour, bit for bit).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// `(time, event)` pairs in declaration order; [`Scenario::timeline`]
+    /// sorts them by time (stable, so same-instant events keep declaration
+    /// order — Fail-then-Repair at one instant is a no-op outage).
+    pub events: Vec<(f64, ClusterEvent)>,
+    pub arrivals: Vec<ArrivalMod>,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>) -> Self {
+        Scenario { name: name.into(), events: Vec::new(), arrivals: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.arrivals.is_empty()
+    }
+
+    // ----- Builders ----------------------------------------------------
+
+    /// Node failure at `at`, with an optional automatic repair.
+    pub fn fail(mut self, node: NodeId, at: f64, repair_at: Option<f64>) -> Self {
+        self.events.push((at, ClusterEvent::Fail(node)));
+        if let Some(r) = repair_at {
+            self.events.push((r, ClusterEvent::Repair(node)));
+        }
+        self
+    }
+
+    /// Maintenance drain from `at`, optionally lifted at `until`.
+    pub fn drain(mut self, node: NodeId, at: f64, until: Option<f64>) -> Self {
+        self.events.push((at, ClusterEvent::DrainStart(node)));
+        if let Some(u) = until {
+            self.events.push((u, ClusterEvent::DrainEnd(node)));
+        }
+        self
+    }
+
+    /// Elastic capacity: remove `count` nodes at `at`.
+    pub fn shrink(mut self, count: usize, at: f64) -> Self {
+        self.events.push((at, ClusterEvent::Shrink(count)));
+        self
+    }
+
+    /// Elastic capacity: add `count` nodes at `at`.
+    pub fn grow(mut self, count: usize, at: f64) -> Self {
+        self.events.push((at, ClusterEvent::Grow(count)));
+        self
+    }
+
+    /// Multiply the arrival rate by `factor` for submissions originally in
+    /// `[from, until)`.
+    pub fn burst(mut self, from: f64, until: f64, factor: f64) -> Self {
+        self.arrivals.push(ArrivalMod::Burst { from, until, factor });
+        self
+    }
+
+    /// Sinusoidal day/night arrival wave.
+    pub fn diurnal(mut self, period: f64, amplitude: f64, phase: f64) -> Self {
+        self.arrivals.push(ArrivalMod::Diurnal { period, amplitude, phase });
+        self
+    }
+
+    // ----- Compilation -------------------------------------------------
+
+    /// Timed cluster events sorted by time. The sort is stable, so events
+    /// declared at the same instant apply in declaration order.
+    pub fn timeline(&self) -> Vec<(f64, ClusterEvent)> {
+        let mut t = self.events.clone();
+        t.sort_by(|a, b| a.0.total_cmp(&b.0));
+        t
+    }
+
+    pub fn modulates_arrivals(&self) -> bool {
+        !self.arrivals.is_empty()
+    }
+
+    /// Combined arrival-rate multiplier at original time `t` (product over
+    /// all modulators, floored at [`arrivals::MIN_RATE`]).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut m = 1.0;
+        for a in &self.arrivals {
+            m *= a.rate_at(t);
+        }
+        m.max(arrivals::MIN_RATE)
+    }
+
+    /// Apply the arrival modulators to a trace (see [`arrivals::modulate`]).
+    pub fn modulate_arrivals(&self, trace: &Trace) -> Trace {
+        arrivals::modulate(self, trace)
+    }
+
+    /// Check the scenario against a platform of `nodes` nodes.
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        for (t, ev) in &self.events {
+            if !t.is_finite() || *t < 0.0 {
+                return Err(format!("event time {t} must be finite and non-negative"));
+            }
+            match ev {
+                ClusterEvent::Fail(n)
+                | ClusterEvent::Repair(n)
+                | ClusterEvent::DrainStart(n)
+                | ClusterEvent::DrainEnd(n) => {
+                    if *n >= nodes {
+                        return Err(format!(
+                            "event names node {n} but the cluster has {nodes} nodes"
+                        ));
+                    }
+                }
+                ClusterEvent::Shrink(c) | ClusterEvent::Grow(c) => {
+                    if *c == 0 {
+                        return Err("shrink/grow count must be positive".into());
+                    }
+                    if matches!(ev, ClusterEvent::Shrink(_)) && *c >= nodes {
+                        return Err(format!(
+                            "shrink of {c} nodes would empty the {nodes}-node cluster"
+                        ));
+                    }
+                }
+            }
+        }
+        for a in &self.arrivals {
+            a.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Names of the built-in scenarios (the experiment grid's scenario axis).
+pub const BUILTIN_NAMES: &[&str] =
+    &["none", "failures", "drain", "burst", "diurnal", "elastic", "chaos"];
+
+/// Built-in named scenarios. Event times are placed relative to the trace's
+/// arrival span and node counts relative to its cluster size, so the same
+/// name yields a comparable disturbance on any workload. Every disturbance
+/// is eventually lifted (failed nodes repaired, drains ended, shrunk
+/// capacity regrown), so runs always terminate.
+pub fn builtin(name: &str, trace: &Trace) -> Result<Scenario, String> {
+    let nodes = trace.nodes;
+    let first = trace.jobs.first().map(|j| j.submit).unwrap_or(0.0);
+    let last = trace.jobs.last().map(|j| j.submit).unwrap_or(0.0);
+    let span = (last - first).max(3600.0);
+    let at = |f: f64| first + f * span;
+    match name {
+        "none" => Ok(Scenario::new("none")),
+        "failures" => {
+            // ~1/8 of the nodes fail, staggered through the middle of the
+            // run; each is repaired well before arrivals end.
+            let k = (nodes / 8).max(1);
+            let stride = nodes / k;
+            let mut s = Scenario::new("failures");
+            for i in 0..k {
+                let n = i * stride;
+                s = s.fail(n, at(0.25) + i as f64 * 120.0, Some(at(0.6) + i as f64 * 120.0));
+            }
+            Ok(s)
+        }
+        "drain" => {
+            let k = (nodes / 8).max(1);
+            let mut s = Scenario::new("drain");
+            for n in 0..k {
+                s = s.drain(n, at(0.3), Some(at(0.7)));
+            }
+            Ok(s)
+        }
+        "burst" => Ok(Scenario::new("burst").burst(at(0.2), at(0.4), 4.0)),
+        "diurnal" => Ok(Scenario::new("diurnal").diurnal(86_400.0, 0.6, 0.0)),
+        "elastic" => {
+            // Shrink at most nodes-1 (a 1-node cluster has no elasticity).
+            let k = (nodes / 4).max(1).min(nodes.saturating_sub(1));
+            if k == 0 {
+                return Err("elastic scenario needs at least 2 nodes".to_string());
+            }
+            Ok(Scenario::new("elastic").shrink(k, at(0.3)).grow(k, at(0.6)))
+        }
+        "chaos" => {
+            let k = (nodes / 8).max(1).min(nodes.saturating_sub(1));
+            let mut s = Scenario::new("chaos")
+                .fail(0, at(0.2), Some(at(0.5)))
+                .drain((nodes - 1).min(1), at(0.35), Some(at(0.65)))
+                .burst(at(0.15), at(0.3), 3.0);
+            if k > 0 {
+                // Elastic leg only where the cluster can spare a node.
+                s = s.shrink(k, at(0.4)).grow(k, at(0.7));
+            }
+            Ok(s)
+        }
+        other => Err(format!(
+            "unknown built-in scenario {other:?} (available: {})",
+            BUILTIN_NAMES.join(", ")
+        )),
+    }
+}
+
+/// Resolve a `--scenario` argument: a built-in name, or a path to a spec
+/// file in the [`spec`] text format.
+pub fn load(arg: &str, trace: &Trace) -> Result<Scenario, String> {
+    if arg.is_empty() {
+        return Ok(Scenario::default());
+    }
+    if BUILTIN_NAMES.contains(&arg) {
+        return builtin(arg, trace);
+    }
+    match std::fs::read_to_string(arg) {
+        Ok(text) => spec::parse(&text),
+        Err(e) => Err(format!(
+            "scenario {arg:?} is neither a built-in ({}) nor a readable spec file: {e}",
+            BUILTIN_NAMES.join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Job;
+
+    fn trace(n_jobs: usize, nodes: usize) -> Trace {
+        let jobs = (0..n_jobs)
+            .map(|i| Job {
+                id: i as u32,
+                submit: 100.0 * i as f64,
+                tasks: 1,
+                cpu_need: 0.5,
+                mem: 0.2,
+                proc_time: 500.0,
+            })
+            .collect();
+        Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 }
+    }
+
+    #[test]
+    fn timeline_is_time_sorted_and_stable() {
+        let s = Scenario::new("t")
+            .fail(1, 500.0, Some(900.0))
+            .drain(2, 100.0, None)
+            .shrink(1, 500.0);
+        let tl = s.timeline();
+        assert_eq!(tl.len(), 4);
+        assert!(tl.windows(2).all(|w| w[0].0 <= w[1].0));
+        // Stable: at t=500 the Fail was declared before the Shrink.
+        assert_eq!(tl[1].1, ClusterEvent::Fail(1));
+        assert_eq!(tl[2].1, ClusterEvent::Shrink(1));
+    }
+
+    #[test]
+    fn empty_scenario_is_empty() {
+        let s = Scenario::default();
+        assert!(s.is_empty());
+        assert!(s.timeline().is_empty());
+        assert!(!s.modulates_arrivals());
+        assert_eq!(s.rate_at(123.0), 1.0);
+    }
+
+    #[test]
+    fn validate_catches_bad_nodes_and_counts() {
+        assert!(Scenario::new("x").fail(8, 10.0, None).validate(8).is_err());
+        assert!(Scenario::new("x").fail(7, 10.0, None).validate(8).is_ok());
+        assert!(Scenario::new("x").shrink(0, 10.0).validate(8).is_err());
+        assert!(Scenario::new("x").shrink(8, 10.0).validate(8).is_err());
+        assert!(Scenario::new("x").shrink(3, 10.0).validate(8).is_ok());
+        assert!(Scenario::new("x").fail(0, -5.0, None).validate(8).is_err());
+        assert!(Scenario::new("x").burst(0.0, 0.0, 2.0).validate(8).is_err());
+        assert!(Scenario::new("x").diurnal(0.0, 0.5, 0.0).validate(8).is_err());
+        assert!(Scenario::new("x").diurnal(86400.0, 1.5, 0.0).validate(8).is_err());
+    }
+
+    #[test]
+    fn builtins_validate_against_their_trace() {
+        let t = trace(50, 16);
+        for name in BUILTIN_NAMES {
+            let s = builtin(name, &t).unwrap_or_else(|e| panic!("{name}: {e}"));
+            s.validate(t.nodes).unwrap_or_else(|e| panic!("{name}: {e}"));
+            if *name == "none" {
+                assert!(s.is_empty());
+            } else {
+                assert!(!s.is_empty(), "{name} should disturb something");
+            }
+        }
+        assert!(builtin("bogus", &t).is_err());
+    }
+
+    #[test]
+    fn builtin_failures_repair_every_failed_node() {
+        let t = trace(50, 32);
+        let s = builtin("failures", &t).unwrap();
+        let failed: Vec<_> = s
+            .events
+            .iter()
+            .filter_map(|(_, e)| match e {
+                ClusterEvent::Fail(n) => Some(*n),
+                _ => None,
+            })
+            .collect();
+        assert!(!failed.is_empty());
+        for n in failed {
+            assert!(
+                s.events.iter().any(|(_, e)| *e == ClusterEvent::Repair(n)),
+                "node {n} never repaired"
+            );
+        }
+    }
+
+    #[test]
+    fn builtins_handle_single_node_clusters() {
+        let t = trace(10, 1);
+        assert!(builtin("elastic", &t).is_err(), "no elasticity on one node");
+        let c = builtin("chaos", &t).unwrap();
+        c.validate(1).unwrap_or_else(|e| panic!("chaos on 1 node: {e}"));
+        assert!(
+            !c.events.iter().any(|(_, e)| matches!(e, ClusterEvent::Shrink(_))),
+            "chaos must skip the elastic leg on a 1-node cluster"
+        );
+    }
+
+    #[test]
+    fn load_resolves_builtins_and_rejects_garbage() {
+        let t = trace(10, 8);
+        assert_eq!(load("", &t).unwrap(), Scenario::default());
+        assert_eq!(load("none", &t).unwrap().name, "none");
+        assert!(load("failures", &t).is_ok());
+        assert!(load("/no/such/file.scn", &t).is_err());
+    }
+
+    #[test]
+    fn rate_is_product_of_modulators() {
+        let s = Scenario::new("m").burst(0.0, 100.0, 4.0).burst(50.0, 150.0, 0.5);
+        assert!((s.rate_at(25.0) - 4.0).abs() < 1e-12);
+        assert!((s.rate_at(75.0) - 2.0).abs() < 1e-12);
+        assert!((s.rate_at(125.0) - 0.5).abs() < 1e-12);
+        assert!((s.rate_at(200.0) - 1.0).abs() < 1e-12);
+    }
+}

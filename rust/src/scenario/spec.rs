@@ -1,0 +1,276 @@
+//! Text format for scenario specs: line-oriented directives with
+//! `key=value` pairs, `#` comments. Example:
+//!
+//! ```text
+//! name = morning-outage
+//! # rack 3 loses power for an hour, node 7 is drained for maintenance
+//! fail    node=3  at=1000  until=5000
+//! repair  node=9  at=200
+//! drain   node=7  at=2000  until=4000
+//! shrink  count=4 at=10000 until=20000   # capacity returns at `until`
+//! grow    count=2 at=30000
+//! burst   factor=3 from=1000 until=2000
+//! diurnal period=86400 amplitude=0.5 phase=0
+//! ```
+//!
+//! `fail ... until=T` emits an automatic `repair` at `T`; `drain ...
+//! until=T` emits the matching drain-end; `shrink ... until=T` regrows the
+//! same count at `T` (and `grow ... until=T` shrinks it again). Everything
+//! else must be spelled out as separate lines.
+
+use super::{ArrivalMod, ClusterEvent, Scenario};
+use std::collections::BTreeMap;
+
+type Kv<'a> = BTreeMap<&'a str, &'a str>;
+
+fn get<'a>(kv: &Kv<'a>, key: &str, line: usize) -> Result<&'a str, String> {
+    kv.get(key).copied().ok_or_else(|| format!("line {line}: missing {key}=..."))
+}
+
+fn get_f64(kv: &Kv, key: &str, line: usize) -> Result<f64, String> {
+    let v = get(kv, key, line)?;
+    v.parse::<f64>().map_err(|_| format!("line {line}: {key}={v:?} is not a number"))
+}
+
+fn opt_f64(kv: &Kv, key: &str, line: usize) -> Result<Option<f64>, String> {
+    match kv.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<f64>()
+            .map(Some)
+            .map_err(|_| format!("line {line}: {key}={v:?} is not a number")),
+    }
+}
+
+fn get_usize(kv: &Kv, key: &str, line: usize) -> Result<usize, String> {
+    let v = get(kv, key, line)?;
+    v.parse::<usize>()
+        .map_err(|_| format!("line {line}: {key}={v:?} is not a non-negative integer"))
+}
+
+/// A directive's `until` must end the window its `at` opens; an inverted
+/// window would sort the closing event before the opening one and make the
+/// disturbance permanent.
+fn check_window(at: f64, until: Option<f64>, line: usize) -> Result<(), String> {
+    if let Some(u) = until {
+        if u <= at {
+            return Err(format!("line {line}: until={u} must be after at={at}"));
+        }
+    }
+    Ok(())
+}
+
+fn check_keys(kv: &Kv, allowed: &[&str], line: usize) -> Result<(), String> {
+    for k in kv.keys() {
+        if !allowed.contains(k) {
+            return Err(format!(
+                "line {line}: unknown key {k:?} (allowed: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a scenario spec. Returns a declarative [`Scenario`]; call
+/// [`Scenario::validate`] with the target cluster size before running it.
+pub fn parse(text: &str) -> Result<Scenario, String> {
+    let mut s = Scenario::default();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        // Tokenize; a bare `=` separator (as in `name = x`) is dropped.
+        let mut tokens = line.split_whitespace().filter(|t| *t != "=");
+        let first = tokens.next().unwrap_or("");
+        let mut kv: Kv = BTreeMap::new();
+        let mut bare: Vec<&str> = Vec::new();
+        // `name=demo` style: the directive token itself carries the value.
+        let directive = match first.split_once('=') {
+            Some((d, v)) if !d.is_empty() && !v.is_empty() => {
+                kv.insert(d, v);
+                d
+            }
+            _ => first,
+        };
+        for t in tokens {
+            match t.split_once('=') {
+                Some((k, v)) if !k.is_empty() && !v.is_empty() => {
+                    kv.insert(k, v);
+                }
+                _ => bare.push(t),
+            }
+        }
+        // Only `name` takes a bare value; anywhere else a token without
+        // `=` is a malformed pair (e.g. `until 5000`) and must not be
+        // silently dropped.
+        if directive != "name" {
+            if let Some(t) = bare.first() {
+                return Err(format!(
+                    "line {line_no}: stray token {t:?} (expected key=value pairs)"
+                ));
+            }
+        }
+        match directive {
+            "name" => {
+                let v = bare.first().copied().or_else(|| kv.get("name").copied());
+                match v {
+                    Some(v) => s.name = v.to_string(),
+                    None => return Err(format!("line {line_no}: name needs a value")),
+                }
+            }
+            "fail" => {
+                check_keys(&kv, &["node", "at", "until"], line_no)?;
+                let node = get_usize(&kv, "node", line_no)?;
+                let at = get_f64(&kv, "at", line_no)?;
+                let until = opt_f64(&kv, "until", line_no)?;
+                check_window(at, until, line_no)?;
+                s.events.push((at, ClusterEvent::Fail(node)));
+                if let Some(u) = until {
+                    s.events.push((u, ClusterEvent::Repair(node)));
+                }
+            }
+            "repair" => {
+                check_keys(&kv, &["node", "at"], line_no)?;
+                let node = get_usize(&kv, "node", line_no)?;
+                let at = get_f64(&kv, "at", line_no)?;
+                s.events.push((at, ClusterEvent::Repair(node)));
+            }
+            "drain" => {
+                check_keys(&kv, &["node", "at", "until"], line_no)?;
+                let node = get_usize(&kv, "node", line_no)?;
+                let at = get_f64(&kv, "at", line_no)?;
+                let until = opt_f64(&kv, "until", line_no)?;
+                check_window(at, until, line_no)?;
+                s.events.push((at, ClusterEvent::DrainStart(node)));
+                if let Some(u) = until {
+                    s.events.push((u, ClusterEvent::DrainEnd(node)));
+                }
+            }
+            "shrink" => {
+                check_keys(&kv, &["count", "at", "until"], line_no)?;
+                let count = get_usize(&kv, "count", line_no)?;
+                let at = get_f64(&kv, "at", line_no)?;
+                let until = opt_f64(&kv, "until", line_no)?;
+                check_window(at, until, line_no)?;
+                s.events.push((at, ClusterEvent::Shrink(count)));
+                if let Some(u) = until {
+                    s.events.push((u, ClusterEvent::Grow(count)));
+                }
+            }
+            "grow" => {
+                check_keys(&kv, &["count", "at", "until"], line_no)?;
+                let count = get_usize(&kv, "count", line_no)?;
+                let at = get_f64(&kv, "at", line_no)?;
+                let until = opt_f64(&kv, "until", line_no)?;
+                check_window(at, until, line_no)?;
+                s.events.push((at, ClusterEvent::Grow(count)));
+                if let Some(u) = until {
+                    s.events.push((u, ClusterEvent::Shrink(count)));
+                }
+            }
+            "burst" => {
+                check_keys(&kv, &["factor", "from", "until"], line_no)?;
+                let factor = get_f64(&kv, "factor", line_no)?;
+                let from = get_f64(&kv, "from", line_no)?;
+                let until = get_f64(&kv, "until", line_no)?;
+                s.arrivals.push(ArrivalMod::Burst { from, until, factor });
+            }
+            "diurnal" => {
+                check_keys(&kv, &["period", "amplitude", "phase"], line_no)?;
+                let period = get_f64(&kv, "period", line_no)?;
+                let amplitude = get_f64(&kv, "amplitude", line_no)?;
+                let phase = opt_f64(&kv, "phase", line_no)?.unwrap_or(0.0);
+                s.arrivals.push(ArrivalMod::Diurnal { period, amplitude, phase });
+            }
+            other => {
+                return Err(format!(
+                    "line {line_no}: unknown directive {other:?} \
+                     (expected name, fail, repair, drain, shrink, grow, burst, diurnal)"
+                ))
+            }
+        }
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# a full-feature spec
+name = kitchen-sink
+fail    node=3  at=1000 until=5000
+repair  node=9  at=200
+drain   node=7  at=2000 until=4000
+shrink  count=4 at=10000 until=20000
+grow    count=2 at=30000
+burst   factor=3 from=1000 until=2000
+diurnal period=86400 amplitude=0.5 phase=0
+";
+
+    #[test]
+    fn parses_every_directive() {
+        let s = parse(SAMPLE).expect("spec parses");
+        assert_eq!(s.name, "kitchen-sink");
+        assert_eq!(s.events.len(), 8);
+        assert_eq!(s.arrivals.len(), 2);
+        assert!(s.events.contains(&(1000.0, ClusterEvent::Fail(3))));
+        assert!(s.events.contains(&(5000.0, ClusterEvent::Repair(3))));
+        assert!(s.events.contains(&(200.0, ClusterEvent::Repair(9))));
+        assert!(s.events.contains(&(2000.0, ClusterEvent::DrainStart(7))));
+        assert!(s.events.contains(&(4000.0, ClusterEvent::DrainEnd(7))));
+        assert!(s.events.contains(&(10_000.0, ClusterEvent::Shrink(4))));
+        assert!(s.events.contains(&(20_000.0, ClusterEvent::Grow(4))));
+        assert!(s.events.contains(&(30_000.0, ClusterEvent::Grow(2))));
+        assert!(s.validate(16).is_ok());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_ignored() {
+        let s = parse("\n# nothing\n   # indented comment\n\n").unwrap();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("fail node=1 at=10\nexplode node=2 at=20").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse("fail node=1").unwrap_err();
+        assert!(e.contains("missing at="), "{e}");
+        let e = parse("fail node=abc at=10").unwrap_err();
+        assert!(e.contains("not a non-negative integer"), "{e}");
+        let e = parse("fail node=1 at=10 frequency=2").unwrap_err();
+        assert!(e.contains("unknown key"), "{e}");
+        // A key=value pair typo'd with a space must not be silently dropped.
+        let e = parse("fail node=1 at=10 until 5000").unwrap_err();
+        assert!(e.contains("stray token"), "{e}");
+        let e = parse("drain node = 7 at=2000").unwrap_err();
+        assert!(e.contains("stray token"), "{e}");
+    }
+
+    #[test]
+    fn inverted_windows_are_rejected() {
+        // An `until` at or before `at` would make the disturbance permanent.
+        for line in [
+            "fail node=0 at=5000 until=1000",
+            "drain node=0 at=100 until=100",
+            "shrink count=2 at=300 until=200",
+            "grow count=2 at=300 until=200",
+        ] {
+            let e = parse(line).unwrap_err();
+            assert!(e.contains("must be after"), "{line}: {e}");
+        }
+        assert!(parse("fail node=0 at=1000 until=5000").is_ok());
+    }
+
+    #[test]
+    fn name_accepts_bare_and_kv_forms() {
+        assert_eq!(parse("name demo").unwrap().name, "demo");
+        assert_eq!(parse("name = demo").unwrap().name, "demo");
+        assert_eq!(parse("name=demo").unwrap().name, "demo");
+    }
+}

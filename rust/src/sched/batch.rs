@@ -7,7 +7,7 @@
 //! batch results only marginally, §5.2).
 
 use super::Policy;
-use crate::sim::{JobId, NodeId, Sim};
+use crate::sim::{JobId, NodeId, PlatformChange, Sim};
 use std::collections::BTreeSet;
 
 /// FCFS with an optional EASY backfilling stage.
@@ -31,7 +31,7 @@ impl BatchPolicy {
 
     fn ensure_init(&mut self, sim: &Sim) {
         if !self.initialized {
-            self.free = (0..sim.cluster.nodes).collect();
+            self.free = (0..sim.cluster.nodes).filter(|&n| sim.cluster.can_place(n)).collect();
             self.initialized = true;
         }
     }
@@ -123,12 +123,35 @@ impl Policy for BatchPolicy {
             let (_, _, _) = self.running.swap_remove(pos);
         }
         // Return the job's nodes (engine already freed memory; we track the
-        // exclusive node set ourselves from the job record).
+        // exclusive node set ourselves from the job record). Down and
+        // draining nodes never re-enter the free pool.
         for n in 0..sim.cluster.nodes {
-            if sim.cluster.tasks_on[n].is_empty() {
+            if sim.cluster.tasks_on[n].is_empty() && sim.cluster.can_place(n) {
                 self.free.insert(n);
             }
         }
+        self.try_schedule(sim);
+    }
+
+    fn on_platform_change(&mut self, sim: &mut Sim, change: &PlatformChange) {
+        self.ensure_init(sim);
+        // Requeue interrupted work: killed jobs restart from scratch,
+        // shrink victims resume from their saved image. Both re-enter the
+        // queue; sorting by id restores FCFS (ids are submit-ordered).
+        for &j in change.killed.iter().chain(change.preempted.iter()) {
+            if let Some(pos) = self.running.iter().position(|&(_, _, id)| id == j) {
+                self.running.swap_remove(pos);
+            }
+            if !self.queue.contains(&j) {
+                self.queue.push(j);
+            }
+        }
+        self.queue.sort_unstable();
+        // Rebuild the free pool around the new availability mask: whole
+        // nodes that are empty and placeable.
+        self.free = (0..sim.cluster.nodes)
+            .filter(|&n| sim.cluster.can_place(n) && sim.cluster.tasks_on[n].is_empty())
+            .collect();
         self.try_schedule(sim);
     }
 }

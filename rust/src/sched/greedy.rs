@@ -25,6 +25,13 @@ pub trait PlacementState: Clone {
     fn node_count(&self) -> usize;
     fn load(&self, n: NodeId) -> f64;
     fn fits(&self, n: NodeId, mem: f64) -> bool;
+    /// Whether a *new* task may be placed on `n`: the node is available
+    /// (up and not draining — scenario engine) and the memory fits. A job
+    /// *staying* at its current placement only needs `fits` — existing
+    /// tasks on a draining node remain valid.
+    fn placeable(&self, n: NodeId, mem: f64) -> bool {
+        self.fits(n, mem)
+    }
     fn place(&mut self, n: NodeId, job: JobId, need: f64, mem: f64);
     fn unplace(&mut self, n: NodeId, job: JobId, need: f64, mem: f64);
 }
@@ -39,6 +46,9 @@ impl PlacementState for Cluster {
     fn fits(&self, n: NodeId, mem: f64) -> bool {
         self.fits_mem(n, mem)
     }
+    fn placeable(&self, n: NodeId, mem: f64) -> bool {
+        self.can_place(n) && self.fits_mem(n, mem)
+    }
     fn place(&mut self, n: NodeId, job: JobId, need: f64, mem: f64) {
         self.add_task(n, job, need, mem);
     }
@@ -47,18 +57,24 @@ impl PlacementState for Cluster {
     }
 }
 
-/// Allocation-light cluster shadow: per-node CPU load and free memory only.
-/// Cloning copies two flat `f64` vectors instead of the cluster's per-node
-/// task lists, which makes the O(waiting) admission sweeps cheap.
+/// Allocation-light cluster shadow: per-node CPU load, free memory, and the
+/// availability mask. Cloning copies flat vectors instead of the cluster's
+/// per-node task lists, which makes the O(waiting) admission sweeps cheap.
 #[derive(Debug, Clone)]
 pub struct ShadowLoads {
     pub cpu_load: Vec<f64>,
     pub free_mem: Vec<f64>,
+    /// Nodes that must receive no new placements (down or draining).
+    pub blocked: Vec<bool>,
 }
 
 impl ShadowLoads {
     pub fn of(cluster: &Cluster) -> Self {
-        ShadowLoads { cpu_load: cluster.cpu_load.clone(), free_mem: cluster.free_mem.clone() }
+        ShadowLoads {
+            cpu_load: cluster.cpu_load.clone(),
+            free_mem: cluster.free_mem.clone(),
+            blocked: (0..cluster.nodes).map(|n| !cluster.can_place(n)).collect(),
+        }
     }
 }
 
@@ -72,6 +88,9 @@ impl PlacementState for ShadowLoads {
     fn fits(&self, n: NodeId, mem: f64) -> bool {
         // Identical tolerance to Cluster::fits_mem.
         self.free_mem[n] + 1e-9 >= mem
+    }
+    fn placeable(&self, n: NodeId, mem: f64) -> bool {
+        !self.blocked[n] && self.fits(n, mem)
     }
     fn place(&mut self, n: NodeId, _job: JobId, need: f64, mem: f64) {
         debug_assert!(self.fits(n, mem), "shadow memory overflow on node {n}");
@@ -87,6 +106,7 @@ impl PlacementState for ShadowLoads {
 
 /// Greedy placement of `tasks` tasks (need, mem) onto `shadow`, mutating it.
 /// Returns the chosen node per task, or None if some task cannot fit.
+/// Unavailable (down/draining) nodes are never chosen.
 pub fn greedy_place<S: PlacementState>(
     shadow: &mut S,
     tasks: u32,
@@ -95,10 +115,11 @@ pub fn greedy_place<S: PlacementState>(
 ) -> Option<Vec<NodeId>> {
     let mut placement = Vec::with_capacity(tasks as usize);
     for _ in 0..tasks {
-        // Lowest CPU load among nodes with enough free memory.
+        // Lowest CPU load among available nodes with enough free memory.
         let mut best: Option<NodeId> = None;
         for n in 0..shadow.node_count() {
-            if shadow.fits(n, mem) && best.map(|b| shadow.load(n) < shadow.load(b)).unwrap_or(true)
+            if shadow.placeable(n, mem)
+                && best.map(|b| shadow.load(n) < shadow.load(b)).unwrap_or(true)
             {
                 best = Some(n);
             }
@@ -142,10 +163,15 @@ pub fn admit_greedy(sim: &Sim, j: JobId) -> Option<Admission> {
 ///    keep running (their memory still fits beside the incoming job).
 /// 3. GreedyPM: try to re-place still-marked jobs with Greedy (migration);
 ///    whatever cannot be re-placed is paused.
-pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Admission {
+///
+/// Returns `None` when the job cannot start even with every running job
+/// paused. On a fully healthy cluster that is impossible (trace validation
+/// bounds every job by the empty platform), but under a scenario enough
+/// nodes may be down or draining; the caller postpones the job.
+pub fn admit_forced(sim: &Sim, j: JobId, migrate_marked: bool) -> Option<Admission> {
     // Fast path: fits as-is.
     if let Some(adm) = admit_greedy(sim, j) {
-        return adm;
+        return Some(adm);
     }
     if sim.is_reference() {
         admit_forced_with(sim, j, migrate_marked, sim.cluster.clone())
@@ -159,7 +185,7 @@ fn admit_forced_with<S: PlacementState>(
     j: JobId,
     migrate_marked: bool,
     mut shadow: S,
-) -> Admission {
+) -> Option<Admission> {
     let spec = sim.jobs[j].spec.clone();
 
     // Step 1: mark running jobs by ascending priority until j would fit.
@@ -183,11 +209,7 @@ fn admit_forced_with<S: PlacementState>(
             break;
         }
     }
-    let placement = placement.unwrap_or_else(|| {
-        // Even an empty cluster cannot host the job — trace validation
-        // guarantees this never happens.
-        panic!("job {j} cannot fit an empty cluster");
-    });
+    let placement = placement?;
 
     // Step 2: un-mark in decreasing priority where memory still allows the
     // job to keep running at its current placement.
@@ -217,7 +239,7 @@ fn admit_forced_with<S: PlacementState>(
     }
 
     if !migrate_marked {
-        return Admission { placement, pause: still_marked, migrate: vec![] };
+        return Some(Admission { placement, pause: still_marked, migrate: vec![] });
     }
 
     // Step 3 (GreedyPM): re-place still-marked jobs by priority with Greedy.
@@ -235,7 +257,7 @@ fn admit_forced_with<S: PlacementState>(
             None => pause.push(m),
         }
     }
-    Admission { placement, pause, migrate }
+    Some(Admission { placement, pause, migrate })
 }
 
 /// Apply an admission decision for job `j` through the engine, then let the
@@ -279,10 +301,19 @@ pub fn opportunistic_start(sim: &mut Sim) {
         return;
     }
     // Indexed fast path. Greedy placement can only fail on memory (CPU is
-    // overloadable), so a job needing more memory than the emptiest node
-    // offers is skipped without building a shadow — the attempt would fail
-    // identically. This caps the sweep at O(waiting) plus real attempts.
-    let max_free = |c: &Cluster| c.free_mem.iter().copied().fold(0.0f64, f64::max);
+    // overloadable), so a job needing more memory than the emptiest
+    // *placeable* node offers is skipped without building a shadow — the
+    // attempt would fail identically. This caps the sweep at O(waiting)
+    // plus real attempts.
+    let max_free = |c: &Cluster| {
+        let mut m = 0.0f64;
+        for n in 0..c.nodes {
+            if c.can_place(n) {
+                m = m.max(c.free_mem[n]);
+            }
+        }
+        m
+    };
     let mut free_cap = max_free(&sim.cluster);
     for w in waiting {
         let spec = sim.jobs[w].spec.clone();
@@ -390,7 +421,7 @@ mod tests {
         sim.jobs[0].vt = 500.0;
         sim.jobs[1].vt = 10.0;
         sim.now = 600.0;
-        let adm = admit_forced(&sim, 2, false);
+        let adm = admit_forced(&sim, 2, false).expect("admissible");
         assert_eq!(adm.pause, vec![0], "job 0 (lowest priority) must be paused");
         assert_eq!(adm.placement.len(), 1);
         apply_admission(&mut sim, 2, adm);
@@ -421,7 +452,7 @@ mod tests {
         sim.jobs[1].vt = 10.0;
         sim.jobs[2].vt = 10.0;
         sim.now = 600.0;
-        let adm = admit_forced(&sim, 3, true);
+        let adm = admit_forced(&sim, 3, true).expect("admissible");
         assert!(adm.pause.is_empty(), "migration should avoid pausing: {adm:?}");
         assert_eq!(adm.migrate.len(), 1);
         assert_eq!(adm.migrate[0].0, 0);
@@ -455,12 +486,41 @@ mod tests {
         sim.jobs[1].vt = 400.0;
         sim.jobs[2].vt = 10.0; // highest
         sim.now = 1000.0;
-        let adm = admit_forced(&sim, 3, false);
+        let adm = admit_forced(&sim, 3, false).expect("admissible");
         // Removing job 0 leaves mem .4 free < .6; removing 0,1 leaves .7:
         // fits. Un-mark pass asks: can job 1 (higher priority of marked)
         // keep running? free after incoming = .1 < .3 -> no. So both pause.
         assert_eq!(adm.pause.len(), 2);
         assert!(adm.pause.contains(&0) && adm.pause.contains(&1));
+    }
+
+    #[test]
+    fn greedy_avoids_down_and_draining_nodes() {
+        let mut c = Cluster::new(3);
+        c.up[0] = false;
+        c.draining[1] = true;
+        let pl = greedy_place(&mut c, 2, 0.5, 0.3).unwrap();
+        assert_eq!(pl, vec![2, 2], "only the healthy node may take new tasks");
+        // The shadow view must make the same call.
+        let mut s = ShadowLoads::of(&c);
+        assert!(s.blocked[0] && s.blocked[1] && !s.blocked[2]);
+        let pl2 = greedy_place(&mut s, 1, 0.5, 0.3).unwrap();
+        assert_eq!(pl2, vec![2]);
+        // All nodes blocked -> no placement at all.
+        c.draining[2] = true;
+        assert!(greedy_place(&mut c.clone(), 1, 0.1, 0.1).is_none());
+    }
+
+    #[test]
+    fn forced_admission_fails_cleanly_when_nothing_is_placeable() {
+        // One node, draining: even pausing the incumbent cannot admit the
+        // newcomer — admit_forced postpones instead of panicking.
+        let mut sim = sim_with(vec![job(0, 1, 0.5, 0.5), job(1, 1, 0.5, 0.5)], 1);
+        sim.start_job(0, vec![0]);
+        sim.cluster.draining[0] = true;
+        sim.now = 10.0;
+        assert!(admit_forced(&sim, 1, false).is_none());
+        assert!(admit_forced(&sim, 1, true).is_none());
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod priority;
 pub mod registry;
 pub mod stretch;
 
-use crate::sim::{JobId, Sim};
+use crate::sim::{JobId, PlatformChange, Sim};
 
 /// A scheduling policy. Hooks are invoked by `crate::sim::run`.
 pub trait Policy {
@@ -27,6 +27,12 @@ pub trait Policy {
     fn on_complete(&mut self, sim: &mut Sim, j: JobId);
     /// Periodic tick, fired every `period()` seconds if set.
     fn on_tick(&mut self, _sim: &mut Sim) {}
+    /// The platform changed under the policy (scenario engine: failures,
+    /// repairs, drains, elastic capacity). `change` lists the jobs the
+    /// engine killed (requeued as pending, progress lost) or preempted
+    /// (paused, image saved); the policy should recover them and adapt its
+    /// allocations to the new capacity. Never fired on an empty scenario.
+    fn on_platform_change(&mut self, _sim: &mut Sim, _change: &PlatformChange) {}
     fn period(&self) -> Option<f64> {
         None
     }

@@ -7,7 +7,7 @@ use super::stretch::{improve_max_stretch, mcb8_stretch_allocate};
 use super::Policy;
 use crate::alloc::{reallocate, OptMode};
 use crate::packing::search::{mcb8_allocate, PinRule};
-use crate::sim::{JobId, Sim};
+use crate::sim::{JobId, PlatformChange, Sim};
 
 /// Action on job submission (column 2 of Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -210,6 +210,22 @@ impl Policy for DfrsPolicy {
     fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
         match self.submit {
             SubmitAction::Nothing => return,
+            SubmitAction::Mcb8 => {
+                // MCB8 re-packs every live job; a job already started by a
+                // same-instant recovery pass is handled like any other.
+                self.run_mcb8(sim);
+                return;
+            }
+            SubmitAction::Greedy | SubmitAction::GreedyP | SubmitAction::GreedyPM => {}
+        }
+        if !matches!(sim.jobs[j].state, crate::sim::JobState::Pending) {
+            // A completion or platform-change recovery at this exact
+            // instant already started `j` opportunistically; admitting it
+            // again would double-place it. Refresh the allocation instead.
+            self.alloc(sim);
+            return;
+        }
+        match self.submit {
             SubmitAction::Greedy => {
                 if let Some(adm) = admit_greedy(sim, j) {
                     apply_admission(sim, j, adm);
@@ -217,17 +233,18 @@ impl Policy for DfrsPolicy {
                 // else: postponed (§4.2's admission weakness).
             }
             SubmitAction::GreedyP => {
-                let adm = admit_forced(sim, j, false);
-                apply_admission(sim, j, adm);
+                // Forced admission can fail only when the scenario engine
+                // has taken too many nodes down/draining; postpone then.
+                if let Some(adm) = admit_forced(sim, j, false) {
+                    apply_admission(sim, j, adm);
+                }
             }
             SubmitAction::GreedyPM => {
-                let adm = admit_forced(sim, j, true);
-                apply_admission(sim, j, adm);
+                if let Some(adm) = admit_forced(sim, j, true) {
+                    apply_admission(sim, j, adm);
+                }
             }
-            SubmitAction::Mcb8 => {
-                self.run_mcb8(sim);
-                return;
-            }
+            SubmitAction::Nothing | SubmitAction::Mcb8 => unreachable!(),
         }
         self.alloc(sim);
     }
@@ -252,6 +269,20 @@ impl Policy for DfrsPolicy {
             PeriodicAction::Nothing => {}
             PeriodicAction::Mcb8 => self.run_mcb8(sim),
             PeriodicAction::Mcb8Stretch => self.run_mcb8_stretch(sim),
+        }
+    }
+
+    fn on_platform_change(&mut self, sim: &mut Sim, _change: &PlatformChange) {
+        // Recovery after scenario events: killed jobs sit pending, shrink
+        // victims sit paused, and repaired/grown nodes offer fresh
+        // capacity. MCB8-driven policies re-pack everything live; the rest
+        // greedily restart whatever fits, then re-run the §4.6 allocation
+        // for the changed capacity. Never reached on an empty scenario.
+        if matches!(self.complete, CompleteAction::Mcb8) {
+            self.run_mcb8(sim);
+        } else {
+            opportunistic_start(sim);
+            self.alloc(sim);
         }
     }
 

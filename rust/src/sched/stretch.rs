@@ -10,7 +10,7 @@
 //! lowest feasible S. If no S is feasible the lowest-priority job is
 //! dropped, as in plain MCB8.
 
-use crate::packing::mcb8::{pack, PackJob};
+use crate::packing::mcb8::{pack_masked, PackJob, SortKey};
 use crate::packing::search::PinRule;
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
@@ -50,8 +50,14 @@ fn try_target(
     for &j in candidates {
         let y = required_yield(sim, j, s, period)?;
         let spec = &sim.jobs[j].spec;
+        // As in plain MCB8, jobs sitting on down/draining nodes are never
+        // pinned — releasing them lets the packing evacuate the node.
         let pinned = match pin {
-            Some(rule) if matches!(sim.jobs[j].state, JobState::Running) && pins(rule, sim, j) => {
+            Some(rule)
+                if matches!(sim.jobs[j].state, JobState::Running)
+                    && pins(rule, sim, j)
+                    && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
+            {
                 Some(sim.jobs[j].placement.clone())
             }
             _ => None,
@@ -65,7 +71,10 @@ fn try_target(
             pinned,
         });
     }
-    pack(&pack_jobs, sim.cluster.nodes).map(|r| (r.placements, yields))
+    let blocked: Vec<bool> =
+        (0..sim.cluster.nodes).map(|n| !sim.cluster.can_place(n)).collect();
+    pack_masked(&pack_jobs, sim.cluster.nodes, SortKey::Max, Some(&blocked))
+        .map(|r| (r.placements, yields))
 }
 
 fn pins(rule: PinRule, sim: &Sim, j: JobId) -> bool {

@@ -31,12 +31,21 @@
 //!   no virtual time for `reschedule_penalty` seconds; schedulers are
 //!   unaware of the penalty (§5.1).
 
+//! Platform dynamics (the scenario engine, `crate::scenario`): the engine
+//! also maintains a node-availability mask. Failures kill and requeue the
+//! jobs on a node (progress lost, rescheduling penalty on restart), drains
+//! block new placements, and elastic shrink/grow removes or adds capacity.
+//! [`run_scenario`] compiles a declarative [`crate::scenario::Scenario`]
+//! into timed events on the main loop; the empty scenario reproduces the
+//! static-platform results bit for bit in both engine modes.
+
 pub mod calendar;
 pub mod state;
 
 pub use state::{Cluster, IndexSet, JobId, JobSim, JobState, NodeId};
 
 use crate::alloc::YieldSolver;
+use crate::scenario::{ClusterEvent, Scenario};
 use crate::workload::Trace;
 use calendar::EventCalendar;
 
@@ -94,8 +103,33 @@ pub struct SimResult {
     /// Mean occurrences per job.
     pub preempt_per_job: f64,
     pub migrate_per_job: f64,
+    /// Kill events from node failures (scenario engine; a job killed twice
+    /// counts twice).
+    pub interrupted_jobs: u64,
+    /// ∫ up-node count dt — the capacity actually offered over the run,
+    /// node-seconds. Equals nodes × makespan on a static platform.
+    pub avail_node_seconds: f64,
+    /// ∫ utilization dt / ∫ capacity dt: utilization normalized by the
+    /// capacity that was *available*, so failures and shrinks don't read as
+    /// scheduler waste.
+    pub avail_utilization: f64,
     /// First submission → last completion, seconds.
     pub makespan: f64,
+}
+
+/// What a batch of same-instant scenario events did to the platform. The
+/// engine hands this to `Policy::on_platform_change` so policies can
+/// requeue interrupted work and adapt to the new capacity.
+#[derive(Debug, Clone, Default)]
+pub struct PlatformChange {
+    /// Jobs killed by node failures: now `Pending`, progress lost, next
+    /// start pays the rescheduling penalty. Ascending id order.
+    pub killed: Vec<JobId>,
+    /// Jobs preempted by an elastic shrink: now `Paused` (image saved,
+    /// normal preemption accounting). Ascending id order.
+    pub preempted: Vec<JobId>,
+    /// True if any node's availability or drain state changed.
+    pub topology_changed: bool,
 }
 
 /// The simulation engine. Policies receive `&mut Sim` in their hooks.
@@ -120,12 +154,22 @@ pub struct Sim {
     /// Pending rescheduling-penalty expiries (lazily invalidated).
     penalties: EventCalendar,
     full_scan: bool,
+    /// Count of up nodes — the capacity cap of the metric integrals. Kept
+    /// incrementally (scenario events are rare; `advance` is hot).
+    avail_nodes: usize,
+    /// Nodes taken down by elastic Shrink events, most recent last; Grow
+    /// revives these before touching failed nodes (which have their own
+    /// Repair events).
+    elastic_down: Vec<NodeId>,
     // Metric accumulators.
     underutil_area: f64,
+    util_area: f64,
+    avail_node_seconds: f64,
     total_work: f64,
     gb_moved: f64,
     preemptions: u64,
     migrations: u64,
+    interruptions: u64,
     node_mem_gb: f64,
 }
 
@@ -170,11 +214,16 @@ impl Sim {
             demand_cache: None,
             penalties: EventCalendar::new(),
             full_scan: matches!(engine, EngineKind::Reference),
+            avail_nodes: trace.nodes,
+            elastic_down: Vec::new(),
             underutil_area: 0.0,
+            util_area: 0.0,
+            avail_node_seconds: 0.0,
             total_work,
             gb_moved: 0.0,
             preemptions: 0,
             migrations: 0,
+            interruptions: 0,
             node_mem_gb: trace.node_mem_gb,
         }
     }
@@ -244,6 +293,142 @@ impl Sim {
         self.penalties.schedule(until, j);
     }
 
+    // ----- Scenario events (platform dynamics) -------------------------
+
+    /// Apply one scenario event to the platform, recording what it did in
+    /// `change`. Called by [`run_scenario`] for each timed event; tests and
+    /// custom drivers may call it directly. Both engine modes execute the
+    /// same code here, and victim sets are processed in ascending job-id
+    /// order, so the engines stay bit-identical under any scenario.
+    pub fn apply_cluster_event(&mut self, ev: &ClusterEvent, change: &mut PlatformChange) {
+        match *ev {
+            ClusterEvent::Fail(n) => self.fail_node(n, change),
+            ClusterEvent::Repair(n) => self.repair_node(n, change),
+            ClusterEvent::DrainStart(n) => {
+                if n < self.cluster.nodes && !self.cluster.draining[n] {
+                    self.cluster.draining[n] = true;
+                    change.topology_changed = true;
+                }
+            }
+            ClusterEvent::DrainEnd(n) => {
+                if n < self.cluster.nodes && self.cluster.draining[n] {
+                    self.cluster.draining[n] = false;
+                    change.topology_changed = true;
+                }
+            }
+            ClusterEvent::Shrink(count) => self.shrink_nodes(count, change),
+            ClusterEvent::Grow(count) => self.grow_nodes(count, change),
+        }
+    }
+
+    /// Abrupt failure of node `n`: the node goes down and every job with a
+    /// task on it is killed — image lost (no storage traffic), virtual time
+    /// reset, requeued as pending with a restart penalty.
+    fn fail_node(&mut self, n: NodeId, change: &mut PlatformChange) {
+        if n >= self.cluster.nodes || !self.cluster.up[n] {
+            return;
+        }
+        // The drain flag is declarative (DrainStart..DrainEnd) and survives
+        // an outage: a node repaired inside its maintenance window must not
+        // reopen for placement.
+        self.cluster.up[n] = false;
+        self.avail_nodes -= 1;
+        change.topology_changed = true;
+        let mut victims: Vec<JobId> =
+            self.cluster.tasks_on[n].iter().map(|&(j, _)| j).collect();
+        victims.sort_unstable();
+        victims.dedup();
+        for j in victims {
+            self.kill_job(j);
+            change.killed.push(j);
+        }
+    }
+
+    fn repair_node(&mut self, n: NodeId, change: &mut PlatformChange) {
+        if n < self.cluster.nodes && !self.cluster.up[n] {
+            self.cluster.up[n] = true;
+            self.avail_nodes += 1;
+            change.topology_changed = true;
+        }
+    }
+
+    /// Elastic shrink: take `count` up nodes offline, highest index first,
+    /// never below one up node. Jobs on removed nodes are preempted
+    /// gracefully (image saved, normal preemption accounting).
+    fn shrink_nodes(&mut self, count: usize, change: &mut PlatformChange) {
+        let mut victims: Vec<JobId> = Vec::new();
+        let mut remaining = count;
+        let mut n = self.cluster.nodes;
+        while remaining > 0 && n > 0 && self.avail_nodes > 1 {
+            n -= 1;
+            if !self.cluster.up[n] {
+                continue;
+            }
+            self.cluster.up[n] = false;
+            self.avail_nodes -= 1;
+            self.elastic_down.push(n);
+            remaining -= 1;
+            change.topology_changed = true;
+            victims.extend(self.cluster.tasks_on[n].iter().map(|&(j, _)| j));
+        }
+        victims.sort_unstable();
+        victims.dedup();
+        for j in victims {
+            if matches!(self.jobs[j].state, JobState::Running) {
+                self.pause_job(j);
+                change.preempted.push(j);
+            }
+        }
+    }
+
+    /// Elastic grow: revive nodes taken by Shrink first (most recent
+    /// first, so the elastic legs pair up and never consume the revival a
+    /// scheduled Repair expects), then other down nodes (lowest index
+    /// first), then extend the pool with fresh nodes.
+    fn grow_nodes(&mut self, count: usize, change: &mut PlatformChange) {
+        for _ in 0..count {
+            let mut revived = None;
+            while let Some(n) = self.elastic_down.pop() {
+                // A node already brought back some other way is skipped.
+                if !self.cluster.up[n] {
+                    revived = Some(n);
+                    break;
+                }
+            }
+            let pick =
+                revived.or_else(|| (0..self.cluster.nodes).find(|&n| !self.cluster.up[n]));
+            match pick {
+                Some(n) => self.cluster.up[n] = true,
+                None => {
+                    self.cluster.add_node();
+                }
+            }
+            self.avail_nodes += 1;
+            change.topology_changed = true;
+        }
+    }
+
+    /// Kill a running job (node failure): free its resources everywhere,
+    /// lose its progress, requeue it as pending. Unlike a preemption, no
+    /// image is written — the job restarts from scratch.
+    fn kill_job(&mut self, j: JobId) {
+        debug_assert!(matches!(self.jobs[j].state, JobState::Running), "kill of non-running job");
+        let need = self.jobs[j].spec.cpu_need;
+        let mem = self.jobs[j].spec.mem;
+        let placement = std::mem::take(&mut self.jobs[j].placement);
+        for &n in &placement {
+            self.cluster.remove_task(n, j, need, mem);
+        }
+        self.set_state(j, JobState::Pending);
+        let job = &mut self.jobs[j];
+        job.yield_now = 0.0;
+        job.vt = 0.0;
+        job.penalty_until = 0.0;
+        job.requeue_penalty = true;
+        job.interruptions += 1;
+        self.interruptions += 1;
+    }
+
     // ----- Mutation API used by policies -------------------------------
 
     /// Start a pending job or resume a paused one on `placement` (one node
@@ -257,6 +442,7 @@ impl Sim {
             job.state
         );
         let was_paused = matches!(job.state, JobState::Paused);
+        let requeued = job.requeue_penalty;
         let mem = job.spec.mem;
         let need = job.spec.cpu_need;
         for &n in &placement {
@@ -267,8 +453,13 @@ impl Sim {
         if was_paused {
             // Read the saved image back from storage; penalty applies.
             self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
+        }
+        if was_paused || requeued {
+            // A killed-and-requeued job has no image to read, but restarting
+            // it still costs the rescheduling penalty.
             self.set_penalty(j, self.now + self.cfg.reschedule_penalty);
         }
+        self.jobs[j].requeue_penalty = false;
         if self.jobs[j].first_start.is_none() {
             self.jobs[j].first_start = Some(self.now);
         }
@@ -381,6 +572,11 @@ impl Sim {
                 JobState::Pending => {
                     self.set_state(j, JobState::Running);
                     self.jobs[j].placement = new_pl.clone();
+                    if self.jobs[j].requeue_penalty {
+                        // Killed-and-requeued: restart pays the penalty.
+                        self.set_penalty(j, now + penalty);
+                        self.jobs[j].requeue_penalty = false;
+                    }
                     if self.jobs[j].first_start.is_none() {
                         self.jobs[j].first_start = Some(now);
                     }
@@ -535,8 +731,13 @@ impl Sim {
                         job.spec.tasks as f64 * job.spec.cpu_need * job.yield_now * (eff / dt);
                 }
             }
-            let cap = self.cluster.nodes as f64;
+            // Capacity is the count of *up* nodes (scenario engine): on a
+            // static platform this equals `cluster.nodes` and every term
+            // below is bit-identical with the pre-scenario engine.
+            let cap = self.avail_nodes as f64;
             self.underutil_area += (demand.min(cap) - util).max(0.0) * dt;
+            self.util_area += util * dt;
+            self.avail_node_seconds += cap * dt;
         }
         self.now = t;
     }
@@ -707,6 +908,32 @@ pub fn run_with(
     solver: Box<dyn YieldSolver>,
     engine: EngineKind,
 ) -> SimResult {
+    run_scenario(trace, policy, cfg, solver, engine, &Scenario::default())
+}
+
+/// Run under a platform [`Scenario`]: arrival modulators warp the trace
+/// before simulation, and the scenario's timed cluster events become a
+/// fourth event source of the main loop (alongside submissions, completions
+/// and penalty expiries). With `Scenario::default()` this is exactly
+/// [`run_with`].
+pub fn run_scenario(
+    trace: &Trace,
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+    engine: EngineKind,
+    scenario: &Scenario,
+) -> SimResult {
+    let modulated;
+    let trace = if scenario.modulates_arrivals() {
+        modulated = scenario.modulate_arrivals(trace);
+        &modulated
+    } else {
+        trace
+    };
+    let timeline = scenario.timeline();
+    let mut scn_idx = 0usize;
+
     let mut sim = Sim::new_with(trace, cfg, solver, engine);
     let n = sim.jobs.len();
     let mut next_submit_idx = 0usize;
@@ -728,7 +955,8 @@ pub fn run_with(
         let t_tick = next_tick.unwrap_or(f64::INFINITY);
         let t_done = sim.next_completion();
         let t_pen = sim.next_penalty_end();
-        let t_next = t_submit.min(t_tick).min(t_done).min(t_pen);
+        let t_scn = timeline.get(scn_idx).map(|e| e.0).unwrap_or(f64::INFINITY);
+        let t_next = t_submit.min(t_tick).min(t_done).min(t_pen).min(t_scn);
         assert!(
             t_next.is_finite(),
             "deadlock: {} jobs incomplete, nothing scheduled (policy {})",
@@ -737,7 +965,8 @@ pub fn run_with(
         );
         sim.advance(t_next);
 
-        // 1. Completions.
+        // 1. Completions (a job finishing exactly when its node fails is
+        // credited with the completion).
         let done = sim.complete_ready_jobs();
         if !done.is_empty() {
             completed += done.len();
@@ -745,14 +974,29 @@ pub fn run_with(
                 policy.on_complete(&mut sim, j);
             }
         }
-        // 2. Submissions.
+        // 2. Scenario events: apply every event due at this instant as one
+        // batch, then give the policy a single recovery callback.
+        if scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
+            let mut change = PlatformChange::default();
+            while scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
+                let ev = timeline[scn_idx].1;
+                sim.apply_cluster_event(&ev, &mut change);
+                scn_idx += 1;
+            }
+            // Per-event victim runs are each sorted; restore the documented
+            // global ascending-id order across the whole batch.
+            change.killed.sort_unstable();
+            change.preempted.sort_unstable();
+            policy.on_platform_change(&mut sim, &change);
+        }
+        // 3. Submissions.
         while next_submit_idx < n && sim.jobs[next_submit_idx].spec.submit <= sim.now + 1e-9 {
             let j = next_submit_idx;
             next_submit_idx += 1;
             sim.mark_submitted(j);
             policy.on_submit(&mut sim, j);
         }
-        // 3. Periodic tick.
+        // 4. Periodic tick.
         if let (Some(t), Some(p)) = (next_tick, period) {
             if t <= sim.now + 1e-9 {
                 policy.on_tick(&mut sim);
@@ -780,6 +1024,13 @@ pub fn run_with(
         migrate_per_hour: sim.migrations as f64 / (makespan / 3600.0),
         preempt_per_job: sim.preemptions as f64 / n as f64,
         migrate_per_job: sim.migrations as f64 / n as f64,
+        interrupted_jobs: sim.interruptions,
+        avail_node_seconds: sim.avail_node_seconds,
+        avail_utilization: if sim.avail_node_seconds > 0.0 {
+            sim.util_area / sim.avail_node_seconds
+        } else {
+            0.0
+        },
         makespan,
         jobs: sim.jobs,
     }
@@ -1044,6 +1295,158 @@ mod tests {
             assert_eq!(x.vt.to_bits(), y.vt.to_bits());
             assert_eq!(x.completion.unwrap().to_bits(), y.completion.unwrap().to_bits());
         }
+    }
+
+    #[test]
+    fn node_failure_kills_and_requeues_with_penalty() {
+        // A failure loses the job's progress (no image to save) and its
+        // restart pays the rescheduling penalty.
+        struct Restart;
+        impl Policy for Restart {
+            fn name(&self) -> String {
+                "restart".into()
+            }
+            fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+                sim.start_job(j, vec![0]);
+                sim.set_yield(j, 1.0);
+            }
+            fn on_complete(&mut self, _sim: &mut Sim, _j: JobId) {}
+            fn on_platform_change(&mut self, sim: &mut Sim, change: &PlatformChange) {
+                for &j in &change.killed {
+                    sim.start_job(j, vec![1]);
+                    sim.set_yield(j, 1.0);
+                }
+            }
+        }
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 0.5, 1000.0)]);
+        let scn = Scenario::new("one-failure").fail(0, 400.0, None);
+        let r = run_scenario(
+            &t,
+            &mut Restart,
+            SimConfig::default(),
+            Box::new(RustSolver),
+            EngineKind::Indexed,
+            &scn,
+        );
+        // 400 s of progress lost; restarted at 400 with a 300 s penalty, so
+        // progress spans 700..1700.
+        assert!(
+            (r.jobs[0].completion.unwrap() - 1700.0).abs() < 1e-6,
+            "completion {}",
+            r.jobs[0].completion.unwrap()
+        );
+        assert_eq!(r.interrupted_jobs, 1);
+        assert_eq!(r.jobs[0].interruptions, 1);
+        // A kill is not a preemption and moves no data.
+        assert_eq!(r.preemptions, 0);
+        assert!(r.gb_moved.abs() < 1e-12, "gb {}", r.gb_moved);
+        // Availability integral: one of 4 nodes down from t=400 on.
+        assert!(r.avail_node_seconds < 4.0 * r.makespan - 1.0);
+    }
+
+    #[test]
+    fn drain_keeps_running_jobs_and_blocks_new_placements() {
+        let t = trace(vec![job(0, 0.0, 1, 1.0, 0.5, 100.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        sim.start_job(0, vec![0]);
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::DrainStart(0), &mut change);
+        assert!(change.topology_changed);
+        assert!(change.killed.is_empty() && change.preempted.is_empty());
+        assert!(!sim.cluster.can_place(0), "draining node must reject new placements");
+        assert!(
+            matches!(sim.jobs[0].state, JobState::Running),
+            "drain never disturbs running jobs"
+        );
+        assert_eq!(sim.avail_nodes, 4, "draining still counts as capacity");
+        sim.apply_cluster_event(&ClusterEvent::DrainEnd(0), &mut change);
+        assert!(sim.cluster.can_place(0));
+    }
+
+    #[test]
+    fn shrink_preempts_gracefully_and_grow_restores() {
+        let t = trace(vec![
+            job(0, 0.0, 1, 0.5, 0.5, 100.0),
+            job(1, 0.0, 1, 0.5, 0.5, 100.0),
+        ]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        sim.start_job(0, vec![3]);
+        sim.start_job(1, vec![0]);
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::Shrink(2), &mut change);
+        // Highest-index up nodes go first: 3 and 2. Job 0 is preempted
+        // gracefully (image saved), job 1 is untouched.
+        assert_eq!(change.preempted, vec![0]);
+        assert!(change.killed.is_empty());
+        assert!(matches!(sim.jobs[0].state, JobState::Paused));
+        assert!(matches!(sim.jobs[1].state, JobState::Running));
+        assert!(!sim.cluster.up[3] && !sim.cluster.up[2]);
+        assert_eq!(sim.avail_nodes, 2);
+        assert_eq!(sim.jobs[0].preemptions, 1);
+        assert!((sim.gb_moved - 2.0).abs() < 1e-9, "pause writes 0.5 × 4 GB");
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::Grow(2), &mut change);
+        assert!(sim.cluster.up[2] && sim.cluster.up[3]);
+        assert_eq!(sim.avail_nodes, 4);
+    }
+
+    #[test]
+    fn drain_survives_an_outage_inside_its_window() {
+        // DrainStart, Fail, Repair, DrainEnd: the repaired node must stay
+        // unplaceable until the declared drain window actually ends.
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 10.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::DrainStart(1), &mut change);
+        sim.apply_cluster_event(&ClusterEvent::Fail(1), &mut change);
+        assert!(!sim.cluster.up[1]);
+        sim.apply_cluster_event(&ClusterEvent::Repair(1), &mut change);
+        assert!(sim.cluster.up[1]);
+        assert!(
+            !sim.cluster.can_place(1),
+            "repaired node is still inside its maintenance window"
+        );
+        sim.apply_cluster_event(&ClusterEvent::DrainEnd(1), &mut change);
+        assert!(sim.cluster.can_place(1));
+    }
+
+    #[test]
+    fn grow_prefers_shrunk_nodes_over_failed_ones() {
+        // Fail node 0 (it has its own Repair), then Shrink(1) takes node 3.
+        // Grow(1) must revive node 3 and leave node 0 for the Repair.
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 10.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::Fail(0), &mut change);
+        sim.apply_cluster_event(&ClusterEvent::Shrink(1), &mut change);
+        assert!(!sim.cluster.up[0] && !sim.cluster.up[3]);
+        sim.apply_cluster_event(&ClusterEvent::Grow(1), &mut change);
+        assert!(sim.cluster.up[3], "grow revives the shrunk node");
+        assert!(!sim.cluster.up[0], "failed node waits for its Repair");
+        sim.apply_cluster_event(&ClusterEvent::Repair(0), &mut change);
+        assert!(sim.cluster.up[0]);
+        assert_eq!(sim.avail_nodes, 4);
+    }
+
+    #[test]
+    fn shrink_never_removes_the_last_node() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 10.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::Shrink(99), &mut change);
+        assert_eq!(sim.avail_nodes, 1, "one node must survive any shrink");
+        assert_eq!(sim.cluster.up_count(), 1);
+    }
+
+    #[test]
+    fn grow_extends_the_pool_when_all_nodes_are_up() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 10.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        let mut change = PlatformChange::default();
+        sim.apply_cluster_event(&ClusterEvent::Grow(2), &mut change);
+        assert_eq!(sim.cluster.nodes, 6, "fresh nodes appended");
+        assert_eq!(sim.avail_nodes, 6);
+        assert!(sim.cluster.can_place(5));
     }
 
     #[test]

@@ -35,6 +35,11 @@ pub struct JobSim {
     pub first_start: Option<f64>,
     pub preemptions: u32,
     pub migrations: u32,
+    /// Times this job was killed by a node failure (scenario engine).
+    pub interruptions: u32,
+    /// Set when the job was killed and requeued: its next start pays the
+    /// rescheduling penalty even though it starts from the pending state.
+    pub requeue_penalty: bool,
 }
 
 impl JobSim {
@@ -50,6 +55,8 @@ impl JobSim {
             first_start: None,
             preemptions: 0,
             migrations: 0,
+            interruptions: 0,
+            requeue_penalty: false,
         }
     }
 
@@ -125,6 +132,12 @@ impl IndexSet {
 /// Homogeneous cluster: per-node CPU load (sum of placed tasks' needs; may
 /// exceed 1 — CPU is overloadable), free memory (rigid, never negative) and
 /// the multiset of placed tasks.
+///
+/// The scenario engine adds an availability mask: `up[n]` is false while a
+/// node is failed or elastically removed (it holds no tasks and counts as
+/// no capacity), and `draining[n]` marks a maintenance drain — running
+/// tasks stay and keep counting as capacity, but new placements are
+/// forbidden ([`Cluster::can_place`]).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     pub nodes: usize,
@@ -132,6 +145,11 @@ pub struct Cluster {
     pub free_mem: Vec<f64>,
     /// Tasks on each node as (job, count).
     pub tasks_on: Vec<Vec<(JobId, u32)>>,
+    /// Node is powered and healthy. Down nodes hold no tasks.
+    pub up: Vec<bool>,
+    /// Node is being drained: existing tasks run on, new placements are
+    /// forbidden.
+    pub draining: Vec<bool>,
 }
 
 impl Cluster {
@@ -141,6 +159,8 @@ impl Cluster {
             cpu_load: vec![0.0; nodes],
             free_mem: vec![1.0; nodes],
             tasks_on: vec![Vec::new(); nodes],
+            up: vec![true; nodes],
+            draining: vec![false; nodes],
         }
     }
 
@@ -149,7 +169,33 @@ impl Cluster {
         self.free_mem[n] + 1e-9 >= mem
     }
 
+    /// Whether a *new* task may be placed on `n`: the node is up and not
+    /// draining. Existing tasks on a draining node stay valid.
+    pub fn can_place(&self, n: NodeId) -> bool {
+        self.up[n] && !self.draining[n]
+    }
+
+    /// Count of up nodes (the platform's current capacity; draining nodes
+    /// still execute and therefore count).
+    pub fn up_count(&self) -> usize {
+        self.up.iter().filter(|&&u| u).count()
+    }
+
+    /// Extend the pool with one fresh, empty, up node (elastic grow beyond
+    /// the original size). Returns the new node's id.
+    pub fn add_node(&mut self) -> NodeId {
+        let n = self.nodes;
+        self.nodes += 1;
+        self.cpu_load.push(0.0);
+        self.free_mem.push(1.0);
+        self.tasks_on.push(Vec::new());
+        self.up.push(true);
+        self.draining.push(false);
+        n
+    }
+
     pub fn add_task(&mut self, n: NodeId, j: JobId, need: f64, mem: f64) {
+        debug_assert!(self.up[n], "placement on down node {n}");
         assert!(
             self.fits_mem(n, mem),
             "memory overflow on node {n}: free {} < {mem}",
@@ -243,6 +289,25 @@ mod tests {
         c.add_task(0, 1, 0.9, 0.1);
         assert!((c.cpu_load[0] - 1.8).abs() < 1e-12);
         assert!((c.max_load() - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn availability_mask_and_pool_growth() {
+        let mut c = Cluster::new(2);
+        assert!(c.can_place(0) && c.can_place(1));
+        assert_eq!(c.up_count(), 2);
+        c.up[0] = false;
+        assert!(!c.can_place(0));
+        assert_eq!(c.up_count(), 1);
+        c.up[0] = true;
+        c.draining[0] = true;
+        assert!(!c.can_place(0), "draining node rejects new placements");
+        assert_eq!(c.up_count(), 2, "draining still counts as capacity");
+        let n = c.add_node();
+        assert_eq!(n, 2);
+        assert_eq!(c.nodes, 3);
+        assert!(c.can_place(2));
+        assert!((c.free_mem[2] - 1.0).abs() < 1e-12);
     }
 
     #[test]

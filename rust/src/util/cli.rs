@@ -75,6 +75,47 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
             .unwrap_or(default)
     }
+
+    /// Reject unknown flags/options instead of silently ignoring them.
+    /// `options` are `--key value` arguments, `flags` are bare `--key`
+    /// switches. A known flag given a value (or a known option missing one)
+    /// is reported as such; anything else gets the accepted lists.
+    pub fn check_known(&self, options: &[&str], flags: &[&str]) -> Result<(), String> {
+        let list = |names: &[&str]| -> String {
+            if names.is_empty() {
+                "(none)".to_string()
+            } else {
+                names.iter().map(|n| format!("--{n}")).collect::<Vec<_>>().join(", ")
+            }
+        };
+        for k in self.options.keys() {
+            if options.contains(&k.as_str()) {
+                continue;
+            }
+            if flags.contains(&k.as_str()) {
+                return Err(format!("--{k} is a flag and takes no value"));
+            }
+            return Err(format!(
+                "unknown option --{k}\naccepted options: {}\naccepted flags: {}",
+                list(options),
+                list(flags)
+            ));
+        }
+        for f in &self.flags {
+            if flags.contains(&f.as_str()) {
+                continue;
+            }
+            if options.contains(&f.as_str()) {
+                return Err(format!("--{f} expects a value (--{f} VALUE or --{f}=VALUE)"));
+            }
+            return Err(format!(
+                "unknown flag --{f}\naccepted flags: {}\naccepted options: {}",
+                list(flags),
+                list(options)
+            ));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -113,5 +154,40 @@ mod tests {
     fn bad_number_panics() {
         let a = Args::parse(vec!["--n", "abc"]);
         a.usize_or("n", 1);
+    }
+
+    #[test]
+    fn check_known_accepts_declared_args() {
+        let a = Args::parse(vec!["simulate", "--jobs", "10", "--seed=3", "--bound"]);
+        assert!(a.check_known(&["jobs", "seed"], &["bound"]).is_ok());
+    }
+
+    #[test]
+    fn check_known_rejects_unknown_option_with_helpful_message() {
+        let a = Args::parse(vec!["simulate", "--jbos", "10"]);
+        let e = a.check_known(&["jobs", "seed"], &["bound"]).unwrap_err();
+        assert!(e.contains("unknown option --jbos"), "{e}");
+        assert!(e.contains("--jobs"), "message must list what is accepted: {e}");
+        assert!(e.contains("--bound"), "{e}");
+    }
+
+    #[test]
+    fn check_known_rejects_unknown_flag() {
+        let a = Args::parse(vec!["bench", "--turbo"]);
+        let e = a.check_known(&["jobs"], &["full"]).unwrap_err();
+        assert!(e.contains("unknown flag --turbo"), "{e}");
+        assert!(e.contains("--full"), "{e}");
+    }
+
+    #[test]
+    fn check_known_explains_flag_option_confusion() {
+        // A declared option given no value parses as a flag.
+        let a = Args::parse(vec!["bench", "--jobs"]);
+        let e = a.check_known(&["jobs"], &["full"]).unwrap_err();
+        assert!(e.contains("expects a value"), "{e}");
+        // A declared flag given a value parses as an option.
+        let b = Args::parse(vec!["bench", "--full", "yes", "--jobs", "3"]);
+        let e = b.check_known(&["jobs"], &["full"]).unwrap_err();
+        assert!(e.contains("takes no value"), "{e}");
     }
 }

@@ -6,8 +6,9 @@
 //! grid relies on.
 
 use dfrs::alloc::RustSolver;
+use dfrs::scenario::Scenario;
 use dfrs::sched::registry::make_policy;
-use dfrs::sim::{run_with, EngineKind, SimConfig, SimResult};
+use dfrs::sim::{run_scenario, run_with, EngineKind, SimConfig, SimResult};
 use dfrs::util::check::forall;
 use dfrs::util::rng::Rng;
 use dfrs::workload::lublin::{generate, LublinParams};
@@ -16,6 +17,16 @@ use dfrs::workload::{hpc2n, scale, Job, Trace};
 fn run_engine(alg: &str, trace: &Trace, engine: EngineKind) -> SimResult {
     let mut p = make_policy(alg, 600.0).unwrap();
     run_with(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver), engine)
+}
+
+fn run_engine_scenario(
+    alg: &str,
+    trace: &Trace,
+    engine: EngineKind,
+    scenario: &Scenario,
+) -> SimResult {
+    let mut p = make_policy(alg, 600.0).unwrap();
+    run_scenario(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver), engine, scenario)
 }
 
 /// Bit-level equality of every metric and every per-job trajectory.
@@ -46,6 +57,13 @@ fn assert_identical(ctx: &str, a: &SimResult, b: &SimResult) {
     assert_eq!(f(a.preempt_per_job), f(b.preempt_per_job), "{ctx}: preempt_per_job");
     assert_eq!(f(a.migrate_per_job), f(b.migrate_per_job), "{ctx}: migrate_per_job");
     assert_eq!(f(a.makespan), f(b.makespan), "{ctx}: makespan");
+    assert_eq!(a.interrupted_jobs, b.interrupted_jobs, "{ctx}: interrupted_jobs");
+    assert_eq!(
+        f(a.avail_node_seconds),
+        f(b.avail_node_seconds),
+        "{ctx}: avail_node_seconds"
+    );
+    assert_eq!(f(a.avail_utilization), f(b.avail_utilization), "{ctx}: avail_utilization");
     assert_eq!(a.jobs.len(), b.jobs.len(), "{ctx}: job count");
     for (j, (x, y)) in a.jobs.iter().zip(&b.jobs).enumerate() {
         assert_eq!(f(x.vt), f(y.vt), "{ctx}: job {j} vt {} vs {}", x.vt, y.vt);
@@ -59,6 +77,7 @@ fn assert_identical(ctx: &str, a: &SimResult, b: &SimResult) {
         assert_eq!(x.first_start.map(f), y.first_start.map(f), "{ctx}: job {j} first_start");
         assert_eq!(x.preemptions, y.preemptions, "{ctx}: job {j} preemptions");
         assert_eq!(x.migrations, y.migrations, "{ctx}: job {j} migrations");
+        assert_eq!(x.interruptions, y.interruptions, "{ctx}: job {j} interruptions");
     }
 }
 
@@ -132,6 +151,107 @@ fn random_trace(rng: &mut Rng) -> Trace {
         })
         .collect();
     Trace { jobs, nodes, cores_per_node: 4, node_mem_gb: 4.0 }
+}
+
+// ----- Scenario engine: the platform itself becomes dynamic -------------
+
+fn check_scenario(alg: &str, trace: &Trace, scenario: &Scenario, label: &str) {
+    let indexed = run_engine_scenario(alg, trace, EngineKind::Indexed, scenario);
+    let reference = run_engine_scenario(alg, trace, EngineKind::Reference, scenario);
+    assert_identical(&format!("{label} / {alg}"), &indexed, &reference);
+}
+
+/// Fraction `f` of the way through the trace's arrival span.
+fn span_at(trace: &Trace, f: f64) -> f64 {
+    let first = trace.jobs.first().map(|j| j.submit).unwrap_or(0.0);
+    let last = trace.jobs.last().map(|j| j.submit).unwrap_or(0.0);
+    first + f * (last - first).max(1.0)
+}
+
+#[test]
+fn empty_scenario_reproduces_plain_runs_bit_for_bit() {
+    // The acceptance bar for the scenario subsystem: with no events and no
+    // arrival modulation, run_scenario IS run_with — same floats, same
+    // event order, both engines.
+    let trace = generate(29, 70, &LublinParams::default());
+    let empty = Scenario::default();
+    for alg in ["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        for engine in [EngineKind::Indexed, EngineKind::Reference] {
+            let plain = run_engine(alg, &trace, engine);
+            let scn = run_engine_scenario(alg, &trace, engine, &empty);
+            assert_identical(&format!("empty-scenario {engine:?} / {alg}"), &plain, &scn);
+        }
+    }
+}
+
+#[test]
+fn engines_agree_under_failure_repair() {
+    // Staggered failures with repairs, on a loaded cluster so the failed
+    // nodes actually host work: kills, requeues and restart penalties all
+    // must replay identically in both engines.
+    let trace = scale::scale_to_load(&generate(31, 90, &LublinParams::default()), 0.7);
+    let s = Scenario::new("failure-repair")
+        .fail(0, span_at(&trace, 0.2), Some(span_at(&trace, 0.55)))
+        .fail(5, span_at(&trace, 0.3), Some(span_at(&trace, 0.6)))
+        .fail(11, span_at(&trace, 0.35), Some(span_at(&trace, 0.7)));
+    for alg in ["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        check_scenario(alg, &trace, &s, "failure-repair");
+    }
+}
+
+#[test]
+fn engines_agree_under_maintenance_drain() {
+    let trace = scale::scale_to_load(&generate(37, 80, &LublinParams::default()), 0.8);
+    let mut s = Scenario::new("drain-window");
+    for n in 0..(trace.nodes / 8).max(1) {
+        s = s.drain(n, span_at(&trace, 0.3), Some(span_at(&trace, 0.7)));
+    }
+    for alg in ["Greedy */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600", "MCB8 */OPT=MIN/MINVT=600"]
+    {
+        check_scenario(alg, &trace, &s, "drain");
+    }
+}
+
+#[test]
+fn engines_agree_under_burst_arrivals() {
+    // Arrival modulation warps the trace before simulation; both engines
+    // must see the identical warped trace and replay it identically.
+    let trace = generate(41, 90, &LublinParams::default());
+    let s = Scenario::new("burst")
+        .burst(span_at(&trace, 0.2), span_at(&trace, 0.45), 5.0)
+        .diurnal(86_400.0, 0.5, 0.0);
+    // Non-vacuous: the warp actually moved submissions.
+    let warped = s.modulate_arrivals(&trace);
+    assert!(
+        trace.jobs.iter().zip(&warped.jobs).any(|(a, b)| a.submit.to_bits() != b.submit.to_bits()),
+        "modulators should change the arrival process"
+    );
+    for alg in ["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        check_scenario(alg, &trace, &s, "burst");
+    }
+}
+
+#[test]
+fn engines_agree_under_elastic_capacity() {
+    let trace = scale::scale_to_load(&generate(43, 80, &LublinParams::default()), 0.7);
+    let k = (trace.nodes / 4).max(1);
+    let s = Scenario::new("elastic")
+        .shrink(k, span_at(&trace, 0.25))
+        .grow(k, span_at(&trace, 0.6))
+        .grow(2, span_at(&trace, 0.8)); // grow past the original pool size
+    for alg in ["GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600", "EASY"] {
+        check_scenario(alg, &trace, &s, "elastic");
+    }
+}
+
+#[test]
+fn engines_agree_under_combined_chaos() {
+    // Everything at once, via the built-in catalogue used by `--scenario`.
+    let trace = scale::scale_to_load(&generate(47, 70, &LublinParams::default()), 0.7);
+    let s = dfrs::scenario::builtin("chaos", &trace).expect("chaos builtin");
+    for alg in ["GreedyPM */per/OPT=MIN/MINVT=600", "/per/OPT=MIN"] {
+        check_scenario(alg, &trace, &s, "chaos");
+    }
 }
 
 #[test]
