@@ -1,0 +1,237 @@
+//! Packing-core benchmark (DESIGN.md §Packing internals): the seed packing
+//! core (`packing::reference` — per-probe allocations, per-victim rebuilds)
+//! vs the scratch-arena core (probe reuse, flat slab, victim pop) on live
+//! MCB8 and MCB8-stretch allocation states drawn from a 1000-job Lublin
+//! trace, plus the repack-skip cache replay rate and the allocation-event
+//! counts that contextualize it (how often each policy family actually runs
+//! the packing core over a full simulation).
+//!
+//! Every timed pair is also checked byte-identical, mirroring
+//! `tests/packing_equivalence.rs`. Writes `BENCH_packing.json` at the repo
+//! root to extend the perf trajectory (`BENCH_sim_engine.json`,
+//! `BENCH_scenario_engine.json`).
+//!
+//! Run: `cargo bench --bench packing` (`-- --quick` for the CI smoke run:
+//! one measured iteration on a small state).
+
+use dfrs::alloc::RustSolver;
+use dfrs::benchx::bench;
+use dfrs::packing::reference::{mcb8_allocate_seed, mcb8_stretch_allocate_seed};
+use dfrs::packing::search::{
+    collect_candidates, mcb8_allocate_prepared, Mcb8Scratch, PinRule, RepackCache,
+};
+use dfrs::sched::registry::make_policy;
+use dfrs::sched::stretch::{mcb8_stretch_allocate_into, StretchScratch};
+use dfrs::sched::Policy;
+use dfrs::sim::{run_with, EngineKind, JobId, PlatformChange, Sim, SimConfig};
+use dfrs::util::cli::Args;
+use dfrs::util::rng::Rng;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::Trace;
+
+const PIN: Option<PinRule> = Some(PinRule::MinVt(600.0));
+
+/// A live allocation state on the paper's 128-node cluster: the first
+/// `n_jobs` jobs of a 1000-job Lublin trace, ~half running (greedy-placed,
+/// virtual times straddling the MINVT bound), the rest pending.
+fn live_state(trace: &Trace, n_jobs: usize, seed: u64) -> Sim {
+    let cut = Trace {
+        jobs: trace.jobs.iter().take(n_jobs).cloned().collect(),
+        nodes: trace.nodes,
+        cores_per_node: trace.cores_per_node,
+        node_mem_gb: trace.node_mem_gb,
+    };
+    let mut sim = Sim::new(&cut, SimConfig::default(), Box::new(RustSolver));
+    sim.now = cut.jobs.last().map(|j| j.submit).unwrap_or(0.0) + 1.0;
+    let mut rng = Rng::new(seed);
+    for j in 0..n_jobs / 2 {
+        let spec = sim.jobs[j].spec.clone();
+        let mut shadow = sim.cluster.clone();
+        if let Some(pl) =
+            dfrs::sched::greedy::greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem)
+        {
+            sim.start_job(j, pl);
+            sim.jobs[j].vt = rng.range(1.0, 1400.0);
+        }
+    }
+    sim
+}
+
+/// Counts how many times each policy hook fires over a run — every one of
+/// these is (for the MCB8 family) a full packing binary search.
+struct Counting {
+    inner: Box<dyn Policy>,
+    events: u64,
+}
+
+impl Policy for Counting {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+        self.events += 1;
+        self.inner.on_submit(sim, j);
+    }
+    fn on_complete(&mut self, sim: &mut Sim, j: JobId) {
+        self.events += 1;
+        self.inner.on_complete(sim, j);
+    }
+    fn on_tick(&mut self, sim: &mut Sim) {
+        self.events += 1;
+        self.inner.on_tick(sim);
+    }
+    fn on_platform_change(&mut self, sim: &mut Sim, change: &PlatformChange) {
+        self.events += 1;
+        self.inner.on_platform_change(sim, change);
+    }
+    fn period(&self) -> Option<f64> {
+        self.inner.period()
+    }
+}
+
+fn count_events(trace: &Trace, alg: &str) -> u64 {
+    let mut p = Counting { inner: make_policy(alg, 600.0).expect("policy"), events: 0 };
+    run_with(trace, &mut p, SimConfig::default(), Box::new(RustSolver), EngineKind::Indexed);
+    p.events
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let args = Args::parse(argv);
+    let quick = args.flag("quick");
+    let seed = args.u64_or("seed", 7);
+    let trace_jobs = if quick { 120 } else { args.usize_or("jobs", 1000) };
+    let iters = if quick { 1 } else { 20 };
+    let warmup = if quick { 1 } else { 3 };
+    let sizes: &[usize] = if quick { &[60] } else { &[102, 256, 512] };
+
+    let trace = generate(seed, trace_jobs, &LublinParams::default());
+    println!("== packing core: seed (pre-arena) vs scratch-arena ==");
+    println!(
+        "trace: lublin seed={seed}, {trace_jobs} jobs x {} nodes; pin MINVT=600\n",
+        trace.nodes
+    );
+
+    let mut entries = Vec::new();
+    let mut speedup_mcb8 = f64::NAN;
+    let mut speedup_stretch = f64::NAN;
+    let mut all_identical = true;
+
+    for &n_jobs in sizes {
+        let sim = live_state(&trace, n_jobs, 99);
+
+        // --- plain MCB8 allocation path ---------------------------------
+        let s_seed = bench(&format!("mcb8_seed   [{n_jobs} live]"), warmup, iters, || {
+            std::hint::black_box(mcb8_allocate_seed(&sim, PIN).yield_achieved);
+        });
+        println!("{}", s_seed.report());
+        let mut scratch = Mcb8Scratch::default();
+        let s_arena = bench(&format!("mcb8_arena  [{n_jobs} live]"), warmup, iters, || {
+            let cands = collect_candidates(&sim);
+            let out = mcb8_allocate_prepared(&sim, PIN, &cands, &mut scratch);
+            std::hint::black_box(out.yield_achieved);
+        });
+        println!("{}", s_arena.report());
+        let mcb8_speedup = s_seed.p50_s / s_arena.p50_s.max(1e-12);
+        let identical = {
+            let a = mcb8_allocate_seed(&sim, PIN);
+            let cands = collect_candidates(&sim);
+            let b = mcb8_allocate_prepared(&sim, PIN, &cands, &mut scratch);
+            a.mapping == b.mapping
+                && a.dropped == b.dropped
+                && a.yield_achieved.to_bits() == b.yield_achieved.to_bits()
+        };
+        all_identical &= identical;
+
+        // --- MCB8-stretch allocation path -------------------------------
+        let t_seed = bench(&format!("stretch_seed [{n_jobs} live]"), warmup, iters, || {
+            std::hint::black_box(mcb8_stretch_allocate_seed(&sim, 600.0, PIN).target_stretch);
+        });
+        println!("{}", t_seed.report());
+        let mut st_scratch = StretchScratch::default();
+        let t_arena = bench(&format!("stretch_arena[{n_jobs} live]"), warmup, iters, || {
+            let out = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_scratch);
+            std::hint::black_box(out.target_stretch);
+        });
+        println!("{}", t_arena.report());
+        let stretch_speedup = t_seed.p50_s / t_arena.p50_s.max(1e-12);
+        let st_identical = {
+            let a = mcb8_stretch_allocate_seed(&sim, 600.0, PIN);
+            let b = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_scratch);
+            a == b
+        };
+        all_identical &= st_identical;
+
+        // --- repack-skip cache on an unchanged state --------------------
+        let mut cache = RepackCache::new();
+        cache.allocate(&sim, PIN); // warm (miss)
+        let c_hit = bench(&format!("mcb8_cached [{n_jobs} live]"), warmup, iters, || {
+            std::hint::black_box(cache.allocate(&sim, PIN).yield_achieved);
+        });
+        println!("{}", c_hit.report());
+        println!(
+            "  speedup: mcb8 {mcb8_speedup:.2}x, stretch {stretch_speedup:.2}x, \
+             cache hits {} / misses {}; byte-identical: {}\n",
+            cache.hits(),
+            cache.misses(),
+            identical && st_identical
+        );
+        speedup_mcb8 = mcb8_speedup;
+        speedup_stretch = stretch_speedup;
+
+        entries.push(format!(
+            "{{\"live_jobs\": {n_jobs}, \"mcb8_seed_p50_s\": {:.6}, \"mcb8_arena_p50_s\": {:.6}, \
+             \"mcb8_speedup\": {mcb8_speedup:.2}, \"stretch_seed_p50_s\": {:.6}, \
+             \"stretch_arena_p50_s\": {:.6}, \"stretch_speedup\": {stretch_speedup:.2}, \
+             \"cache_hit_p50_s\": {:.9}, \"byte_identical\": {}}}",
+            s_seed.p50_s,
+            s_arena.p50_s,
+            t_seed.p50_s,
+            t_arena.p50_s,
+            c_hit.p50_s,
+            identical && st_identical
+        ));
+    }
+
+    // --- allocation-event counts: how often the packing core runs -------
+    println!("== allocation events over a full run (packing-core invocations) ==");
+    let count_trace = if quick {
+        trace.clone()
+    } else {
+        Trace {
+            jobs: trace.jobs.iter().take(400).cloned().collect(),
+            ..trace.clone()
+        }
+    };
+    let greedy_events = count_events(&count_trace, "Greedy */OPT=MIN");
+    let mcb8_events = count_events(&count_trace, "/per/OPT=MIN");
+    println!(
+        "greedy-family events: {greedy_events}; MCB8/per events: {mcb8_events} \
+         (every MCB8 event is a full yield binary search)\n"
+    );
+
+    // headline: the slower of the two path speedups at the largest size —
+    // the conservative claim.
+    let headline = speedup_mcb8.min(speedup_stretch);
+    let json = format!(
+        "{{\n  \"bench\": \"packing\",\n  \"trace\": {{\"generator\": \"lublin\", \
+         \"jobs\": {trace_jobs}, \"nodes\": {}, \"seed\": {seed}}},\n  \"pin\": \"MINVT=600\",\n  \
+         \"runs\": [\n    {}\n  ],\n  \"events\": {{\"greedy_star\": {greedy_events}, \
+         \"mcb8_per\": {mcb8_events}}},\n  \"speedup_mcb8\": {speedup_mcb8:.2},\n  \
+         \"speedup_stretch\": {speedup_stretch:.2},\n  \"speedup\": {headline:.2},\n  \
+         \"speedup_note\": \"headline = min(mcb8, stretch) p50 speedup at the largest live-set \
+         size; seed baseline = packing::reference (pre-arena core)\",\n  \
+         \"bit_identical\": {all_identical}\n}}\n",
+        trace.nodes,
+        entries.join(",\n    ")
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_packing.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
+    if !all_identical {
+        eprintln!("ERROR: packing cores diverged — see tests/packing_equivalence.rs");
+        std::process::exit(1);
+    }
+}

@@ -10,6 +10,13 @@
 //! it falls back to the other list, and when neither fits it moves to the
 //! next node. Pinned jobs (MINVT/MINFT) are pre-placed at their existing
 //! placement before the fill loop.
+//!
+//! The core is [`pack_into`], which runs entirely out of a caller-owned
+//! [`PackScratch`] arena (zero heap allocations when warm — DESIGN.md
+//! §Packing internals); [`pack_masked`]/[`pack`] are thin allocating
+//! wrappers kept for callers outside the binary-search hot path. The seed
+//! (pre-arena) implementation survives verbatim in `packing::reference` as
+//! the byte-identity oracle and the baseline of `benches/packing.rs`.
 
 use crate::sim::NodeId;
 
@@ -28,11 +35,12 @@ pub struct PackJob {
 }
 
 /// Successful packing: one placement per job, same order as the input.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PackResult {
     pub placements: Vec<(usize, Vec<NodeId>)>,
 }
 
+#[derive(Debug, Clone, Copy)]
 struct NodeState {
     cpu: f64,
     mem: f64,
@@ -47,6 +55,67 @@ pub enum SortKey {
     Max,
     /// cpu + mem — Leinberger et al. [37].
     Sum,
+}
+
+/// Reusable scratch arena for the packing core (DESIGN.md §Packing
+/// internals). All buffers the fill loop needs — node states, per-job
+/// remaining-task counters, cached sort keys, the two sorted index lists,
+/// and the flat placement *slab* — live here and are reused across probes,
+/// so a warm `pack_into` call performs **zero heap allocations**. Successful
+/// placements are read back through [`PackScratch::placement`] /
+/// [`PackScratch::slab`]: job `i` of the packed input occupies
+/// `slab[offsets[i]..offsets[i + 1]]`, one `NodeId` per task, in exactly the
+/// order the seed packing pushed them into its per-job `Vec`s.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    state: Vec<NodeState>,
+    remaining: Vec<u32>,
+    keys: Vec<f64>,
+    cpu_list: Vec<usize>,
+    mem_list: Vec<usize>,
+    slab: Vec<NodeId>,
+    offsets: Vec<usize>,
+    filled: Vec<u32>,
+}
+
+impl PackScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Placement of job `i` (input order) after a successful `pack_into`.
+    pub fn placement(&self, i: usize) -> &[NodeId] {
+        &self.slab[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// The flat placement slab of the last successful `pack_into`.
+    pub fn slab(&self) -> &[NodeId] {
+        &self.slab
+    }
+
+    /// Per-job slab offsets (`jobs.len() + 1` entries).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Snapshot the slab into caller-owned buffers (capacity is reused, so
+    /// a warm snapshot allocates nothing). Binary searches use this to keep
+    /// the best feasible packing while later probes overwrite the arena.
+    pub fn save_to(&self, slab: &mut Vec<NodeId>, offsets: &mut Vec<usize>) {
+        slab.clone_from(&self.slab);
+        offsets.clone_from(&self.offsets);
+    }
+
+    /// Materialize the slab into the allocating [`PackResult`] shape.
+    pub fn to_result(&self, jobs: &[PackJob]) -> PackResult {
+        PackResult {
+            placements: jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| (j.id, self.placement(i).to_vec()))
+                .collect(),
+        }
+    }
 }
 
 /// Attempt to pack all jobs; returns None if any task cannot be placed.
@@ -64,24 +133,58 @@ pub fn pack_with_key(jobs: &[PackJob], nodes: usize, sort_key: SortKey) -> Optio
 /// get zero capacity, so no task — pinned or free — lands on a down or
 /// draining node. `None` (or an all-false mask) is the static platform and
 /// packs identically to the pre-scenario code.
+///
+/// Convenience wrapper over [`pack_into`] with a transient scratch; hot
+/// paths (the MCB8 binary searches) hold a [`PackScratch`] and call
+/// `pack_into` directly so probes stay allocation-free.
 pub fn pack_masked(
     jobs: &[PackJob],
     nodes: usize,
     sort_key: SortKey,
     blocked: Option<&[bool]>,
 ) -> Option<PackResult> {
+    let mut scratch = PackScratch::new();
+    if pack_into(jobs, nodes, sort_key, blocked, &mut scratch) {
+        Some(scratch.to_result(jobs))
+    } else {
+        None
+    }
+}
+
+/// The zero-allocation packing core: identical fill logic to the seed
+/// `pack_masked` (preserved in `packing::reference` as the byte-identity
+/// oracle), but every buffer comes from `scratch` and placements land in
+/// the flat slab instead of per-job `Vec`s. Returns true on success, with
+/// the placements readable via `scratch.placement(i)`.
+pub fn pack_into(
+    jobs: &[PackJob],
+    nodes: usize,
+    sort_key: SortKey,
+    blocked: Option<&[bool]>,
+    scratch: &mut PackScratch,
+) -> bool {
+    let PackScratch { state, remaining, keys, cpu_list, mem_list, slab, offsets, filled } =
+        scratch;
     let is_blocked = |n: usize| blocked.map(|b| b[n]).unwrap_or(false);
-    let mut state: Vec<NodeState> = (0..nodes)
-        .map(|n| {
-            if is_blocked(n) {
-                NodeState { cpu: 0.0, mem: 0.0 }
-            } else {
-                NodeState { cpu: 1.0, mem: 1.0 }
-            }
-        })
-        .collect();
-    let mut placements: Vec<(usize, Vec<NodeId>)> =
-        jobs.iter().map(|j| (j.id, Vec::with_capacity(j.tasks as usize))).collect();
+    state.clear();
+    state.extend((0..nodes).map(|n| {
+        if is_blocked(n) {
+            NodeState { cpu: 0.0, mem: 0.0 }
+        } else {
+            NodeState { cpu: 1.0, mem: 1.0 }
+        }
+    }));
+    offsets.clear();
+    filled.clear();
+    let mut total = 0usize;
+    for j in jobs {
+        offsets.push(total);
+        total += j.tasks as usize;
+        filled.push(0);
+    }
+    offsets.push(total);
+    slab.clear();
+    slab.resize(total, 0);
 
     // Pre-place pinned jobs.
     for (idx, j) in jobs.iter().enumerate() {
@@ -89,41 +192,49 @@ pub fn pack_masked(
             debug_assert_eq!(pin.len(), j.tasks as usize);
             for &n in pin {
                 if n >= nodes {
-                    return None;
+                    return false;
                 }
                 let s = &mut state[n];
                 if s.cpu + 1e-9 < j.cpu_req || s.mem + 1e-9 < j.mem {
-                    return None; // pinned job no longer fits at this yield
+                    return false; // pinned job no longer fits at this yield
                 }
                 s.cpu -= j.cpu_req;
                 s.mem -= j.mem;
-                placements[idx].1.push(n);
+                slab[offsets[idx] + filled[idx] as usize] = n;
+                filled[idx] += 1;
             }
         }
     }
 
     // Remaining tasks per unpinned job, in two sorted lists of job indices.
-    let mut remaining: Vec<u32> =
-        jobs.iter().map(|j| if j.pinned.is_some() { 0 } else { j.tasks }).collect();
-    let key = |j: &PackJob| match sort_key {
-        SortKey::Max => j.cpu_req.max(j.mem),
-        SortKey::Sum => j.cpu_req + j.mem,
-    };
-    let mut cpu_list: Vec<usize> = (0..jobs.len())
-        .filter(|&i| remaining[i] > 0 && jobs[i].cpu_req >= jobs[i].mem)
-        .collect();
-    let mut mem_list: Vec<usize> = (0..jobs.len())
-        .filter(|&i| remaining[i] > 0 && jobs[i].cpu_req < jobs[i].mem)
-        .collect();
-    let sort_desc = |l: &mut Vec<usize>| {
-        l.sort_by(|&a, &b| key(&jobs[b]).partial_cmp(&key(&jobs[a])).unwrap())
-    };
-    sort_desc(&mut cpu_list);
-    sort_desc(&mut mem_list);
+    // Sort keys are computed once per job here instead of inside the
+    // comparator — same values, same stable order, fewer flops.
+    remaining.clear();
+    keys.clear();
+    for j in jobs {
+        remaining.push(if j.pinned.is_some() { 0 } else { j.tasks });
+        keys.push(match sort_key {
+            SortKey::Max => j.cpu_req.max(j.mem),
+            SortKey::Sum => j.cpu_req + j.mem,
+        });
+    }
+    cpu_list.clear();
+    mem_list.clear();
+    for (i, j) in jobs.iter().enumerate() {
+        if remaining[i] > 0 {
+            if j.cpu_req >= j.mem {
+                cpu_list.push(i);
+            } else {
+                mem_list.push(i);
+            }
+        }
+    }
+    cpu_list.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap());
+    mem_list.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap());
 
     let total_left: u32 = remaining.iter().sum();
     if total_left == 0 {
-        return Some(PackResult { placements });
+        return true;
     }
 
     let mut placed = 0u32;
@@ -143,29 +254,28 @@ pub fn pack_masked(
             // memory exceeds available CPU, pick a memory-intensive job.
             let prefer_mem = s.mem > s.cpu;
             let pick = |list: &[usize]| -> Option<usize> {
-                list.iter()
-                    .copied()
-                    .find(|&i| {
-                        remaining[i] > 0
-                            && jobs[i].cpu_req <= s.cpu + 1e-9
-                            && jobs[i].mem <= s.mem + 1e-9
-                    })
+                list.iter().copied().find(|&i| {
+                    remaining[i] > 0
+                        && jobs[i].cpu_req <= s.cpu + 1e-9
+                        && jobs[i].mem <= s.mem + 1e-9
+                })
             };
             let choice = if prefer_mem {
-                pick(&mem_list).or_else(|| pick(&cpu_list))
+                pick(mem_list).or_else(|| pick(cpu_list))
             } else {
-                pick(&cpu_list).or_else(|| pick(&mem_list))
+                pick(cpu_list).or_else(|| pick(mem_list))
             };
             let Some(i) = choice else { break };
             let s = &mut state[n];
             s.cpu -= jobs[i].cpu_req;
             s.mem -= jobs[i].mem;
             remaining[i] -= 1;
-            placements[i].1.push(n);
+            slab[offsets[i] + filled[i] as usize] = n;
+            filled[i] += 1;
             placed += 1;
             if placed == total_left {
                 // Drop exhausted ids lazily; all tasks placed.
-                return Some(PackResult { placements });
+                return true;
             }
             if remaining[i] == 0 {
                 cpu_list.retain(|&x| x != i);
@@ -173,10 +283,10 @@ pub fn pack_masked(
             }
         }
         if pristine && placed == placed_before {
-            return None; // an empty node took nothing: no empty node can
+            return false; // an empty node took nothing: no empty node can
         }
     }
-    None
+    false
 }
 
 #[cfg(test)]
@@ -320,6 +430,76 @@ mod tests {
                             return Err(format!("node {n} over capacity {} {}", cpu[n], mem[n]));
                         }
                     }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless_across_calls() {
+        // One arena, many packs of different shapes: every call must give
+        // exactly what a fresh arena gives (no state leaks between calls).
+        let mut scratch = PackScratch::new();
+        let cases: Vec<(Vec<PackJob>, usize)> = vec![
+            (vec![job(0, 2, 0.4, 0.3), job(1, 1, 0.2, 0.6)], 2),
+            (vec![job(0, 2, 0.1, 0.8), job(1, 1, 0.1, 0.7)], 1), // infeasible
+            (
+                vec![
+                    PackJob { id: 0, tasks: 2, cpu_req: 0.5, mem: 0.5, pinned: Some(vec![1, 2]) },
+                    job(1, 1, 0.4, 0.4),
+                ],
+                3,
+            ),
+            (vec![job(0, 3, 0.0, 0.5), job(1, 3, 0.0, 0.5)], 3),
+            (vec![job(0, 1, 0.9, 0.1)], 4),
+        ];
+        for (jobs, nodes) in &cases {
+            let warm = if pack_into(jobs, *nodes, SortKey::Max, None, &mut scratch) {
+                Some(scratch.to_result(jobs))
+            } else {
+                None
+            };
+            let fresh = pack(jobs, *nodes);
+            assert_eq!(warm, fresh, "warm scratch diverged on {} nodes", nodes);
+        }
+    }
+
+    #[test]
+    fn prop_all_false_mask_is_byte_identical_to_unmasked_pack() {
+        // Satellite: pack_masked with an all-false mask must be the static
+        // platform, byte for byte, including pinned jobs.
+        forall(
+            123,
+            60,
+            |rng: &mut Rng| {
+                let nodes = 2 + rng.below(6) as usize;
+                let njobs = 1 + rng.below(8) as usize;
+                let jobs: Vec<PackJob> = (0..njobs)
+                    .map(|id| {
+                        let tasks = 1 + rng.below(3) as u32;
+                        let pinned = if id == 0 && rng.chance(0.3) {
+                            Some((0..tasks).map(|k| k as usize % nodes).collect())
+                        } else {
+                            None
+                        };
+                        PackJob {
+                            id,
+                            tasks,
+                            cpu_req: rng.range(0.0, 0.9),
+                            mem: rng.range(0.05, 0.9),
+                            pinned,
+                        }
+                    })
+                    .collect();
+                (jobs, nodes)
+            },
+            |(jobs, nodes)| {
+                let mask = vec![false; *nodes];
+                let masked = pack_masked(jobs, *nodes, SortKey::Max, Some(&mask));
+                let plain = pack(jobs, *nodes);
+                if masked != plain {
+                    return Err(format!("all-false mask diverged: {masked:?} vs {plain:?}"));
                 }
                 Ok(())
             },

@@ -5,8 +5,15 @@
 //! (MINVT/MINFT remap limiting) and lowest-priority job dropping when no
 //! yield is feasible.
 
+//! Perf (DESIGN.md §Packing internals): the live path runs out of reusable
+//! scratch arenas (`mcb8::PackScratch`, `search::Mcb8Scratch`) with a
+//! repack-skip cache (`search::RepackCache`) on top; the seed
+//! implementation survives in [`reference`] as the byte-identity oracle and
+//! the baseline of `benches/packing.rs`.
+
 pub mod mcb8;
+pub mod reference;
 pub mod search;
 
-pub use mcb8::{pack, PackJob, PackResult};
-pub use search::{mcb8_allocate, Mcb8Outcome};
+pub use mcb8::{pack, PackJob, PackResult, PackScratch};
+pub use search::{mcb8_allocate, Mcb8Outcome, RepackCache};

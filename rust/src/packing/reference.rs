@@ -1,0 +1,317 @@
+//! The **seed packing core**, preserved verbatim from before the
+//! scratch-arena rework (DESIGN.md §Packing internals) — the packing
+//! counterpart of `sim::EngineKind::Reference`:
+//!
+//! - [`pack_masked_seed`] allocates fresh node states, per-job placement
+//!   `Vec`s and both sorted index lists on every call, and recomputes sort
+//!   keys inside the comparator;
+//! - [`mcb8_allocate_seed`] rebuilds the pack-job vector (including
+//!   pinned-placement clones) from scratch after every dropped victim;
+//! - [`mcb8_stretch_allocate_seed`] rebuilds the pack-job vector *and* the
+//!   blocked mask on **every** binary-search probe — the asymmetry the
+//!   rework removed.
+//!
+//! `tests/packing_equivalence.rs` proves the live scratch-arena path is
+//! byte-identical to these, and `benches/packing.rs` uses them as the
+//! pre-rework baseline. Do not "optimize" this module: its value is being
+//! exactly the seed arithmetic in the seed order.
+
+use super::mcb8::{PackJob, PackResult, SortKey};
+use super::search::{Mcb8Outcome, PinRule};
+use crate::sched::priority::sort_by_priority;
+use crate::sched::stretch::StretchOutcome;
+use crate::sim::{JobId, JobState, NodeId, Sim};
+
+struct NodeState {
+    cpu: f64,
+    mem: f64,
+}
+
+/// Seed `pack_masked`: per-call allocations, per-job placement vectors.
+pub fn pack_masked_seed(
+    jobs: &[PackJob],
+    nodes: usize,
+    sort_key: SortKey,
+    blocked: Option<&[bool]>,
+) -> Option<PackResult> {
+    let is_blocked = |n: usize| blocked.map(|b| b[n]).unwrap_or(false);
+    let mut state: Vec<NodeState> = (0..nodes)
+        .map(|n| {
+            if is_blocked(n) {
+                NodeState { cpu: 0.0, mem: 0.0 }
+            } else {
+                NodeState { cpu: 1.0, mem: 1.0 }
+            }
+        })
+        .collect();
+    let mut placements: Vec<(usize, Vec<NodeId>)> =
+        jobs.iter().map(|j| (j.id, Vec::with_capacity(j.tasks as usize))).collect();
+
+    for (idx, j) in jobs.iter().enumerate() {
+        if let Some(pin) = &j.pinned {
+            debug_assert_eq!(pin.len(), j.tasks as usize);
+            for &n in pin {
+                if n >= nodes {
+                    return None;
+                }
+                let s = &mut state[n];
+                if s.cpu + 1e-9 < j.cpu_req || s.mem + 1e-9 < j.mem {
+                    return None;
+                }
+                s.cpu -= j.cpu_req;
+                s.mem -= j.mem;
+                placements[idx].1.push(n);
+            }
+        }
+    }
+
+    let mut remaining: Vec<u32> =
+        jobs.iter().map(|j| if j.pinned.is_some() { 0 } else { j.tasks }).collect();
+    let key = |j: &PackJob| match sort_key {
+        SortKey::Max => j.cpu_req.max(j.mem),
+        SortKey::Sum => j.cpu_req + j.mem,
+    };
+    let mut cpu_list: Vec<usize> = (0..jobs.len())
+        .filter(|&i| remaining[i] > 0 && jobs[i].cpu_req >= jobs[i].mem)
+        .collect();
+    let mut mem_list: Vec<usize> = (0..jobs.len())
+        .filter(|&i| remaining[i] > 0 && jobs[i].cpu_req < jobs[i].mem)
+        .collect();
+    let sort_desc = |l: &mut Vec<usize>| {
+        l.sort_by(|&a, &b| key(&jobs[b]).partial_cmp(&key(&jobs[a])).unwrap())
+    };
+    sort_desc(&mut cpu_list);
+    sort_desc(&mut mem_list);
+
+    let total_left: u32 = remaining.iter().sum();
+    if total_left == 0 {
+        return Some(PackResult { placements });
+    }
+
+    let mut placed = 0u32;
+    for n in 0..nodes {
+        let pristine = state[n].cpu >= 1.0 - 1e-12 && state[n].mem >= 1.0 - 1e-12;
+        let placed_before = placed;
+        loop {
+            let s = &state[n];
+            let prefer_mem = s.mem > s.cpu;
+            let pick = |list: &[usize]| -> Option<usize> {
+                list.iter().copied().find(|&i| {
+                    remaining[i] > 0
+                        && jobs[i].cpu_req <= s.cpu + 1e-9
+                        && jobs[i].mem <= s.mem + 1e-9
+                })
+            };
+            let choice = if prefer_mem {
+                pick(&mem_list).or_else(|| pick(&cpu_list))
+            } else {
+                pick(&cpu_list).or_else(|| pick(&mem_list))
+            };
+            let Some(i) = choice else { break };
+            let s = &mut state[n];
+            s.cpu -= jobs[i].cpu_req;
+            s.mem -= jobs[i].mem;
+            remaining[i] -= 1;
+            placements[i].1.push(n);
+            placed += 1;
+            if placed == total_left {
+                return Some(PackResult { placements });
+            }
+            if remaining[i] == 0 {
+                cpu_list.retain(|&x| x != i);
+                mem_list.retain(|&x| x != i);
+            }
+        }
+        if pristine && placed == placed_before {
+            return None;
+        }
+    }
+    None
+}
+
+const ACCURACY: f64 = 0.01;
+
+fn build_pack_jobs(sim: &Sim, candidates: &[JobId], y: f64, pin: Option<PinRule>) -> Vec<PackJob> {
+    candidates
+        .iter()
+        .map(|&j| {
+            let spec = &sim.jobs[j].spec;
+            let pinned = match pin {
+                Some(rule)
+                    if rule.pins(sim, j)
+                        && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
+                {
+                    Some(sim.jobs[j].placement.clone())
+                }
+                _ => None,
+            };
+            PackJob {
+                id: j,
+                tasks: spec.tasks,
+                cpu_req: (spec.cpu_need * y).min(1.0),
+                mem: spec.mem,
+                pinned,
+            }
+        })
+        .collect()
+}
+
+/// Seed MCB8 outer loop: pack-job vector rebuilt per dropped victim.
+pub fn mcb8_allocate_seed(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
+    let mut candidates: Vec<JobId> = sim.running();
+    candidates.extend(sim.paused());
+    candidates.extend(sim.pending());
+    sort_by_priority(sim, &mut candidates);
+    let nodes = sim.cluster.nodes;
+    let blocked: Vec<bool> = (0..nodes).map(|n| !sim.cluster.can_place(n)).collect();
+    let mut dropped = Vec::new();
+
+    loop {
+        if candidates.is_empty() {
+            return Mcb8Outcome { mapping: vec![], yield_achieved: 0.0, dropped };
+        }
+        let mut pack_jobs = build_pack_jobs(sim, &candidates, 1.0, pin);
+        let needs: Vec<f64> = candidates.iter().map(|&j| sim.jobs[j].spec.cpu_need).collect();
+        let mut try_pack = |y: f64| {
+            for (pj, need) in pack_jobs.iter_mut().zip(&needs) {
+                pj.cpu_req = (need * y).min(1.0);
+            }
+            pack_masked_seed(&pack_jobs, nodes, SortKey::Max, Some(&blocked))
+        };
+
+        if let Some(r) = try_pack(1.0) {
+            return Mcb8Outcome { mapping: r.placements, yield_achieved: 1.0, dropped };
+        }
+        let Some(mut best) = try_pack(0.0) else {
+            let victim = candidates.pop().unwrap();
+            dropped.push(victim);
+            continue;
+        };
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        while hi - lo > ACCURACY {
+            let mid = 0.5 * (lo + hi);
+            match try_pack(mid) {
+                Some(r) => {
+                    best = r;
+                    lo = mid;
+                }
+                None => hi = mid,
+            }
+        }
+        return Mcb8Outcome { mapping: best.placements, yield_achieved: lo, dropped };
+    }
+}
+
+fn required_yield(sim: &Sim, j: JobId, s: f64, period: f64) -> Option<f64> {
+    let job = &sim.jobs[j];
+    let ft = job.flow_time(sim.now);
+    let y = (((ft + period) / s) - job.vt) / period;
+    if y > 1.0 + 1e-9 {
+        None
+    } else {
+        Some(y.clamp(0.0, 1.0))
+    }
+}
+
+fn pins(rule: PinRule, sim: &Sim, j: JobId) -> bool {
+    match rule {
+        PinRule::MinVt(b) => sim.jobs[j].vt < b,
+        PinRule::MinFt(b) => sim.jobs[j].flow_time(sim.now) < b,
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn try_target(
+    sim: &Sim,
+    candidates: &[JobId],
+    s: f64,
+    period: f64,
+    pin: Option<PinRule>,
+) -> Option<(Vec<(JobId, Vec<NodeId>)>, Vec<(JobId, f64)>)> {
+    let mut yields = Vec::with_capacity(candidates.len());
+    let mut pack_jobs = Vec::with_capacity(candidates.len());
+    for &j in candidates {
+        let y = required_yield(sim, j, s, period)?;
+        let spec = &sim.jobs[j].spec;
+        let pinned = match pin {
+            Some(rule)
+                if matches!(sim.jobs[j].state, JobState::Running)
+                    && pins(rule, sim, j)
+                    && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
+            {
+                Some(sim.jobs[j].placement.clone())
+            }
+            _ => None,
+        };
+        yields.push((j, y));
+        pack_jobs.push(PackJob {
+            id: j,
+            tasks: spec.tasks,
+            cpu_req: (spec.cpu_need * y).min(1.0),
+            mem: spec.mem,
+            pinned,
+        });
+    }
+    let blocked: Vec<bool> =
+        (0..sim.cluster.nodes).map(|n| !sim.cluster.can_place(n)).collect();
+    pack_masked_seed(&pack_jobs, sim.cluster.nodes, SortKey::Max, Some(&blocked))
+        .map(|r| (r.placements, yields))
+}
+
+/// Seed MCB8-stretch: `try_target` rebuilds everything per probe.
+pub fn mcb8_stretch_allocate_seed(
+    sim: &Sim,
+    period: f64,
+    pin: Option<PinRule>,
+) -> StretchOutcome {
+    let mut candidates: Vec<JobId> = sim.running();
+    candidates.extend(sim.paused());
+    candidates.extend(sim.pending());
+    sort_by_priority(sim, &mut candidates);
+    let mut dropped = Vec::new();
+
+    loop {
+        if candidates.is_empty() {
+            return StretchOutcome {
+                mapping: vec![],
+                yields: vec![],
+                target_stretch: f64::INFINITY,
+                dropped,
+            };
+        }
+        let probe = |inv: f64| {
+            let s = if inv <= 0.0 { f64::INFINITY } else { 1.0 / inv };
+            try_target(sim, &candidates, s, period, pin)
+        };
+        let Some(mut best) = probe(0.0) else {
+            let victim = candidates.pop().unwrap();
+            dropped.push(victim);
+            continue;
+        };
+        let mut best_inv = 0.0f64;
+        if let Some(r) = probe(1.0) {
+            best = r;
+            best_inv = 1.0;
+        } else {
+            let (mut lo, mut hi) = (0.0f64, 1.0f64);
+            while hi - lo > ACCURACY {
+                let mid = 0.5 * (lo + hi);
+                match probe(mid) {
+                    Some(r) => {
+                        best = r;
+                        lo = mid;
+                        best_inv = mid;
+                    }
+                    None => hi = mid,
+                }
+            }
+        }
+        let (mapping, yields) = best;
+        return StretchOutcome {
+            mapping,
+            yields,
+            target_stretch: if best_inv > 0.0 { 1.0 / best_inv } else { f64::INFINITY },
+            dropped,
+        };
+    }
+}

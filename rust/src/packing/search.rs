@@ -2,8 +2,21 @@
 //! highest Y for which the vector-packing succeeds (accuracy 0.01), with
 //! MINVT/MINFT pinning and lowest-priority-job dropping when no yield is
 //! feasible.
+//!
+//! Perf (DESIGN.md §Packing internals): a full allocation runs out of a
+//! reusable [`Mcb8Scratch`] — the pack-job vector (with pinned-placement
+//! clones) and the blocked mask are built once per candidate set, each
+//! binary-search probe only rewrites the CPU requirements, the drop-restart
+//! loop pops the victim instead of rebuilding, and the best feasible
+//! packing is snapshotted as a flat slab. [`RepackCache`] adds a
+//! behavior-preserving repack-skip on top: when nothing observable changed
+//! since the previous allocation (same priority order, same pin set, same
+//! platform epoch), the cached [`Mcb8Outcome`] is returned without touching
+//! the packing core at all. The seed implementation is preserved in
+//! `packing::reference` and proven byte-identical by
+//! `tests/packing_equivalence.rs`.
 
-use super::mcb8::{pack_masked, PackJob, SortKey};
+use super::mcb8::{pack_into, PackJob, PackScratch, SortKey};
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
 
@@ -24,7 +37,7 @@ impl PinRule {
         }
     }
 
-    fn pins(&self, sim: &Sim, j: JobId) -> bool {
+    pub(crate) fn pins(&self, sim: &Sim, j: JobId) -> bool {
         if !matches!(sim.jobs[j].state, JobState::Running) {
             return false;
         }
@@ -36,7 +49,7 @@ impl PinRule {
 }
 
 /// Result of a full MCB8 allocation pass.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Mcb8Outcome {
     /// Placement for every job MCB8 kept; apply with `Sim::apply_mapping`.
     pub mapping: Vec<(JobId, Vec<NodeId>)>,
@@ -46,88 +59,349 @@ pub struct Mcb8Outcome {
     pub dropped: Vec<JobId>,
 }
 
+impl Mcb8Outcome {
+    fn empty(dropped: Vec<JobId>) -> Self {
+        Mcb8Outcome { mapping: vec![], yield_achieved: 0.0, dropped }
+    }
+}
+
 /// Yield-accuracy of the binary search (§4.3).
 const ACCURACY: f64 = 0.01;
 
-fn build_pack_jobs(sim: &Sim, candidates: &[JobId], y: f64, pin: Option<PinRule>) -> Vec<PackJob> {
+/// The placement MCB8 must preserve for job `j` under `pin`, if any. A job
+/// whose placement touches a down/draining node is never pinned: releasing
+/// it lets the packing migrate it off (this is how MCB8-family policies
+/// evacuate a draining node). Shared with the stretch path so the pin
+/// semantics cannot drift between the two allocation families.
+pub(crate) fn pinned_placement<'a>(
+    sim: &'a Sim,
+    j: JobId,
+    pin: Option<PinRule>,
+) -> Option<&'a [NodeId]> {
+    match pin {
+        Some(rule)
+            if rule.pins(sim, j)
+                && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
+        {
+            Some(&sim.jobs[j].placement)
+        }
+        _ => None,
+    }
+}
+
+/// All live jobs (running + paused + pending) in descending priority order
+/// — the candidate set of one MCB8 allocation pass.
+pub fn collect_candidates(sim: &Sim) -> Vec<JobId> {
+    let mut candidates: Vec<JobId> = sim.running();
+    candidates.extend(sim.paused());
+    candidates.extend(sim.pending());
+    sort_by_priority(sim, &mut candidates);
     candidates
-        .iter()
-        .map(|&j| {
-            let spec = &sim.jobs[j].spec;
-            // A job whose placement touches a down/draining node is never
-            // pinned: releasing it lets the packing migrate it off (this is
-            // how MCB8-family policies evacuate a draining node).
-            let pinned = match pin {
-                Some(rule)
-                    if rule.pins(sim, j)
-                        && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
-                {
-                    Some(sim.jobs[j].placement.clone())
-                }
-                _ => None,
-            };
-            PackJob {
-                id: j,
-                tasks: spec.tasks,
-                cpu_req: (spec.cpu_need * y).min(1.0),
-                mem: spec.mem,
-                pinned,
-            }
-        })
+}
+
+/// Reusable buffers for one MCB8 allocation: the packing arena, the
+/// pack-job vector rewritten in place across probes, and the best-so-far
+/// slab snapshot. Holding one of these across scheduling events makes every
+/// binary-search probe allocation-free.
+#[derive(Debug, Default)]
+pub struct Mcb8Scratch {
+    pack: PackScratch,
+    jobs: Vec<PackJob>,
+    needs: Vec<f64>,
+    blocked: Vec<bool>,
+    best_slab: Vec<NodeId>,
+    best_offsets: Vec<usize>,
+}
+
+/// Rewrite the CPU requirements for yield `y` and attempt the packing.
+fn probe(
+    y: f64,
+    jobs: &mut [PackJob],
+    needs: &[f64],
+    nodes: usize,
+    blocked: &[bool],
+    pack: &mut PackScratch,
+) -> bool {
+    for (pj, need) in jobs.iter_mut().zip(needs) {
+        pj.cpu_req = (need * y).min(1.0);
+    }
+    pack_into(jobs, nodes, SortKey::Max, Some(blocked), pack)
+}
+
+/// Materialize a slab snapshot into the owned mapping shape of
+/// [`Mcb8Outcome`] (the only allocations of a warm allocation pass).
+fn materialize(jobs: &[PackJob], slab: &[NodeId], offsets: &[usize]) -> Vec<(JobId, Vec<NodeId>)> {
+    jobs.iter()
+        .enumerate()
+        .map(|(i, pj)| (pj.id, slab[offsets[i]..offsets[i + 1]].to_vec()))
         .collect()
 }
 
 /// Run the MCB8 allocation over all live jobs (running + paused + pending).
 pub fn mcb8_allocate(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
-    let mut candidates: Vec<JobId> = sim.running();
-    candidates.extend(sim.paused());
-    candidates.extend(sim.pending());
-    sort_by_priority(sim, &mut candidates); // descending priority
+    let candidates = collect_candidates(sim);
+    let mut scratch = Mcb8Scratch::default();
+    mcb8_allocate_prepared(sim, pin, &candidates, &mut scratch)
+}
+
+/// [`mcb8_allocate`] over a pre-collected, priority-sorted candidate set,
+/// running out of `scratch` (hot-path entry point; byte-identical to the
+/// seed `packing::reference::mcb8_allocate_seed`).
+pub fn mcb8_allocate_prepared(
+    sim: &Sim,
+    pin: Option<PinRule>,
+    candidates: &[JobId],
+    scratch: &mut Mcb8Scratch,
+) -> Mcb8Outcome {
     let nodes = sim.cluster.nodes;
+    let Mcb8Scratch { pack, jobs, needs, blocked, best_slab, best_offsets } = scratch;
     // Scenario engine: down/draining nodes receive no tasks. All-false on a
     // static platform, where the masked pack is identical to the plain one.
-    let blocked: Vec<bool> = (0..nodes).map(|n| !sim.cluster.can_place(n)).collect();
+    blocked.clear();
+    blocked.extend((0..nodes).map(|n| !sim.cluster.can_place(n)));
+    // Build the pack-job vector (with pinned-placement clones) once for the
+    // whole candidate set; probes only rewrite `cpu_req`, and the
+    // drop-restart loop pops victims off the end (candidates are sorted by
+    // descending priority, so the victim is always last).
+    jobs.clear();
+    needs.clear();
+    for &j in candidates {
+        let spec = &sim.jobs[j].spec;
+        jobs.push(PackJob {
+            id: j,
+            tasks: spec.tasks,
+            cpu_req: spec.cpu_need.min(1.0),
+            mem: spec.mem,
+            pinned: pinned_placement(sim, j, pin).map(|p| p.to_vec()),
+        });
+        needs.push(spec.cpu_need);
+    }
     let mut dropped = Vec::new();
 
     loop {
-        if candidates.is_empty() {
-            return Mcb8Outcome { mapping: vec![], yield_achieved: 0.0, dropped };
+        if jobs.is_empty() {
+            return Mcb8Outcome::empty(dropped);
         }
-        // Perf (§Perf): build the pack-job vector (with pinned-placement
-        // clones) once per candidate set and only rewrite the CPU
-        // requirement per binary-search probe.
-        let mut pack_jobs = build_pack_jobs(sim, &candidates, 1.0, pin);
-        let needs: Vec<f64> = candidates.iter().map(|&j| sim.jobs[j].spec.cpu_need).collect();
-        let mut try_pack = |y: f64| {
-            for (pj, need) in pack_jobs.iter_mut().zip(&needs) {
-                pj.cpu_req = (need * y).min(1.0);
-            }
-            pack_masked(&pack_jobs, nodes, SortKey::Max, Some(&blocked))
-        };
-
         // Fast path: everything fits at full yield.
-        if let Some(r) = try_pack(1.0) {
-            return Mcb8Outcome { mapping: r.placements, yield_achieved: 1.0, dropped };
+        if probe(1.0, jobs, needs, nodes, blocked, pack) {
+            let mapping = materialize(jobs, pack.slab(), pack.offsets());
+            return Mcb8Outcome { mapping, yield_achieved: 1.0, dropped };
         }
         // Memory-only feasibility (Y -> 0). If even that fails, drop the
-        // lowest-priority candidate and restart.
-        let Some(mut best) = try_pack(0.0) else {
-            let victim = candidates.pop().unwrap(); // lowest priority last
+        // lowest-priority candidate and retry with the rest.
+        if !probe(0.0, jobs, needs, nodes, blocked, pack) {
+            let victim = jobs.pop().unwrap().id; // lowest priority last
+            needs.pop();
             dropped.push(victim);
             continue;
-        };
+        }
+        pack.save_to(best_slab, best_offsets);
         let (mut lo, mut hi) = (0.0f64, 1.0f64);
         while hi - lo > ACCURACY {
             let mid = 0.5 * (lo + hi);
-            match try_pack(mid) {
-                Some(r) => {
-                    best = r;
-                    lo = mid;
-                }
-                None => hi = mid,
+            if probe(mid, jobs, needs, nodes, blocked, pack) {
+                pack.save_to(best_slab, best_offsets);
+                lo = mid;
+            } else {
+                hi = mid;
             }
         }
-        return Mcb8Outcome { mapping: best.placements, yield_achieved: lo, dropped };
+        let mapping = materialize(jobs, best_slab, best_offsets);
+        return Mcb8Outcome { mapping, yield_achieved: lo, dropped };
+    }
+}
+
+/// Behavior-preserving repack-skip cache (DESIGN.md §Packing internals).
+///
+/// A plain-MCB8 allocation is a pure function of: the candidate set in
+/// priority order, each candidate's spec (tasks, CPU need, memory), the
+/// per-candidate pin decision (and, for pinned jobs, the exact placement
+/// that must be kept), and the platform shape (node count + availability
+/// mask). The cache fingerprints **all** of those observables by value and
+/// replays the previous [`Mcb8Outcome`] on a match, so a hit is sound even
+/// if the policy object is reused across simulations (specs and the
+/// blocked mask are compared directly, not assumed from the job ids).
+/// [`crate::sim::Cluster::epoch`] — advanced by every scenario event —
+/// rides in front as the cheap first-line invalidation for platform
+/// changes. Anything *not* in the fingerprint (wall-clock time, virtual
+/// times, cluster loads) is provably unobservable by the allocation: time
+/// and virtual time enter only through the priority *order* and the pin
+/// *decisions*, both of which are fingerprinted by value.
+///
+/// The stretch allocation is deliberately **not** cached: its required
+/// yields depend on raw flow/virtual times, which change between any two
+/// distinct events.
+#[derive(Debug)]
+pub struct RepackCache {
+    enabled: bool,
+    scratch: Mcb8Scratch,
+    /// Candidate buffer for the current call (reused across calls).
+    cand: Vec<JobId>,
+    key_valid: bool,
+    key_epoch: u64,
+    key_nodes: usize,
+    key_pin: Option<PinRule>,
+    key_candidates: Vec<JobId>,
+    /// Per candidate: (tasks, cpu_need bits, mem bits) — compared by value
+    /// so the cache never trusts a JobId to mean the same spec.
+    key_specs: Vec<(u32, u64, u64)>,
+    /// The availability mask the outcome was computed under.
+    key_blocked: Vec<bool>,
+    /// Per candidate: `u32::MAX` if unpinned, else the pinned task count;
+    /// pinned placements are concatenated in `key_pin_slab`.
+    key_pin_spans: Vec<u32>,
+    key_pin_slab: Vec<NodeId>,
+    outcome: Mcb8Outcome,
+    hits: u64,
+    misses: u64,
+}
+
+impl Default for RepackCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RepackCache {
+    pub fn new() -> Self {
+        RepackCache {
+            enabled: true,
+            scratch: Mcb8Scratch::default(),
+            cand: Vec::new(),
+            key_valid: false,
+            key_epoch: 0,
+            key_nodes: 0,
+            key_pin: None,
+            key_candidates: Vec::new(),
+            key_specs: Vec::new(),
+            key_blocked: Vec::new(),
+            key_pin_spans: Vec::new(),
+            key_pin_slab: Vec::new(),
+            outcome: Mcb8Outcome::empty(Vec::new()),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A cache that never skips: every call recomputes (scratch reuse
+    /// stays). The oracle side of the cache-transparency tests.
+    pub fn disabled() -> Self {
+        RepackCache { enabled: false, ..Self::new() }
+    }
+
+    /// Allocation events answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Allocation events that ran the packing core.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Run (or replay) the MCB8 allocation for the current simulator state.
+    pub fn allocate(&mut self, sim: &Sim, pin: Option<PinRule>) -> &Mcb8Outcome {
+        self.cand.clear();
+        self.cand.extend_from_slice(sim.running_ids());
+        self.cand.extend_from_slice(sim.paused_ids());
+        self.cand.extend(sim.pending());
+        sort_by_priority(sim, &mut self.cand);
+
+        if !self.enabled {
+            // The transparency oracle: no fingerprinting, no skipping —
+            // just the scratch-reusing allocation.
+            self.misses += 1;
+            self.outcome = mcb8_allocate_prepared(sim, pin, &self.cand, &mut self.scratch);
+            return &self.outcome;
+        }
+
+        if self.key_valid
+            && self.key_epoch == sim.cluster.epoch
+            && self.key_nodes == sim.cluster.nodes
+            && self.key_pin == pin
+            && self.key_candidates == self.cand
+            && self.specs_unchanged(sim)
+            && self.blocked_unchanged(sim)
+            && self.pins_unchanged(sim, pin)
+        {
+            self.hits += 1;
+            return &self.outcome;
+        }
+        self.misses += 1;
+
+        // Refresh the fingerprint, then recompute.
+        self.key_epoch = sim.cluster.epoch;
+        self.key_nodes = sim.cluster.nodes;
+        self.key_pin = pin;
+        self.key_candidates.clone_from(&self.cand);
+        self.key_specs.clear();
+        self.key_blocked.clear();
+        self.key_blocked.extend((0..sim.cluster.nodes).map(|n| !sim.cluster.can_place(n)));
+        self.key_pin_spans.clear();
+        self.key_pin_slab.clear();
+        // pinned_placement is evaluated again inside mcb8_allocate_prepared;
+        // accepted duplication — it is O(candidates) against the full binary
+        // search a miss runs anyway, and keeps the allocation entry point
+        // independent of cache internals.
+        for &j in &self.cand {
+            let spec = &sim.jobs[j].spec;
+            self.key_specs.push((spec.tasks, spec.cpu_need.to_bits(), spec.mem.to_bits()));
+            match pinned_placement(sim, j, pin) {
+                Some(p) => {
+                    self.key_pin_spans.push(p.len() as u32);
+                    self.key_pin_slab.extend_from_slice(p);
+                }
+                None => self.key_pin_spans.push(u32::MAX),
+            }
+        }
+        self.key_valid = true;
+        self.outcome = mcb8_allocate_prepared(sim, pin, &self.cand, &mut self.scratch);
+        &self.outcome
+    }
+
+    /// Do the candidates' specs match the fingerprint by value? Guards the
+    /// (unsupported but possible) reuse of one policy object across
+    /// simulations, where a JobId no longer names the same job. Only
+    /// called when `key_candidates == cand`.
+    fn specs_unchanged(&self, sim: &Sim) -> bool {
+        self.cand.iter().zip(&self.key_specs).all(|(&j, k)| {
+            let spec = &sim.jobs[j].spec;
+            *k == (spec.tasks, spec.cpu_need.to_bits(), spec.mem.to_bits())
+        })
+    }
+
+    /// Does the availability mask match the fingerprint? Within one Sim the
+    /// epoch check already implies this; across Sims (each starting at
+    /// epoch 0) it does not, so the mask is compared by value too.
+    fn blocked_unchanged(&self, sim: &Sim) -> bool {
+        self.key_blocked.len() == sim.cluster.nodes
+            && (0..sim.cluster.nodes).all(|n| self.key_blocked[n] == !sim.cluster.can_place(n))
+    }
+
+    /// Does every candidate's pin decision (and pinned placement) match the
+    /// fingerprint? Only called when `key_candidates == cand`.
+    fn pins_unchanged(&self, sim: &Sim, pin: Option<PinRule>) -> bool {
+        let mut pos = 0usize;
+        for (i, &j) in self.cand.iter().enumerate() {
+            let span = self.key_pin_spans[i];
+            match pinned_placement(sim, j, pin) {
+                Some(p) => {
+                    if span == u32::MAX || span as usize != p.len() {
+                        return false;
+                    }
+                    if &self.key_pin_slab[pos..pos + p.len()] != p {
+                        return false;
+                    }
+                    pos += p.len();
+                }
+                None => {
+                    if span != u32::MAX {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
     }
 }
 
@@ -255,5 +529,84 @@ mod tests {
             );
             prev = out.yield_achieved;
         }
+    }
+
+    #[test]
+    fn scratch_reuse_across_allocations_is_stateless() {
+        // One scratch driven across very different allocation shapes must
+        // reproduce the fresh-scratch outcome every time.
+        let mut scratch = Mcb8Scratch::default();
+        let shapes: Vec<(Vec<Job>, usize)> = vec![
+            (vec![job(0, 2, 0.4, 0.2), job(1, 1, 0.3, 0.2)], 4),
+            (vec![job(0, 1, 0.1, 0.6), job(1, 1, 0.1, 0.6), job(2, 1, 0.1, 0.6)], 1),
+            (vec![job(0, 1, 1.0, 0.1), job(1, 1, 1.0, 0.1), job(2, 1, 1.0, 0.1)], 2),
+        ];
+        for (jobs, nodes) in shapes {
+            let mut sim = sim_with(jobs, nodes);
+            sim.now = 5.0;
+            let cands = collect_candidates(&sim);
+            let warm = mcb8_allocate_prepared(&sim, None, &cands, &mut scratch);
+            let fresh = mcb8_allocate(&sim, None);
+            assert_eq!(warm, fresh);
+            assert_eq!(warm.yield_achieved.to_bits(), fresh.yield_achieved.to_bits());
+        }
+    }
+
+    #[test]
+    fn repack_cache_hits_only_when_nothing_observable_changed() {
+        let mut sim = sim_with(vec![job(0, 2, 0.4, 0.2), job(1, 1, 0.3, 0.2)], 4);
+        sim.now = 1.0;
+        let mut cache = RepackCache::new();
+        let first = cache.allocate(&sim, None).clone();
+        assert_eq!(cache.misses(), 1);
+        // Same state: pure replay.
+        let again = cache.allocate(&sim, None).clone();
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(first, again);
+        assert_eq!(first, mcb8_allocate(&sim, None));
+        // Start a job: same candidate set, same (absent) pins — the mapping
+        // is still valid and may be replayed.
+        sim.apply_mapping(&first.mapping);
+        let replay = cache.allocate(&sim, None).clone();
+        assert_eq!(replay, mcb8_allocate(&sim, None));
+        // A platform event advances the epoch and must invalidate.
+        let epoch_before = sim.cluster.epoch;
+        sim.cluster.draining[3] = true;
+        sim.cluster.epoch += 1; // direct mutation: bump as apply_cluster_event would
+        assert_ne!(sim.cluster.epoch, epoch_before);
+        let misses_before = cache.misses();
+        let degraded = cache.allocate(&sim, None).clone();
+        assert_eq!(cache.misses(), misses_before + 1, "epoch change must miss");
+        assert_eq!(degraded, mcb8_allocate(&sim, None));
+        for (_, pl) in &degraded.mapping {
+            assert!(pl.iter().all(|&n| n != 3), "cached path must respect the drain");
+        }
+    }
+
+    #[test]
+    fn repack_cache_invalidates_on_pin_changes() {
+        let mut sim = sim_with(vec![job(0, 1, 0.5, 0.3), job(1, 1, 0.5, 0.3)], 2);
+        sim.start_job(0, vec![1]);
+        sim.start_job(1, vec![0]);
+        sim.jobs[0].vt = 10.0;
+        sim.jobs[1].vt = 20.0;
+        sim.now = 50.0;
+        let pin = Some(PinRule::MinVt(600.0));
+        let mut cache = RepackCache::new();
+        let a = cache.allocate(&sim, pin).clone();
+        assert_eq!(a, mcb8_allocate(&sim, pin));
+        // Job 0 crosses the pin bound: same candidates, different pin set.
+        sim.jobs[0].vt = 700.0;
+        let b = cache.allocate(&sim, pin).clone();
+        assert_eq!(cache.misses(), 2, "pin-set change must recompute");
+        assert_eq!(b, mcb8_allocate(&sim, pin));
+        // Disabled cache never replays but still agrees.
+        let mut off = RepackCache::disabled();
+        let c = off.allocate(&sim, pin).clone();
+        let d = off.allocate(&sim, pin).clone();
+        assert_eq!(off.hits(), 0);
+        assert_eq!(off.misses(), 2);
+        assert_eq!(c, d);
+        assert_eq!(c, b);
     }
 }

@@ -3,10 +3,10 @@
 //! plus the resource-allocation optimizer and the MINVT/MINFT remap limit.
 
 use super::greedy::{admit_forced, admit_greedy, apply_admission, opportunistic_start};
-use super::stretch::{improve_max_stretch, mcb8_stretch_allocate};
+use super::stretch::{improve_max_stretch, mcb8_stretch_allocate_into, StretchScratch};
 use super::Policy;
 use crate::alloc::{reallocate, OptMode};
-use crate::packing::search::{mcb8_allocate, PinRule};
+use crate::packing::search::{PinRule, RepackCache};
 use crate::sim::{JobId, PlatformChange, Sim};
 
 /// Action on job submission (column 2 of Table 1).
@@ -50,6 +50,15 @@ pub struct DfrsPolicy {
     /// capacity redistributed to shorter-running jobs (OS-style aging to
     /// protect short jobs from long ones). `None` = paper behaviour.
     pub decay: Option<f64>,
+    /// Repack-skip cache + scratch arenas for the plain-MCB8 allocation
+    /// path (DESIGN.md §Packing internals). `RepackCache::disabled()`
+    /// turns off the skip (the scratch reuse stays) — the oracle side of
+    /// the cache-transparency tests in `tests/engine_equivalence.rs`.
+    pub repack: RepackCache,
+    /// Scratch arenas for the /stretch-per allocation path. The stretch
+    /// outcome depends on raw flow/virtual times, so it is never cached —
+    /// only the buffers are reused across events.
+    pub stretch_scratch: StretchScratch,
 }
 
 impl DfrsPolicy {
@@ -61,14 +70,15 @@ impl DfrsPolicy {
         }
     }
 
-    fn run_mcb8(&self, sim: &mut Sim) {
-        let out = mcb8_allocate(sim, self.pin);
+    fn run_mcb8(&mut self, sim: &mut Sim) {
+        let out = self.repack.allocate(sim, self.pin);
         sim.apply_mapping(&out.mapping);
         self.alloc(sim);
     }
 
-    fn run_mcb8_stretch(&self, sim: &mut Sim) {
-        let out = mcb8_stretch_allocate(sim, self.period, self.pin);
+    fn run_mcb8_stretch(&mut self, sim: &mut Sim) {
+        let out =
+            mcb8_stretch_allocate_into(sim, self.period, self.pin, &mut self.stretch_scratch);
         sim.apply_mapping(&out.mapping);
         // Initial allocation: exactly the yields needed for the target
         // stretch, then the improvement phase (§4.7).
@@ -318,6 +328,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         }
     }
 
@@ -331,6 +343,8 @@ mod tests {
             pin: Some(PinRule::MinVt(600.0)),
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         assert_eq!(p.name(), "GreedyPM */per/OPT=MIN/MINVT=600");
         let q = DfrsPolicy {
@@ -341,6 +355,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         assert_eq!(q.name(), "/stretch-per/OPT=MAX");
     }
@@ -392,6 +408,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         let r = run(&t, &mut p, SimConfig::default(), Box::new(RustSolver));
         // Short job runs immediately at t=100, done by 150.
@@ -427,6 +445,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         let r = run(&t, &mut p, SimConfig::default(), Box::new(RustSolver));
         assert!(r.jobs.iter().all(|j| j.completion.is_some()));
@@ -452,6 +472,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         let r = run(&t, &mut p, SimConfig::default(), Box::new(RustSolver));
         assert!(r.jobs.iter().all(|j| j.completion.is_some()));
@@ -474,6 +496,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         let r_plain = run(&t, &mut mk(None), SimConfig::default(), Box::new(RustSolver));
         let r_decay = run(&t, &mut mk(Some(3600.0)), SimConfig::default(), Box::new(RustSolver));
@@ -505,6 +529,8 @@ mod tests {
             pin: None,
             period: 600.0,
             decay: None,
+            repack: RepackCache::default(),
+            stretch_scratch: StretchScratch::default(),
         };
         let r = run(&t, &mut p, SimConfig::default(), Box::new(RustSolver));
         assert!(r.jobs.iter().all(|j| j.completion.is_some()));

@@ -4,19 +4,46 @@
 
 use super::batch::BatchPolicy;
 use super::policy::{CompleteAction, DfrsPolicy, PeriodicAction, SubmitAction};
+use super::stretch::StretchScratch;
 use super::Policy;
 use crate::alloc::OptMode;
-use crate::packing::search::PinRule;
+use crate::packing::search::{PinRule, RepackCache};
+
+/// Batch baselines resolve by exact name; everything else is a DFRS
+/// combinator name. Shared by both policy constructors so the two
+/// resolvers cannot diverge.
+fn make_batch(name: &str) -> Option<Box<dyn Policy>> {
+    match name {
+        "FCFS" => Some(Box::new(BatchPolicy::fcfs())),
+        "EASY" => Some(Box::new(BatchPolicy::easy())),
+        _ => None,
+    }
+}
 
 /// Build a policy from its paper-style name, e.g.
 /// `"GreedyPM */per/OPT=MIN/MINVT=600"`, `"EASY"`, `"/stretch-per/OPT=MAX"`.
 /// `period` is the periodic-application interval in seconds.
 pub fn make_policy(name: &str, period: f64) -> anyhow::Result<Box<dyn Policy>> {
-    match name {
-        "FCFS" => return Ok(Box::new(BatchPolicy::fcfs())),
-        "EASY" => return Ok(Box::new(BatchPolicy::easy())),
-        _ => {}
+    if let Some(p) = make_batch(name) {
+        return Ok(p);
     }
+    Ok(Box::new(make_dfrs(name, period)?))
+}
+
+/// `make_policy` with the MCB8 repack-skip cache turned off (the scratch
+/// arenas stay). The oracle side of the cache-transparency tests: a cached
+/// and an uncached run of the same algorithm must produce bit-identical
+/// `SimResult`s. Batch policies have no cache and resolve as usual.
+pub fn make_policy_uncached(name: &str, period: f64) -> anyhow::Result<Box<dyn Policy>> {
+    if let Some(p) = make_batch(name) {
+        return Ok(p);
+    }
+    let mut policy = make_dfrs(name, period)?;
+    policy.repack = RepackCache::disabled();
+    Ok(Box::new(policy))
+}
+
+fn make_dfrs(name: &str, period: f64) -> anyhow::Result<DfrsPolicy> {
     let mut parts = name.split('/');
     let head = parts.next().unwrap_or("");
     let (submit_name, star) = match head.strip_suffix(" *") {
@@ -71,7 +98,17 @@ pub fn make_policy(name: &str, period: f64) -> anyhow::Result<Box<dyn Policy>> {
             || periodic != PeriodicAction::Nothing,
         "policy {name:?} does nothing"
     );
-    Ok(Box::new(DfrsPolicy { submit, complete, periodic, opt, pin, period, decay }))
+    Ok(DfrsPolicy {
+        submit,
+        complete,
+        periodic,
+        opt,
+        pin,
+        period,
+        decay,
+        repack: RepackCache::default(),
+        stretch_scratch: StretchScratch::default(),
+    })
 }
 
 /// The 18 DFRS rows of Table 2 plus FCFS and EASY, in table order.

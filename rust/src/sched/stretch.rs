@@ -10,13 +10,23 @@
 //! lowest feasible S. If no S is feasible the lowest-priority job is
 //! dropped, as in plain MCB8.
 
-use crate::packing::mcb8::{pack_masked, PackJob, SortKey};
-use crate::packing::search::PinRule;
-use crate::sched::priority::sort_by_priority;
-use crate::sim::{JobId, JobState, NodeId, Sim};
+//! Perf (DESIGN.md §Packing internals): the allocation runs out of a
+//! reusable [`StretchScratch`]. The pack-job vector (with pinned-placement
+//! clones) and the blocked mask are built **once per candidate set**; each
+//! binary-search probe only recomputes the per-job required yields and
+//! rewrites the CPU requirements in place — the seed implementation rebuilt
+//! all of it (including the pin clones and the mask) on every probe, and is
+//! preserved in `packing::reference::mcb8_stretch_allocate_seed` as the
+//! byte-identity oracle. The outcome is never cached (unlike plain MCB8's
+//! `RepackCache`): required yields depend on raw flow and virtual times,
+//! which differ at any two distinct event instants.
+
+use crate::packing::mcb8::{pack_into, PackJob, PackScratch, SortKey};
+use crate::packing::search::{collect_candidates, pinned_placement, PinRule};
+use crate::sim::{JobId, NodeId, Sim};
 
 /// Outcome: mapping plus the yield each placed job needs to hit the target.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StretchOutcome {
     pub mapping: Vec<(JobId, Vec<NodeId>)>,
     pub yields: Vec<(JobId, f64)>,
@@ -38,65 +48,96 @@ fn required_yield(sim: &Sim, j: JobId, s: f64, period: f64) -> Option<f64> {
     }
 }
 
-fn try_target(
-    sim: &Sim,
-    candidates: &[JobId],
-    s: f64,
-    period: f64,
-    pin: Option<PinRule>,
-) -> Option<(Vec<(JobId, Vec<NodeId>)>, Vec<(JobId, f64)>)> {
-    let mut yields = Vec::with_capacity(candidates.len());
-    let mut pack_jobs = Vec::with_capacity(candidates.len());
-    for &j in candidates {
-        let y = required_yield(sim, j, s, period)?;
-        let spec = &sim.jobs[j].spec;
-        // As in plain MCB8, jobs sitting on down/draining nodes are never
-        // pinned — releasing them lets the packing evacuate the node.
-        let pinned = match pin {
-            Some(rule)
-                if matches!(sim.jobs[j].state, JobState::Running)
-                    && pins(rule, sim, j)
-                    && sim.jobs[j].placement.iter().all(|&n| sim.cluster.can_place(n)) =>
-            {
-                Some(sim.jobs[j].placement.clone())
-            }
-            _ => None,
-        };
-        yields.push((j, y));
-        pack_jobs.push(PackJob {
-            id: j,
-            tasks: spec.tasks,
-            cpu_req: (spec.cpu_need * y).min(1.0),
-            mem: spec.mem,
-            pinned,
-        });
-    }
-    let blocked: Vec<bool> =
-        (0..sim.cluster.nodes).map(|n| !sim.cluster.can_place(n)).collect();
-    pack_masked(&pack_jobs, sim.cluster.nodes, SortKey::Max, Some(&blocked))
-        .map(|r| (r.placements, yields))
-}
-
-fn pins(rule: PinRule, sim: &Sim, j: JobId) -> bool {
-    match rule {
-        PinRule::MinVt(b) => sim.jobs[j].vt < b,
-        PinRule::MinFt(b) => sim.jobs[j].flow_time(sim.now) < b,
-    }
-}
-
 /// Binary-search accuracy over the inverse stretch.
 const ACCURACY: f64 = 0.01;
 
+/// Reusable buffers for one stretch allocation: packing arena, pack-job
+/// vector (rewritten in place across probes), per-probe required yields,
+/// hoisted blocked mask, and the best-so-far snapshot. Warm probes perform
+/// zero heap allocations.
+#[derive(Debug, Default)]
+pub struct StretchScratch {
+    pack: PackScratch,
+    jobs: Vec<PackJob>,
+    needs: Vec<f64>,
+    yields: Vec<f64>,
+    blocked: Vec<bool>,
+    best_slab: Vec<NodeId>,
+    best_offsets: Vec<usize>,
+    best_yields: Vec<f64>,
+}
+
+impl StretchScratch {
+    /// One probe at inverse target `inv`: recompute every candidate's
+    /// required yield (None if any job would need yield > 1 — checked in
+    /// candidate order, before packing, exactly like the seed `try_target`),
+    /// rewrite the CPU requirements, and attempt the packing.
+    fn probe(&mut self, sim: &Sim, inv: f64, period: f64, nodes: usize) -> bool {
+        let s = if inv <= 0.0 { f64::INFINITY } else { 1.0 / inv };
+        self.yields.clear();
+        for (pj, need) in self.jobs.iter_mut().zip(&self.needs) {
+            let Some(y) = required_yield(sim, pj.id, s, period) else {
+                return false;
+            };
+            self.yields.push(y);
+            pj.cpu_req = (need * y).min(1.0);
+        }
+        pack_into(&self.jobs, nodes, SortKey::Max, Some(&self.blocked), &mut self.pack)
+    }
+
+    /// Keep the current (feasible) packing and yields as the best so far.
+    fn save_best(&mut self) {
+        self.pack.save_to(&mut self.best_slab, &mut self.best_offsets);
+        self.best_yields.clone_from(&self.yields);
+    }
+}
+
 /// Run the MCB8-stretch allocation over all live jobs.
 pub fn mcb8_stretch_allocate(sim: &Sim, period: f64, pin: Option<PinRule>) -> StretchOutcome {
-    let mut candidates: Vec<JobId> = sim.running();
-    candidates.extend(sim.paused());
-    candidates.extend(sim.pending());
-    sort_by_priority(sim, &mut candidates);
+    let mut scratch = StretchScratch::default();
+    mcb8_stretch_allocate_into(sim, period, pin, &mut scratch)
+}
+
+/// [`mcb8_stretch_allocate`] running out of a caller-owned scratch (the
+/// hot-path entry point; `DfrsPolicy` holds one across events). Byte-
+/// identical to `packing::reference::mcb8_stretch_allocate_seed`.
+pub fn mcb8_stretch_allocate_into(
+    sim: &Sim,
+    period: f64,
+    pin: Option<PinRule>,
+    scratch: &mut StretchScratch,
+) -> StretchOutcome {
+    let candidates = collect_candidates(sim);
     let mut dropped = Vec::new();
+    let nodes = sim.cluster.nodes;
+
+    // Built once per candidate set (the seed rebuilt these — including the
+    // pinned-placement clones and the blocked mask — on *every* probe):
+    // probes only rewrite yields and CPU requirements, and the drop-restart
+    // loop pops the lowest-priority victim off the end. Candidate order and
+    // pin decisions come from the same `search.rs` helpers plain MCB8 uses,
+    // so the two allocation families cannot drift apart.
+    scratch.blocked.clear();
+    scratch.blocked.extend((0..nodes).map(|n| !sim.cluster.can_place(n)));
+    scratch.jobs.clear();
+    scratch.needs.clear();
+    for &j in &candidates {
+        let spec = &sim.jobs[j].spec;
+        scratch.jobs.push(PackJob {
+            id: j,
+            tasks: spec.tasks,
+            cpu_req: 0.0,
+            mem: spec.mem,
+            // As in plain MCB8, jobs sitting on down/draining nodes are
+            // never pinned — releasing them lets the packing evacuate the
+            // node.
+            pinned: pinned_placement(sim, j, pin).map(|p| p.to_vec()),
+        });
+        scratch.needs.push(spec.cpu_need);
+    }
 
     loop {
-        if candidates.is_empty() {
+        if scratch.jobs.is_empty() {
             return StretchOutcome {
                 mapping: vec![],
                 yields: vec![],
@@ -107,34 +148,44 @@ pub fn mcb8_stretch_allocate(sim: &Sim, period: f64, pin: Option<PinRule>) -> St
         // Search over inv = 1/S in (0, 1]: larger inv = tighter stretch.
         // inv -> 0 means S -> inf: every job needs yield ~0, so feasibility
         // there is pure memory packing.
-        let probe = |inv: f64| {
-            let s = if inv <= 0.0 { f64::INFINITY } else { 1.0 / inv };
-            try_target(sim, &candidates, s, period, pin)
-        };
-        let Some(mut best) = probe(0.0) else {
-            let victim = candidates.pop().unwrap();
+        if !scratch.probe(sim, 0.0, period, nodes) {
+            let victim = scratch.jobs.pop().unwrap().id;
+            scratch.needs.pop();
             dropped.push(victim);
             continue;
-        };
+        }
+        scratch.save_best();
         let mut best_inv = 0.0f64;
-        if let Some(r) = probe(1.0) {
-            best = r;
+        if scratch.probe(sim, 1.0, period, nodes) {
+            scratch.save_best();
             best_inv = 1.0;
         } else {
             let (mut lo, mut hi) = (0.0f64, 1.0f64);
             while hi - lo > ACCURACY {
                 let mid = 0.5 * (lo + hi);
-                match probe(mid) {
-                    Some(r) => {
-                        best = r;
-                        lo = mid;
-                        best_inv = mid;
-                    }
-                    None => hi = mid,
+                if scratch.probe(sim, mid, period, nodes) {
+                    scratch.save_best();
+                    lo = mid;
+                    best_inv = mid;
+                } else {
+                    hi = mid;
                 }
             }
         }
-        let (mapping, yields) = best;
+        let mapping = scratch
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, pj)| {
+                (pj.id, scratch.best_slab[scratch.best_offsets[i]..scratch.best_offsets[i + 1]].to_vec())
+            })
+            .collect();
+        let yields = scratch
+            .jobs
+            .iter()
+            .zip(&scratch.best_yields)
+            .map(|(pj, &y)| (pj.id, y))
+            .collect();
         return StretchOutcome {
             mapping,
             yields,

@@ -300,7 +300,14 @@ impl Sim {
     /// custom drivers may call it directly. Both engine modes execute the
     /// same code here, and victim sets are processed in ascending job-id
     /// order, so the engines stay bit-identical under any scenario.
+    ///
+    /// Every event — even one that turns out to be a no-op, like repairing
+    /// an up node — advances [`Cluster::epoch`], the platform fingerprint
+    /// the MCB8 repack-skip cache keys on. Over-bumping only forces a
+    /// recompute; under-bumping would replay a stale mapping, so the bump
+    /// is unconditional.
     pub fn apply_cluster_event(&mut self, ev: &ClusterEvent, change: &mut PlatformChange) {
+        self.cluster.epoch += 1;
         match *ev {
             ClusterEvent::Fail(n) => self.fail_node(n, change),
             ClusterEvent::Repair(n) => self.repair_node(n, change),
@@ -1426,6 +1433,27 @@ mod tests {
         sim.apply_cluster_event(&ClusterEvent::Repair(0), &mut change);
         assert!(sim.cluster.up[0]);
         assert_eq!(sim.avail_nodes, 4);
+    }
+
+    #[test]
+    fn cluster_events_advance_the_platform_epoch() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 10.0)]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        let mut change = PlatformChange::default();
+        assert_eq!(sim.cluster.epoch, 0, "fresh platform starts at epoch 0");
+        sim.apply_cluster_event(&ClusterEvent::Fail(0), &mut change);
+        let e1 = sim.cluster.epoch;
+        assert!(e1 > 0, "a failure advances the epoch");
+        sim.apply_cluster_event(&ClusterEvent::Repair(0), &mut change);
+        let e2 = sim.cluster.epoch;
+        assert!(e2 > e1, "a repair advances the epoch");
+        // Even a no-op event bumps: over-invalidating the repack cache is
+        // sound, under-invalidating is not.
+        sim.apply_cluster_event(&ClusterEvent::Repair(0), &mut change);
+        assert!(sim.cluster.epoch > e2, "no-op events still advance the epoch");
+        let before = sim.cluster.epoch;
+        sim.cluster.add_node();
+        assert!(sim.cluster.epoch > before, "pool growth advances the epoch");
     }
 
     #[test]

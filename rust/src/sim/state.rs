@@ -150,6 +150,14 @@ pub struct Cluster {
     /// Node is being drained: existing tasks run on, new placements are
     /// forbidden.
     pub draining: Vec<bool>,
+    /// Platform epoch: a monotone counter advanced whenever the platform
+    /// shape may have changed — every scenario event applied through
+    /// `Sim::apply_cluster_event` and every `add_node` bumps it. The MCB8
+    /// repack-skip cache (`packing::search::RepackCache`) keys on it, so
+    /// code that mutates `up`/`draining`/`nodes` outside those paths must
+    /// bump the epoch itself or caches may replay a stale mapping.
+    /// Over-bumping is always sound (it only forces a recompute).
+    pub epoch: u64,
 }
 
 impl Cluster {
@@ -161,6 +169,7 @@ impl Cluster {
             tasks_on: vec![Vec::new(); nodes],
             up: vec![true; nodes],
             draining: vec![false; nodes],
+            epoch: 0,
         }
     }
 
@@ -191,6 +200,7 @@ impl Cluster {
         self.tasks_on.push(Vec::new());
         self.up.push(true);
         self.draining.push(false);
+        self.epoch += 1;
         n
     }
 

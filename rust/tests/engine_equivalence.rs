@@ -7,7 +7,7 @@
 
 use dfrs::alloc::RustSolver;
 use dfrs::scenario::Scenario;
-use dfrs::sched::registry::make_policy;
+use dfrs::sched::registry::{make_policy, make_policy_uncached};
 use dfrs::sim::{run_scenario, run_with, EngineKind, SimConfig, SimResult};
 use dfrs::util::check::forall;
 use dfrs::util::rng::Rng;
@@ -251,6 +251,84 @@ fn engines_agree_under_combined_chaos() {
     let s = dfrs::scenario::builtin("chaos", &trace).expect("chaos builtin");
     for alg in ["GreedyPM */per/OPT=MIN/MINVT=600", "/per/OPT=MIN"] {
         check_scenario(alg, &trace, &s, "chaos");
+    }
+}
+
+// ----- Repack-skip cache: caching must be unobservable ------------------
+
+fn run_engine_uncached(alg: &str, trace: &Trace, engine: EngineKind) -> SimResult {
+    let mut p = make_policy_uncached(alg, 600.0).unwrap();
+    run_with(trace, p.as_mut(), SimConfig::default(), Box::new(RustSolver), engine)
+}
+
+/// MCB8-family algorithms — the ones whose allocation path the repack-skip
+/// cache and the scratch arenas sit on.
+const MCB8_ALGS: &[&str] = &[
+    "MCB8 */OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+    "MCB8 */per/OPT=MIN/MINVT=600",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "/stretch-per/OPT=MAX/MINVT=600",
+];
+
+#[test]
+fn repack_cache_is_behavior_preserving_on_static_platforms() {
+    // A cached and an uncached run of the same algorithm must produce
+    // bit-identical SimResults — the cache may only skip work, never change
+    // it. Checked in both engine modes (the default-on cache is also what
+    // every other test in this file runs with, so Indexed ≡ Reference above
+    // already holds with the cache enabled).
+    let trace = scale::scale_to_load(&generate(53, 90, &LublinParams::default()), 0.8);
+    for alg in MCB8_ALGS {
+        for engine in [EngineKind::Indexed, EngineKind::Reference] {
+            let cached = run_engine(alg, &trace, engine);
+            let uncached = run_engine_uncached(alg, &trace, engine);
+            assert_identical(&format!("cache-off {engine:?} / {alg}"), &cached, &uncached);
+        }
+    }
+}
+
+#[test]
+fn repack_cache_is_behavior_preserving_under_scenarios() {
+    // The cache's soundness argument leans on the platform epoch; scenarios
+    // are exactly where a stale replay would show. Failures, drains and
+    // the chaos catalogue must all be invisible to caching.
+    let trace = scale::scale_to_load(&generate(59, 80, &LublinParams::default()), 0.7);
+    let scenarios: Vec<(String, Scenario)> = vec![
+        (
+            "failure-repair".into(),
+            Scenario::new("failure-repair")
+                .fail(0, span_at(&trace, 0.2), Some(span_at(&trace, 0.55)))
+                .fail(3, span_at(&trace, 0.4), Some(span_at(&trace, 0.8))),
+        ),
+        (
+            "drain".into(),
+            Scenario::new("drain").drain(1, span_at(&trace, 0.3), Some(span_at(&trace, 0.7))),
+        ),
+        ("chaos".into(), dfrs::scenario::builtin("chaos", &trace).expect("chaos builtin")),
+    ];
+    for (label, s) in &scenarios {
+        for alg in MCB8_ALGS {
+            let mut cached = make_policy(alg, 600.0).unwrap();
+            let a = run_scenario(
+                &trace,
+                cached.as_mut(),
+                SimConfig::default(),
+                Box::new(RustSolver),
+                EngineKind::Indexed,
+                s,
+            );
+            let mut uncached = make_policy_uncached(alg, 600.0).unwrap();
+            let b = run_scenario(
+                &trace,
+                uncached.as_mut(),
+                SimConfig::default(),
+                Box::new(RustSolver),
+                EngineKind::Indexed,
+                s,
+            );
+            assert_identical(&format!("cache-off scenario {label} / {alg}"), &a, &b);
+        }
     }
 }
 
