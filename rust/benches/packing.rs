@@ -213,8 +213,10 @@ fn main() {
     // headline: the slower of the two path speedups at the largest size —
     // the conservative claim.
     let headline = speedup_mcb8.min(speedup_stretch);
+    let meta = dfrs::benchx::bench_meta_json();
     let json = format!(
-        "{{\n  \"bench\": \"packing\",\n  \"trace\": {{\"generator\": \"lublin\", \
+        "{{\n  \"bench\": \"packing\",\n  \"meta\": {meta},\n  \
+         \"trace\": {{\"generator\": \"lublin\", \
          \"jobs\": {trace_jobs}, \"nodes\": {}, \"seed\": {seed}}},\n  \"pin\": \"MINVT=600\",\n  \
          \"runs\": [\n    {}\n  ],\n  \"events\": {{\"greedy_star\": {greedy_events}, \
          \"mcb8_per\": {mcb8_events}}},\n  \"speedup_mcb8\": {speedup_mcb8:.2},\n  \

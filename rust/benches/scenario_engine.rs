@@ -90,12 +90,13 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"scenario_engine\",\n  \"algorithm\": \"{ALG}\",\n  \
+        "{{\n  \"bench\": \"scenario_engine\",\n  \"meta\": {},\n  \"algorithm\": \"{ALG}\",\n  \
          \"trace\": {{\"generator\": \"lublin\", \"jobs\": {jobs}, \"nodes\": {nodes}, \
          \"seed\": {seed}, \"load\": 0.7}},\n  \"runs\": [\n    {}\n  ],\n  \
          \"speedup\": {headline:.2},\n  \"speedup_note\": \"headline = failure-repair case; \
          scenario events must not erode the indexed engine's advantage\",\n  \
          \"bit_identical\": {all_identical}\n}}\n",
+        dfrs::benchx::bench_meta_json(),
         entries.join(",\n    ")
     );
     let out =

@@ -1,19 +1,22 @@
 //! End-to-end engine benchmark: seed (full-scan) event loop vs the indexed
-//! event-calendar engine on a paper-scale Lublin trace, greedy* policy.
-//! Verifies bit-identical SimResult metrics between the two engines and
-//! writes `BENCH_sim_engine.json` at the repo root to seed the perf
-//! trajectory.
+//! event-calendar engine vs the lazy constant-work engine on paper-scale
+//! Lublin traces, greedy* policy. Verifies bit-identical SimResult metrics
+//! between the seed and indexed engines, the discrete/tolerance equivalence
+//! contract for the lazy engine, and writes `BENCH_sim_engine.json` at the
+//! repo root to extend the perf trajectory.
 //!
 //! Run: `cargo bench --bench sim_engine [-- --jobs 1000 --seed 7]`
-//! (`--quick` drops to 300 jobs for a smoke run).
+//! (`--quick` drops to 300 jobs and skips the 10k case for a smoke run).
 //!
-//! The headline speedup is measured at offered load 0.9 — the full
+//! The headline speedups are measured at offered load 0.9 — the full
 //! experiment grid sweeps loads 0.1..0.9 and its wall-clock is dominated by
-//! the high-load traces, where the seed engine's O(all jobs) scans and
-//! per-candidate cluster clones hurt most. The unscaled trace is reported
-//! alongside.
+//! the high-load traces, where per-event O(running-jobs) work hurts most.
+//! The seed engine is only timed on the 1000-job cases (its quadratic scans
+//! make the 10k case pointless to wait for); the 10k-job case pits the
+//! indexed engine against the lazy engine directly.
 
 use dfrs::alloc::RustSolver;
+use dfrs::benchx::bench_meta_json;
 use dfrs::sched::registry::make_policy;
 use dfrs::sim::{run_with, EngineKind, SimConfig, SimResult};
 use dfrs::util::cli::Args;
@@ -31,7 +34,7 @@ fn timed(trace: &Trace, engine: EngineKind) -> (f64, SimResult) {
     (t0.elapsed().as_secs_f64(), r)
 }
 
-/// Bit-level agreement of the metrics the acceptance criteria name.
+/// Bit-level agreement of the metrics the seed-vs-indexed contract names.
 fn bit_identical(a: &SimResult, b: &SimResult) -> bool {
     let f = |x: f64| x.to_bits();
     f(a.max_stretch) == f(b.max_stretch)
@@ -49,37 +52,82 @@ fn bit_identical(a: &SimResult, b: &SimResult) -> bool {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(argv);
-    let jobs = if args.flag("quick") { 300 } else { args.usize_or("jobs", 1000) };
+    let quick = args.flag("quick");
+    let jobs = if quick { 300 } else { args.usize_or("jobs", 1000) };
+    let big_jobs = args.usize_or("big-jobs", 10_000);
     let seed = args.u64_or("seed", 7);
     let base = generate(seed, jobs, &LublinParams::default());
     let nodes = base.nodes;
-    println!("== engine benchmark: seed full-scan loop vs indexed calendar ==");
+    println!("== engine benchmark: seed full-scan vs indexed calendar vs lazy clocks ==");
     println!("trace: lublin seed={seed}, {jobs} jobs x {nodes} nodes; policy: {ALG}\n");
 
-    let cases: Vec<(&str, Trace)> =
-        vec![("unscaled", base.clone()), ("load-0.9", scale_to_load(&base, 0.9))];
+    // (label, trace, time the seed engine too?)
+    let mut cases: Vec<(String, Trace, bool)> = vec![
+        ("unscaled".into(), base.clone(), true),
+        ("load-0.9".into(), scale_to_load(&base, 0.9), true),
+    ];
+    if !quick {
+        let big = generate(seed, big_jobs, &LublinParams::default());
+        cases.push((format!("{big_jobs}-jobs-load-0.9"), scale_to_load(&big, 0.9), false));
+    }
+
     let mut entries = Vec::new();
-    let mut headline = f64::NAN;
+    let mut headline_seed = f64::NAN;
+    let mut headline_seed_label = String::from("none");
+    let mut headline_lazy = f64::NAN;
+    let mut headline_lazy_label = String::from("none");
     let mut all_identical = true;
-    for (label, trace) in &cases {
-        let (t_seed, r_seed) = timed(trace, EngineKind::Reference);
+    let mut all_equivalent = true;
+    for (label, trace, with_seed) in &cases {
         let (t_idx, r_idx) = timed(trace, EngineKind::Indexed);
-        let speedup = t_seed / t_idx.max(1e-12);
-        let identical = bit_identical(&r_seed, &r_idx);
-        all_identical &= identical;
-        if *label == "load-0.9" {
-            headline = speedup;
+        let (t_lazy, r_lazy) = timed(trace, EngineKind::Lazy);
+        let speedup_lazy = t_idx / t_lazy.max(1e-12);
+        // The contract definition shared with tests/engine_equivalence.rs.
+        let equivalent = match dfrs::sim::check_lazy_equivalence(&r_idx, &r_lazy) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("lazy contract violation ({label}): {e}");
+                false
+            }
+        };
+        all_equivalent &= equivalent;
+        // Cases without a seed-engine run get honest nulls: no comparison
+        // happened, so no verdict is published for it.
+        let (seed_cell, speedup_seed, identical_cell) = if *with_seed {
+            let (t_seed, r_seed) = timed(trace, EngineKind::Reference);
+            let sp = t_seed / t_idx.max(1e-12);
+            let ident = bit_identical(&r_seed, &r_idx);
+            all_identical &= ident;
+            (format!("{t_seed:.4}"), sp, format!("{ident}"))
+        } else {
+            ("null".into(), f64::NAN, "null".into())
+        };
+        // Headlines carry the label of the run they came from into the
+        // JSON, so a --quick or custom-size run cannot misattribute its
+        // numbers to the default cases.
+        if *with_seed && label.ends_with("load-0.9") {
+            headline_seed = speedup_seed;
+            headline_seed_label.clone_from(label);
+        }
+        // The last load-0.9 case wins: the 10k-job case when present,
+        // the 1k-job case under --quick.
+        if label.ends_with("load-0.9") {
+            headline_lazy = speedup_lazy;
+            headline_lazy_label.clone_from(label);
         }
         println!(
-            "{label:<10} load={:.2}  seed engine {t_seed:>8.3}s  indexed {t_idx:>8.3}s  \
-             speedup {speedup:>6.2}x  bit-identical: {identical}",
+            "{label:<18} load={:.2}  seed {seed_cell:>8}s  indexed {t_idx:>8.3}s  \
+             lazy {t_lazy:>8.3}s  lazy-speedup {speedup_lazy:>6.2}x  \
+             bit-identical: {identical_cell}  lazy-equivalent: {equivalent}",
             trace.offered_load()
         );
         entries.push(format!(
-            "{{\"label\": \"{label}\", \"offered_load\": {:.4}, \"seed_engine_s\": {t_seed:.4}, \
-             \"indexed_engine_s\": {t_idx:.4}, \"speedup\": {speedup:.2}, \
-             \"bit_identical\": {identical}, \"max_stretch\": {:.6}, \"preemptions\": {}, \
-             \"migrations\": {}}}",
+            "{{\"label\": \"{label}\", \"jobs\": {}, \"offered_load\": {:.4}, \
+             \"seed_engine_s\": {seed_cell}, \"indexed_engine_s\": {t_idx:.4}, \
+             \"lazy_engine_s\": {t_lazy:.4}, \"speedup_lazy_vs_indexed\": {speedup_lazy:.2}, \
+             \"bit_identical\": {identical_cell}, \"lazy_equivalent\": {equivalent}, \
+             \"max_stretch\": {:.6}, \"preemptions\": {}, \"migrations\": {}}}",
+            trace.jobs.len(),
             trace.offered_load(),
             r_idx.max_stretch,
             r_idx.preemptions,
@@ -88,11 +136,18 @@ fn main() {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"sim_engine\",\n  \"algorithm\": \"{ALG}\",\n  \
+        "{{\n  \"bench\": \"sim_engine\",\n  \"meta\": {},\n  \"algorithm\": \"{ALG}\",\n  \
          \"trace\": {{\"generator\": \"lublin\", \"jobs\": {jobs}, \"nodes\": {nodes}, \
-         \"seed\": {seed}}},\n  \"runs\": [\n    {}\n  ],\n  \"speedup\": {headline:.2},\n  \
-         \"speedup_note\": \"headline = load-0.9 case; the --full grid's wall-clock is \
-         dominated by high-load scaled traces\",\n  \"bit_identical\": {all_identical}\n}}\n",
+         \"seed\": {seed}}},\n  \"runs\": [\n    {}\n  ],\n  \
+         \"speedup\": {headline_seed:.2},\n  \
+         \"speedup_case\": \"{headline_seed_label}\",\n  \
+         \"speedup_lazy_vs_indexed\": {headline_lazy:.2},\n  \
+         \"speedup_lazy_case\": \"{headline_lazy_label}\",\n  \
+         \"speedup_note\": \"speedup = seed/indexed at the speedup_case run; \
+         speedup_lazy_vs_indexed = indexed/lazy at the speedup_lazy_case run \
+         (the --full grid's wall-clock is dominated by high-load traces)\",\n  \
+         \"bit_identical\": {all_identical},\n  \"lazy_equivalent\": {all_equivalent}\n}}\n",
+        bench_meta_json(),
         entries.join(",\n    ")
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim_engine.json");
@@ -101,7 +156,11 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
     }
     if !all_identical {
-        eprintln!("ERROR: engines diverged — see tests/engine_equivalence.rs");
+        eprintln!("ERROR: seed/indexed engines diverged — see tests/engine_equivalence.rs");
+        std::process::exit(1);
+    }
+    if !all_equivalent {
+        eprintln!("ERROR: lazy engine broke its equivalence contract");
         std::process::exit(1);
     }
 }

@@ -28,6 +28,17 @@ impl NeedMatrix {
         NeedMatrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Re-shape to `rows × cols` with every cell zeroed, reusing the
+    /// backing storage. The result is indistinguishable from
+    /// [`NeedMatrix::zeros`] — same cells, same values — minus the
+    /// allocation, so scratch reuse cannot perturb solver arithmetic.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.cols + j]
@@ -177,8 +188,16 @@ impl OptMode {
 /// probe), so the column lookup binary-searches the sorted running-id
 /// vector instead of building a hash map per call.
 pub fn need_matrix(sim: &Sim) -> (NeedMatrix, Vec<JobId>) {
-    let running = sim.running(); // ascending ids in both engine modes
-    let mut e = NeedMatrix::zeros(sim.cluster.nodes, running.len());
+    let mut e = NeedMatrix::zeros(0, 0);
+    let running = need_matrix_into(sim, &mut e);
+    (e, running)
+}
+
+/// [`need_matrix`] building into a caller-owned matrix (scratch reuse on
+/// the per-event hot path; see [`reallocate`]).
+pub fn need_matrix_into(sim: &Sim, e: &mut NeedMatrix) -> Vec<JobId> {
+    let running = sim.running(); // ascending ids in every engine mode
+    e.reset(sim.cluster.nodes, running.len());
     for i in 0..sim.cluster.nodes {
         for &(j, count) in &sim.cluster.tasks_on[i] {
             if let Ok(c) = running.binary_search(&j) {
@@ -186,14 +205,19 @@ pub fn need_matrix(sim: &Sim) -> (NeedMatrix, Vec<JobId>) {
             }
         }
     }
-    (e, running)
+    running
 }
 
 /// Recompute and apply yields for all running jobs per `mode`. This is the
 /// §4.6 allocation step every DFRS policy calls after changing the mapping.
+/// The dense matrix is rebuilt into a scratch held by the engine — the same
+/// zeroed cells and the same fill order as a fresh build, so the solver
+/// sees bit-identical input without the per-event allocation.
 pub fn reallocate(sim: &mut Sim, mode: OptMode) {
-    let (e, cols) = need_matrix(sim);
+    let mut e = std::mem::replace(&mut sim.need_scratch, NeedMatrix::zeros(0, 0));
+    let cols = need_matrix_into(sim, &mut e);
     if cols.is_empty() {
+        sim.need_scratch = e;
         return;
     }
     let yields = match mode {
@@ -207,6 +231,7 @@ pub fn reallocate(sim: &mut Sim, mode: OptMode) {
     for (c, &j) in cols.iter().enumerate() {
         sim.set_yield(j, yields[c].clamp(0.0, 1.0));
     }
+    sim.need_scratch = e;
 }
 
 /// OPT=AVG via LP (2): maximize Σ y_j s.t. per-node Σ e_ij·y_j ≤ 1 and

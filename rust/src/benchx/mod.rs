@@ -65,6 +65,40 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// Environment metadata stamped into every `BENCH_*.json` so the cross-PR
+/// perf trajectory stays comparable: compiler, core count, and the commit
+/// the numbers were taken at. Git is asked about *this* crate's checkout
+/// (not the invoker's cwd) and reports `-dirty` when the benchmarked code
+/// contains uncommitted changes, so the provenance cannot silently name a
+/// commit that never held the measured code. Values degrade to
+/// `"unknown"` when the tool is unavailable (e.g. a stripped container
+/// without `rustc` or outside a git checkout) — the bench itself must
+/// never fail on that.
+pub fn bench_meta_json() -> String {
+    let run = |cmd: &str, args: &[&str]| -> Option<String> {
+        let out = std::process::Command::new(cmd).args(args).output().ok()?;
+        if !out.status.success() {
+            return None;
+        }
+        let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+        if s.is_empty() {
+            None
+        } else {
+            Some(s)
+        }
+    };
+    let rustc = run("rustc", &["--version"]).unwrap_or_else(|| "unknown".into());
+    let manifest_dir = env!("CARGO_MANIFEST_DIR");
+    let sha = run("git", &["-C", manifest_dir, "describe", "--always", "--dirty"])
+        .unwrap_or_else(|| "unknown".into());
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    format!(
+        "{{\"rustc\": \"{}\", \"cores\": {cores}, \"git_sha\": \"{}\"}}",
+        rustc.replace('"', "'"),
+        sha.replace('"', "'")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +115,15 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.mean_s > 0.0);
         assert!(s.p50_s <= s.p95_s && s.p95_s <= s.max_s);
+    }
+
+    #[test]
+    fn bench_meta_is_well_formed_json_fragment() {
+        let m = bench_meta_json();
+        assert!(m.starts_with('{') && m.ends_with('}'), "{m}");
+        for key in ["\"rustc\"", "\"cores\"", "\"git_sha\""] {
+            assert!(m.contains(key), "{m} missing {key}");
+        }
     }
 
     #[test]

@@ -107,7 +107,8 @@ fn parse_engine(name: &str) -> Result<EngineKind> {
     match name {
         "indexed" => Ok(EngineKind::Indexed),
         "reference" | "seed" => Ok(EngineKind::Reference),
-        other => anyhow::bail!("unknown engine {other:?} (indexed | reference)"),
+        "lazy" => Ok(EngineKind::Lazy),
+        other => anyhow::bail!("unknown engine {other:?} (indexed | reference | lazy)"),
     }
 }
 
@@ -915,11 +916,13 @@ mod tests {
     }
 
     #[test]
-    fn parse_engine_accepts_both_engines() {
+    fn parse_engine_accepts_every_engine() {
         assert!(matches!(parse_engine("indexed").unwrap(), EngineKind::Indexed));
         assert!(matches!(parse_engine("reference").unwrap(), EngineKind::Reference));
         assert!(matches!(parse_engine("seed").unwrap(), EngineKind::Reference));
-        assert!(parse_engine("warp").is_err());
+        assert!(matches!(parse_engine("lazy").unwrap(), EngineKind::Lazy));
+        let err = parse_engine("warp").unwrap_err().to_string();
+        assert!(err.contains("lazy"), "error must list the accepted set: {err}");
     }
 
     #[test]

@@ -26,8 +26,11 @@ COMMANDS
                   --seed S          RNG seed (default 1)
                   --period T        periodic interval seconds (default 600)
                   --solver S        rust | xla | auto (default auto)
-                  --engine E        indexed | reference event loop
-                                    (default indexed; results identical)
+                  --engine E        indexed | reference | lazy event loop
+                                    (default indexed; indexed ≡ reference
+                                    bit for bit, lazy matches discrete
+                                    outcomes with ≤1e-6 relative error on
+                                    continuous metrics)
                   --scenario S      platform dynamics: a built-in name
                                     (none | failures | drain | burst |
                                     diurnal | elastic | chaos) or a path to

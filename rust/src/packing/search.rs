@@ -42,7 +42,9 @@ impl PinRule {
             return false;
         }
         match self {
-            PinRule::MinVt(b) => sim.jobs[j].vt < *b,
+            // Virtual time goes through the accessor so lazy clocks
+            // materialize (engine-generic path).
+            PinRule::MinVt(b) => sim.vt(j) < *b,
             PinRule::MinFt(b) => sim.jobs[j].flow_time(sim.now) < *b,
         }
     }
@@ -90,11 +92,14 @@ pub(crate) fn pinned_placement<'a>(
 }
 
 /// All live jobs (running + paused + pending) in descending priority order
-/// — the candidate set of one MCB8 allocation pass.
+/// — the candidate set of one MCB8 allocation pass. Built from the
+/// engine's index slices (`running_ids`/`paused_ids`/`pending_ids`), which
+/// are accurate in every engine mode and allocation-free to read.
 pub fn collect_candidates(sim: &Sim) -> Vec<JobId> {
-    let mut candidates: Vec<JobId> = sim.running();
-    candidates.extend(sim.paused());
-    candidates.extend(sim.pending());
+    let mut candidates: Vec<JobId> = Vec::new();
+    candidates.extend_from_slice(sim.running_ids());
+    candidates.extend_from_slice(sim.paused_ids());
+    candidates.extend_from_slice(sim.pending_ids());
     sort_by_priority(sim, &mut candidates);
     candidates
 }
@@ -304,7 +309,7 @@ impl RepackCache {
         self.cand.clear();
         self.cand.extend_from_slice(sim.running_ids());
         self.cand.extend_from_slice(sim.paused_ids());
-        self.cand.extend(sim.pending());
+        self.cand.extend_from_slice(sim.pending_ids());
         sort_by_priority(sim, &mut self.cand);
 
         if !self.enabled {

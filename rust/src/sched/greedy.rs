@@ -287,8 +287,9 @@ pub fn apply_admission(sim: &mut Sim, j: JobId, adm: Admission) {
 /// names, §4.4): on each completion, try to start paused + pending jobs in
 /// priority order with plain Greedy.
 pub fn opportunistic_start(sim: &mut Sim) {
-    let mut waiting: Vec<JobId> = sim.paused();
-    waiting.extend(sim.pending());
+    let mut waiting: Vec<JobId> = Vec::new();
+    waiting.extend_from_slice(sim.paused_ids());
+    waiting.extend_from_slice(sim.pending_ids());
     crate::sched::priority::sort_by_priority(sim, &mut waiting);
     if sim.is_reference() {
         for w in waiting {

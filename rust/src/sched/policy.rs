@@ -107,10 +107,10 @@ fn apply_decay(sim: &mut Sim, bound: f64, factor: f64) {
     if running.len() < 2 {
         return;
     }
-    // Decay the long runners.
+    // Decay the long runners (vt via the accessor: lazy clocks).
     let mut decayed = std::collections::HashSet::new();
     for &j in &running {
-        if sim.jobs[j].vt > bound {
+        if sim.vt(j) > bound {
             let y = sim.jobs[j].yield_now * factor;
             sim.set_yield(j, y);
             decayed.insert(j);
@@ -127,7 +127,7 @@ fn apply_decay(sim: &mut Sim, bound: f64, factor: f64) {
             slack[n] -= need;
         }
     }
-    running.sort_by(|&a, &b| sim.jobs[a].vt.partial_cmp(&sim.jobs[b].vt).unwrap());
+    running.sort_by(|&a, &b| sim.vt(a).partial_cmp(&sim.vt(b)).unwrap());
     for &j in &running {
         if decayed.contains(&j) {
             continue;

@@ -9,29 +9,74 @@
 use crate::sim::{JobId, JobSim, Sim};
 use std::cmp::Ordering;
 
-/// Priority value at instant `now`; higher = more important.
-pub fn priority(job: &JobSim, now: f64) -> f64 {
-    if job.vt <= 0.0 {
+/// Priority from a flow time and a virtual time; higher = more important.
+pub fn priority_value(flow: f64, vt: f64) -> f64 {
+    if vt <= 0.0 {
         f64::INFINITY
     } else {
-        job.flow_time(now) / (job.vt * job.vt)
+        flow / (vt * vt)
     }
+}
+
+/// Priority value at instant `now`; higher = more important. Reads the
+/// job's stored `vt` field — correct for the eager engines; engine-generic
+/// code must go through [`cmp_by_priority`]/[`sort_by_priority`], which
+/// materialize lazy virtual-time clocks via `Sim::vt`.
+pub fn priority(job: &JobSim, now: f64) -> f64 {
+    priority_value(job.flow_time(now), job.vt)
+}
+
+/// Sort key of job `j`: (priority, submit time, id). Every ordering in
+/// this module is defined over this one triple so the comparator cannot
+/// drift between call sites. Virtual time goes through `Sim::vt` (lazy
+/// clocks materialize).
+fn priority_key(sim: &Sim, j: JobId) -> (f64, f64, JobId) {
+    let job = &sim.jobs[j];
+    (priority_value(job.flow_time(sim.now), sim.vt(j)), job.spec.submit, j)
+}
+
+/// The total order over keys: descending priority, ties by earlier
+/// submission, then by id (deterministic).
+fn cmp_keys(a: &(f64, f64, JobId), b: &(f64, f64, JobId)) -> Ordering {
+    b.0.partial_cmp(&a.0)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal))
+        .then_with(|| a.2.cmp(&b.2))
 }
 
 /// Total order over jobs: descending priority, ties by earlier submission,
 /// then by id (deterministic).
 pub fn cmp_by_priority(sim: &Sim, a: JobId, b: JobId) -> Ordering {
-    let (ja, jb) = (&sim.jobs[a], &sim.jobs[b]);
-    let (pa, pb) = (priority(ja, sim.now), priority(jb, sim.now));
-    pb.partial_cmp(&pa)
-        .unwrap_or(Ordering::Equal)
-        .then_with(|| ja.spec.submit.partial_cmp(&jb.spec.submit).unwrap_or(Ordering::Equal))
-        .then_with(|| a.cmp(&b))
+    cmp_keys(&priority_key(sim, a), &priority_key(sim, b))
 }
 
-/// Jobs sorted by descending priority.
+thread_local! {
+    /// Scratch for `sort_by_priority`'s decorated keys — the sort runs at
+    /// every scheduling event over the waiting set, so the buffer is
+    /// reused per thread (each rayon grid worker gets its own) instead of
+    /// reallocated per call.
+    static SORT_KEYS: std::cell::RefCell<Vec<(f64, f64, JobId)>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
+/// Jobs sorted by descending priority. Decorates each job with its key
+/// once instead of recomputing priorities inside the comparator (the seed
+/// sorted with `cmp_by_priority` directly, costing two priority
+/// evaluations per comparison on the O(waiting log waiting) event hot
+/// path). The key triple and `cmp_keys` define exactly the total order
+/// `cmp_by_priority` exposes, so the sorted result is identical element
+/// for element.
 pub fn sort_by_priority(sim: &Sim, jobs: &mut [JobId]) {
-    jobs.sort_by(|&a, &b| cmp_by_priority(sim, a, b));
+    SORT_KEYS.with(|cell| {
+        let mut keyed = cell.borrow_mut();
+        keyed.clear();
+        keyed.extend(jobs.iter().map(|&j| priority_key(sim, j)));
+        keyed.sort_unstable_by(cmp_keys);
+        for (slot, &(_, _, j)) in jobs.iter_mut().zip(keyed.iter()) {
+            *slot = j;
+        }
+        keyed.clear();
+    });
 }
 
 #[cfg(test)]

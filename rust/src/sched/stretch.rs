@@ -35,12 +35,13 @@ pub struct StretchOutcome {
 }
 
 /// Yield needed by job `j` so its next-event stretch estimate is ≤ `s`.
-/// Returns None if infeasible (would need yield > 1).
+/// Returns None if infeasible (would need yield > 1). Virtual time goes
+/// through `Sim::vt` so lazy clocks materialize.
 fn required_yield(sim: &Sim, j: JobId, s: f64, period: f64) -> Option<f64> {
-    let job = &sim.jobs[j];
-    let ft = job.flow_time(sim.now);
+    let ft = sim.jobs[j].flow_time(sim.now);
+    let vt = sim.vt(j);
     // (ft + T) / (vt + y T) <= s  =>  y >= ((ft + T)/s - vt) / T
-    let y = (((ft + period) / s) - job.vt) / period;
+    let y = (((ft + period) / s) - vt) / period;
     if y > 1.0 + 1e-9 {
         None
     } else {
@@ -209,8 +210,8 @@ pub fn improve_max_stretch(sim: &Sim, yields: &mut [(JobId, f64)], period: f64) 
             slack[n] -= need * y;
         }
     }
-    let predicted = |job: &crate::sim::JobSim, y: f64| {
-        (job.flow_time(sim.now) + period) / (job.vt + y * period).max(1e-9)
+    let predicted = |j: JobId, y: f64| {
+        (sim.jobs[j].flow_time(sim.now) + period) / (sim.vt(j) + y * period).max(1e-9)
     };
     for _ in 0..10_000 {
         // Worst predicted stretch among jobs that can still be raised.
@@ -226,7 +227,7 @@ pub fn improve_max_stretch(sim: &Sim, yields: &mut [(JobId, f64)], period: f64) 
             if !can_raise {
                 continue;
             }
-            let s = predicted(job, y);
+            let s = predicted(j, y);
             if s > worst_s {
                 worst_s = s;
                 worst = Some(idx);

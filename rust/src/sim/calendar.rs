@@ -64,6 +64,31 @@ impl EventCalendar {
         f64::INFINITY
     }
 
+    /// Pop every event at or before `cutoff`, appending the jobs whose
+    /// entries satisfy `valid(job, time)` to `out` (stale entries are
+    /// discarded silently). Entries after the cutoff are untouched. The
+    /// lazy engine drains due completion *detections* with this: a job may
+    /// have several superseded entries at or before `now`, so callers must
+    /// deduplicate `out` (validity keyed on the job's *current* detection
+    /// time keeps at most one, but two segment changes can reproduce the
+    /// same key at the same instant).
+    pub fn pop_due(
+        &mut self,
+        cutoff: f64,
+        valid: impl Fn(JobId, f64) -> bool,
+        out: &mut Vec<JobId>,
+    ) {
+        while let Some(&Reverse((TimeKey(t), j))) = self.heap.peek() {
+            if t > cutoff {
+                break;
+            }
+            self.heap.pop();
+            if valid(j, t) {
+                out.push(j);
+            }
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -117,6 +142,23 @@ mod tests {
         c.schedule(400.0, 0);
         let current = 400.0;
         assert_eq!(c.next_after(0.0, |_, t| t == current), 400.0);
+    }
+
+    #[test]
+    fn pop_due_drains_only_due_valid_entries() {
+        let mut c = EventCalendar::new();
+        c.schedule(10.0, 0);
+        c.schedule(20.0, 1);
+        c.schedule(30.0, 2);
+        c.schedule(15.0, 3); // stale
+        let mut out = Vec::new();
+        c.pop_due(20.0, |j, _| j != 3, &mut out);
+        assert_eq!(out, vec![0, 1], "due valid entries in time order");
+        assert_eq!(c.len(), 1, "future entry stays");
+        out.clear();
+        c.pop_due(100.0, |_, _| true, &mut out);
+        assert_eq!(out, vec![2]);
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -12,14 +12,21 @@
 //! event — sorted per-state id sets back `running()`/`paused()`/`pending()`,
 //! a cached demand accumulator backs the underutilization integral, and a
 //! lazily-invalidated event calendar ([`calendar`]) serves penalty expiries.
-//! Completion candidates are folded over the running set only; predictions
-//! are deliberately recomputed from the current virtual time at each event
-//! so results stay bit-identical with the seed engine's arithmetic (see
-//! DESIGN.md for why cached predictions are unsound under f64 drift). The
-//! seed engine's full-scan event loop is preserved as
-//! [`EngineKind::Reference`] — it is the baseline for
-//! `benches/sim_engine.rs` and the oracle for the bit-identity tests in
-//! `tests/engine_equivalence.rs`.
+//! In the eager engines, completion candidates are folded over the running
+//! set with predictions recomputed from the current virtual time at each
+//! event, so results stay bit-identical with the seed engine's arithmetic
+//! (their `vt` is a running sum, under which cached predictions drift).
+//! [`EngineKind::Lazy`] goes further: per-job virtual-time clocks are
+//! stored as `(vt_snapshot, snapshot_time)` and materialized only on
+//! yield/penalty/state changes, which makes `start + remaining/yield`
+//! stable across re-evaluations and lets completion predictions live in
+//! lazily-invalidated calendars; mapping application is a delta, and the
+//! metric integrands are maintained incrementally — one scheduling event
+//! costs O(changed jobs + log running). The seed engine's full-scan event
+//! loop is preserved as [`EngineKind::Reference`] — it is the baseline for
+//! `benches/sim_engine.rs` and the bit-identity oracle in
+//! `tests/engine_equivalence.rs`; the Indexed engine is the exact oracle
+//! the Lazy engine's discrete outcomes are held to.
 //!
 //! Modelling decisions (documented in DESIGN.md):
 //! - A job's task set is identical; placement is a multiset of nodes (tasks
@@ -64,18 +71,28 @@ impl Default for SimConfig {
     }
 }
 
-/// Which event-loop implementation a run uses. Both produce bit-identical
-/// `SimResult`s (enforced by `tests/engine_equivalence.rs`); they differ
-/// only in how much work each event costs.
+/// Which event-loop implementation a run uses. Indexed and Reference
+/// produce bit-identical `SimResult`s; Lazy produces identical *discrete*
+/// outcomes (completion order, preemption/migration/interrupt counts) with
+/// continuous metrics within 1e-6 relative tolerance (both contracts are
+/// enforced by `tests/engine_equivalence.rs`). They differ only in how much
+/// work each event costs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     /// Indexed engine: per-state id sets, cached accumulators, event
-    /// calendar. The default.
+    /// calendar. Recomputes virtual time and completion predictions
+    /// eagerly, so it is the *exact* oracle. The default.
     Indexed,
     /// Seed engine: every query and every event rescans all jobs, and
     /// admission shadows clone the full cluster. Kept as the performance
-    /// baseline and equivalence oracle.
+    /// baseline and bit-identity oracle.
     Reference,
+    /// Constant-work engine: lazy virtual-time clocks (vt materializes only
+    /// on yield/penalty/state changes), completion predictions served from
+    /// lazily-invalidated calendars, delta mapping application, and
+    /// incremental demand/utilization accumulators. A scheduling event
+    /// costs O(changed jobs + log running) instead of O(running jobs).
+    Lazy,
 }
 
 /// Aggregated per-run results.
@@ -154,6 +171,47 @@ pub struct Sim {
     /// Pending rescheduling-penalty expiries (lazily invalidated).
     penalties: EventCalendar,
     full_scan: bool,
+    /// EngineKind::Lazy selected. The fields below this flag are only
+    /// maintained in lazy mode; the other engines never read them.
+    lazy: bool,
+    /// Lazy clock: job `j`'s `vt` field holds the virtual time at
+    /// `snap_time[j]`; the true value at `t` is
+    /// `vt + yield_now * (t - max(snap_time, penalty_until)).max(0)`
+    /// ([`Sim::vt`]). `touch_clock` folds the accrual in before any yield
+    /// or penalty change, so the formula always spans one constant segment.
+    snap_time: Vec<f64>,
+    /// Whether job `j`'s rate is currently included in `util_rate` (running
+    /// and past its penalty).
+    util_active: Vec<bool>,
+    /// Σ tasks·cpu_need·yield over active jobs — the utilization integrand,
+    /// maintained on transitions instead of re-summed per segment.
+    util_rate: f64,
+    /// Σ tasks·cpu_need over the live set (lazy-mode demand integrand).
+    demand_rate: f64,
+    /// Current exact-solve completion prediction per job (INFINITY when not
+    /// running or yield 0). A calendar entry is valid only while it equals
+    /// this bit-for-bit.
+    pred_time: Vec<f64>,
+    /// Time the job crosses the completion-detection tolerance
+    /// (`vt ≥ proc − 1e-6·max(proc,1)`); always ≤ `pred_time`.
+    det_time: Vec<f64>,
+    /// Completion predictions (exact solve) — drives the event loop.
+    predictions: EventCalendar,
+    /// Completion detections (tolerance crossing) — drains ready jobs.
+    detections: EventCalendar,
+    /// Penalty expiries whose rate must re-enter `util_rate`.
+    activations: EventCalendar,
+    /// Scratch for calendar drains.
+    due_scratch: Vec<JobId>,
+    // apply_mapping scratch (both paths), reused across events so the
+    // mapping application is allocation-free when warm.
+    map_named: std::collections::HashSet<JobId>,
+    map_running: Vec<JobId>,
+    map_moved: Vec<usize>,
+    /// Need-matrix scratch reused by `alloc::reallocate` (see DESIGN.md
+    /// §Performance notes): same zeroed cells, same fill order as a fresh
+    /// build, minus the per-event allocation.
+    pub(crate) need_scratch: crate::alloc::NeedMatrix,
     /// Count of up nodes — the capacity cap of the metric integrals. Kept
     /// incrementally (scenario events are rare; `advance` is hot).
     avail_nodes: usize,
@@ -197,8 +255,9 @@ impl Sim {
         );
         let jobs: Vec<JobSim> = trace.jobs.iter().map(|j| JobSim::new(j.clone())).collect();
         let total_work = trace.jobs.iter().map(|j| j.work()).sum();
+        let n = jobs.len();
         let mut pending_set = IndexSet::new();
-        for j in 0..jobs.len() {
+        for j in 0..n {
             pending_set.insert(j);
         }
         Sim {
@@ -214,6 +273,21 @@ impl Sim {
             demand_cache: None,
             penalties: EventCalendar::new(),
             full_scan: matches!(engine, EngineKind::Reference),
+            lazy: matches!(engine, EngineKind::Lazy),
+            snap_time: vec![0.0; n],
+            util_active: vec![false; n],
+            util_rate: 0.0,
+            demand_rate: 0.0,
+            pred_time: vec![f64::INFINITY; n],
+            det_time: vec![f64::INFINITY; n],
+            predictions: EventCalendar::new(),
+            detections: EventCalendar::new(),
+            activations: EventCalendar::new(),
+            due_scratch: Vec::new(),
+            map_named: std::collections::HashSet::new(),
+            map_running: Vec::new(),
+            map_moved: Vec::new(),
+            need_scratch: crate::alloc::NeedMatrix::zeros(0, 0),
             avail_nodes: trace.nodes,
             elastic_down: Vec::new(),
             underutil_area: 0.0,
@@ -231,6 +305,137 @@ impl Sim {
     /// Whether this engine runs in seed (full-scan) mode.
     pub fn is_reference(&self) -> bool {
         self.full_scan
+    }
+
+    /// Whether this engine runs in lazy (constant-work) mode.
+    pub fn is_lazy(&self) -> bool {
+        self.lazy
+    }
+
+    // ----- Lazy virtual-time clocks (EngineKind::Lazy) ------------------
+
+    /// Job `j`'s virtual time at the current instant, in any engine mode.
+    /// The lazy engine stores `(vt_snapshot, snapshot_time)` and
+    /// materializes on read; the other engines accrue `vt` eagerly in
+    /// [`Sim::advance`], so the field itself is current. Policies and
+    /// packing code must read virtual time through this accessor (not the
+    /// raw `jobs[j].vt` field) to be correct under every engine.
+    pub fn vt(&self, j: JobId) -> f64 {
+        let job = &self.jobs[j];
+        if !self.lazy || !matches!(job.state, JobState::Running) {
+            return job.vt;
+        }
+        let eff_start = self.snap_time[j].max(job.penalty_until);
+        job.vt + job.yield_now * (self.now - eff_start).max(0.0)
+    }
+
+    /// Utilization-integrand rate of job `j`: tasks·cpu_need·yield.
+    fn rate_of(&self, j: JobId) -> f64 {
+        let job = &self.jobs[j];
+        job.spec.tasks as f64 * job.spec.cpu_need * job.yield_now
+    }
+
+    /// Lazy engine: fold the accrual since the snapshot into `vt` and
+    /// restart the segment at `now`. Must precede any yield or penalty
+    /// change (the formula in [`Sim::vt`] assumes both are constant over
+    /// the segment).
+    fn touch_clock(&mut self, j: JobId) {
+        debug_assert!(self.lazy);
+        let v = self.vt(j);
+        self.jobs[j].vt = v;
+        self.snap_time[j] = self.now;
+    }
+
+    /// Lazy engine: include/exclude job `j`'s rate in `util_rate`. Active
+    /// = running and past its rescheduling penalty. Callers must adjust
+    /// `util_rate` themselves when the *yield* of an already-active job
+    /// changes (see [`Sim::set_yield`]).
+    fn set_rate_active(&mut self, j: JobId, on: bool) {
+        debug_assert!(self.lazy);
+        if self.util_active[j] == on {
+            return;
+        }
+        self.util_active[j] = on;
+        let r = self.rate_of(j);
+        if on {
+            self.util_rate += r;
+        } else {
+            self.util_rate -= r;
+        }
+    }
+
+    /// Lazy engine: recompute job `j`'s completion prediction (exact
+    /// solve) and detection time (tolerance crossing) from the current
+    /// segment state, scheduling calendar entries when they change. Both
+    /// are stable while `(vt, snap_time, yield, penalty_until)` are
+    /// unchanged — that stability (no f64 drift across re-evaluations) is
+    /// what makes cached predictions sound here, unlike in the eager
+    /// engines where `vt` is a running sum (DESIGN.md §Engine internals).
+    /// A calendar entry is valid only while it equals the stored time
+    /// bit-for-bit, so superseded entries die on the next query.
+    fn refresh_prediction(&mut self, j: JobId) {
+        debug_assert!(self.lazy);
+        let job = &self.jobs[j];
+        let (pred, det) = if matches!(job.state, JobState::Running) {
+            let proc = job.spec.proc_time;
+            let tol = 1e-6 * proc.max(1.0);
+            let eff_start = self.snap_time[j].max(job.penalty_until);
+            let rem_det = (proc - tol - job.vt).max(0.0);
+            if job.yield_now > 0.0 {
+                let remaining = (proc - job.vt).max(0.0);
+                let det = if rem_det == 0.0 {
+                    // Already within tolerance: ready at every subsequent
+                    // event, regardless of any pending penalty (the eager
+                    // engines' job_ready ignores the penalty too).
+                    self.now
+                } else {
+                    eff_start + rem_det / job.yield_now
+                };
+                (eff_start + remaining / job.yield_now, det)
+            } else if rem_det == 0.0 {
+                // Yield dropped to zero after the job crossed the
+                // tolerance: it still completes at the next event, but
+                // never drives one (the eager next_completion skips
+                // zero-yield jobs likewise).
+                (f64::INFINITY, self.now)
+            } else {
+                (f64::INFINITY, f64::INFINITY)
+            }
+        } else {
+            (f64::INFINITY, f64::INFINITY)
+        };
+        if self.pred_time[j].to_bits() != pred.to_bits() {
+            self.pred_time[j] = pred;
+            if pred.is_finite() {
+                self.predictions.schedule(pred, j);
+            }
+        }
+        if self.det_time[j].to_bits() != det.to_bits() {
+            self.det_time[j] = det;
+            if det.is_finite() {
+                self.detections.schedule(det, j);
+            }
+        }
+    }
+
+    /// Lazy engine: bookkeeping for a job that has just entered `Running`
+    /// (fresh start or resume): the clock segment restarts now, and the
+    /// job is active until a penalty deactivates it. Its yield is always 0
+    /// here (pause/kill zero it; fresh jobs start at 0), so activation
+    /// contributes no rate until `set_yield`.
+    fn lazy_on_start(&mut self, j: JobId) {
+        debug_assert!(self.lazy);
+        self.snap_time[j] = self.now;
+        self.set_rate_active(j, true);
+    }
+
+    /// Lazy engine: bookkeeping for a job leaving `Running` (pause,
+    /// completion): materialize its final virtual time and retire its rate.
+    /// Call *before* the state change and before zeroing the yield.
+    fn lazy_on_stop(&mut self, j: JobId) {
+        debug_assert!(self.lazy);
+        self.touch_clock(j);
+        self.set_rate_active(j, false);
     }
 
     // ----- Indexed state maintenance -----------------------------------
@@ -264,6 +469,10 @@ impl Sim {
                 // never went through a submission event.
                 if self.live_set.insert(j) {
                     self.demand_cache = None;
+                    if self.lazy {
+                        self.demand_rate +=
+                            self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.cpu_need;
+                    }
                 }
             }
             JobState::Paused => {
@@ -272,6 +481,10 @@ impl Sim {
             JobState::Done => {
                 if self.live_set.remove(j) {
                     self.demand_cache = None;
+                    if self.lazy {
+                        self.demand_rate -=
+                            self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.cpu_need;
+                    }
                 }
             }
         }
@@ -283,14 +496,31 @@ impl Sim {
     fn mark_submitted(&mut self, j: JobId) {
         if self.live_set.insert(j) {
             self.demand_cache = None;
+            if self.lazy {
+                self.demand_rate += self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.cpu_need;
+            }
         }
     }
 
     /// Assign a rescheduling penalty ending at `until` and register the
-    /// expiry with the event calendar.
+    /// expiry with the event calendar. The lazy engine additionally closes
+    /// the current clock segment (accrual under the *old* penalty folds in
+    /// first), retires the job's rate until the new expiry, and refreshes
+    /// its completion prediction.
     fn set_penalty(&mut self, j: JobId, until: f64) {
-        self.jobs[j].penalty_until = until;
-        self.penalties.schedule(until, j);
+        if self.lazy {
+            self.touch_clock(j);
+            self.jobs[j].penalty_until = until;
+            self.penalties.schedule(until, j);
+            if matches!(self.jobs[j].state, JobState::Running) && until > self.now {
+                self.set_rate_active(j, false);
+                self.activations.schedule(until, j);
+            }
+            self.refresh_prediction(j);
+        } else {
+            self.jobs[j].penalty_until = until;
+            self.penalties.schedule(until, j);
+        }
     }
 
     // ----- Scenario events (platform dynamics) -------------------------
@@ -420,6 +650,10 @@ impl Sim {
     /// image is written — the job restarts from scratch.
     fn kill_job(&mut self, j: JobId) {
         debug_assert!(matches!(self.jobs[j].state, JobState::Running), "kill of non-running job");
+        if self.lazy {
+            // Progress is lost anyway; only the rate retirement matters.
+            self.set_rate_active(j, false);
+        }
         let need = self.jobs[j].spec.cpu_need;
         let mem = self.jobs[j].spec.mem;
         let placement = std::mem::take(&mut self.jobs[j].placement);
@@ -434,6 +668,10 @@ impl Sim {
         job.requeue_penalty = true;
         job.interruptions += 1;
         self.interruptions += 1;
+        if self.lazy {
+            self.snap_time[j] = self.now;
+            self.refresh_prediction(j);
+        }
     }
 
     // ----- Mutation API used by policies -------------------------------
@@ -457,6 +695,9 @@ impl Sim {
         }
         self.set_state(j, JobState::Running);
         self.jobs[j].placement = placement;
+        if self.lazy {
+            self.lazy_on_start(j);
+        }
         if was_paused {
             // Read the saved image back from storage; penalty applies.
             self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
@@ -479,6 +720,9 @@ impl Sim {
             "pause_job on {:?}",
             self.jobs[j].state
         );
+        if self.lazy {
+            self.lazy_on_stop(j);
+        }
         let mem = self.jobs[j].spec.mem;
         let need = self.jobs[j].spec.cpu_need;
         let placement = std::mem::take(&mut self.jobs[j].placement);
@@ -491,6 +735,9 @@ impl Sim {
         job.preemptions += 1;
         self.preemptions += 1;
         self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
+        if self.lazy {
+            self.refresh_prediction(j);
+        }
     }
 
     /// Move a running job to a new placement. Tasks whose node changes are
@@ -532,19 +779,43 @@ impl Sim {
     /// This is how MCB8 outcomes and GreedyPM moves are applied: the diff
     /// is computed against the *whole* previous mapping so transient
     /// memory-overflow during the swap is impossible.
+    ///
+    /// The eager engines detach every running job and re-settle the whole
+    /// mapping (the seed semantics, preserved for bit-identity). The lazy
+    /// engine applies the *delta*: running jobs whose placement multiset is
+    /// unchanged are never detached or re-attached, so a cache-hit repack
+    /// (the `/per` steady state) applies with zero cluster mutations. Both
+    /// paths run out of scratch buffers held on the `Sim`, so a warm
+    /// application allocates only when a placement vector has to grow.
     pub fn apply_mapping(&mut self, mapping: &[(JobId, Vec<NodeId>)]) {
-        use std::collections::HashSet;
-        let named: HashSet<JobId> = mapping.iter().map(|(j, _)| *j).collect();
+        if self.lazy {
+            self.apply_mapping_delta(mapping);
+        } else {
+            self.apply_mapping_full(mapping);
+        }
+    }
+
+    /// Seed mapping application: detach everything, settle everything.
+    fn apply_mapping_full(&mut self, mapping: &[(JobId, Vec<NodeId>)]) {
+        let mut named = std::mem::take(&mut self.map_named);
+        named.clear();
+        named.extend(mapping.iter().map(|(j, _)| *j));
         // Phase 1: detach every running job from the cluster (placements
-        // stay on the jobs — phase 2 diffs against them).
-        let running = self.running();
+        // stay on the jobs — phase 2 diffs against them). Snapshot the
+        // running set into a scratch (phase 2 mutates it); the index is
+        // maintained in both eager modes and matches the seed full scan's
+        // ascending-id order.
+        let mut running = std::mem::take(&mut self.map_running);
+        running.clear();
+        running.extend_from_slice(self.running_set.as_slice());
         for &j in &running {
             let need = self.jobs[j].spec.cpu_need;
             let mem = self.jobs[j].spec.mem;
-            let placement = self.jobs[j].placement.clone();
+            let placement = std::mem::take(&mut self.jobs[j].placement);
             for &n in &placement {
                 self.cluster.remove_task(n, j, need, mem);
             }
+            self.jobs[j].placement = placement;
         }
         // Phase 2: settle every job named in the mapping.
         for (j, new_pl) in mapping {
@@ -568,17 +839,17 @@ impl Sim {
                         self.migrations += 1;
                         self.gb_moved += 2.0 * moved as f64 * mem * self.node_mem_gb;
                     }
-                    self.jobs[j].placement = new_pl.clone();
+                    self.jobs[j].placement.clone_from(new_pl);
                 }
                 JobState::Paused => {
                     self.set_state(j, JobState::Running);
-                    self.jobs[j].placement = new_pl.clone();
+                    self.jobs[j].placement.clone_from(new_pl);
                     self.set_penalty(j, now + penalty);
                     self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
                 }
                 JobState::Pending => {
                     self.set_state(j, JobState::Running);
-                    self.jobs[j].placement = new_pl.clone();
+                    self.jobs[j].placement.clone_from(new_pl);
                     if self.jobs[j].requeue_penalty {
                         // Killed-and-requeued: restart pays the penalty.
                         self.set_penalty(j, now + penalty);
@@ -604,14 +875,172 @@ impl Sim {
                 self.gb_moved += gb;
             }
         }
+        running.clear();
+        self.map_running = running;
+        named.clear();
+        self.map_named = named;
     }
 
-    /// Set the yield of a running job (allocation layer calls this).
+    /// Delta mapping application (lazy engine): only jobs whose placement
+    /// actually changes touch the cluster. Semantics — which jobs end up
+    /// where, which are migrated/resumed/started/preempted, and in which
+    /// order the accounting lands — are identical to
+    /// [`Sim::apply_mapping_full`]; the only observable difference is that
+    /// a running job re-mapped to the same multiset keeps its stored
+    /// placement *order* (placements are multisets, so nothing downstream
+    /// distinguishes the two beyond the repack-cache fingerprint, which
+    /// over-invalidates at worst).
+    ///
+    /// Transient memory-overflow stays impossible without the
+    /// detach-everything phase: every detach (movers' old placements,
+    /// preemption victims) runs before the first attach, and mid-attach
+    /// occupancy is then a per-node lower bound of the final mapping, which
+    /// the caller guarantees feasible.
+    fn apply_mapping_delta(&mut self, mapping: &[(JobId, Vec<NodeId>)]) {
+        let mut named = std::mem::take(&mut self.map_named);
+        named.clear();
+        named.extend(mapping.iter().map(|(j, _)| *j));
+        // Preemption victims: running jobs absent from the mapping.
+        let mut preempt = std::mem::take(&mut self.map_running);
+        preempt.clear();
+        preempt.extend(self.running_set.iter().copied().filter(|j| !named.contains(j)));
+        // Phase 1: per-entry move counts; detach everything that changes.
+        let mut moved = std::mem::take(&mut self.map_moved);
+        moved.clear();
+        for (j, new_pl) in mapping {
+            let j = *j;
+            let job = &self.jobs[j];
+            assert_eq!(new_pl.len(), job.spec.tasks as usize, "placement arity for job {j}");
+            let m = match job.state {
+                JobState::Running => multiset_diff(&job.placement, new_pl),
+                JobState::Paused | JobState::Pending => 0,
+                JobState::Done => panic!("mapping names completed job {j}"),
+            };
+            moved.push(m);
+            if m > 0 {
+                let need = self.jobs[j].spec.cpu_need;
+                let mem = self.jobs[j].spec.mem;
+                let placement = std::mem::take(&mut self.jobs[j].placement);
+                for &n in &placement {
+                    self.cluster.remove_task(n, j, need, mem);
+                }
+                self.jobs[j].placement = placement;
+            }
+        }
+        for &j in &preempt {
+            let need = self.jobs[j].spec.cpu_need;
+            let mem = self.jobs[j].spec.mem;
+            let placement = std::mem::take(&mut self.jobs[j].placement);
+            for &n in &placement {
+                self.cluster.remove_task(n, j, need, mem);
+            }
+            self.jobs[j].placement = placement;
+        }
+        // Phase 2: attach and account in mapping order (the same order the
+        // full path's phase 2 walks).
+        let penalty = self.cfg.reschedule_penalty;
+        for (i, (j, new_pl)) in mapping.iter().enumerate() {
+            let j = *j;
+            let now = self.now;
+            match self.jobs[j].state {
+                JobState::Running => {
+                    let m = moved[i];
+                    if m > 0 {
+                        let need = self.jobs[j].spec.cpu_need;
+                        let mem = self.jobs[j].spec.mem;
+                        for &n in new_pl {
+                            self.cluster.add_task(n, j, need, mem);
+                        }
+                        self.jobs[j].placement.clone_from(new_pl);
+                        self.jobs[j].migrations += 1;
+                        self.set_penalty(j, now + penalty);
+                        self.migrations += 1;
+                        self.gb_moved += 2.0 * m as f64 * mem * self.node_mem_gb;
+                    }
+                    // m == 0: untouched — the point of the delta path.
+                }
+                JobState::Paused => {
+                    let need = self.jobs[j].spec.cpu_need;
+                    let mem = self.jobs[j].spec.mem;
+                    for &n in new_pl {
+                        self.cluster.add_task(n, j, need, mem);
+                    }
+                    self.set_state(j, JobState::Running);
+                    self.jobs[j].placement.clone_from(new_pl);
+                    self.lazy_on_start(j);
+                    self.set_penalty(j, now + penalty);
+                    self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
+                }
+                JobState::Pending => {
+                    let need = self.jobs[j].spec.cpu_need;
+                    let mem = self.jobs[j].spec.mem;
+                    for &n in new_pl {
+                        self.cluster.add_task(n, j, need, mem);
+                    }
+                    self.set_state(j, JobState::Running);
+                    self.jobs[j].placement.clone_from(new_pl);
+                    self.lazy_on_start(j);
+                    if self.jobs[j].requeue_penalty {
+                        self.set_penalty(j, now + penalty);
+                        self.jobs[j].requeue_penalty = false;
+                    }
+                    if self.jobs[j].first_start.is_none() {
+                        self.jobs[j].first_start = Some(now);
+                    }
+                }
+                JobState::Done => unreachable!(),
+            }
+        }
+        // Phase 3: preemption victims, ascending id order (preempt was
+        // drawn from the sorted running set before phase 2 mutated it).
+        for &j in &preempt {
+            self.lazy_on_stop(j);
+            self.set_state(j, JobState::Paused);
+            let job = &mut self.jobs[j];
+            job.placement.clear();
+            job.yield_now = 0.0;
+            job.preemptions += 1;
+            self.preemptions += 1;
+            let gb = self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.mem * self.node_mem_gb;
+            self.gb_moved += gb;
+            self.refresh_prediction(j);
+        }
+        preempt.clear();
+        self.map_running = preempt;
+        named.clear();
+        self.map_named = named;
+        moved.clear();
+        self.map_moved = moved;
+    }
+
+    /// Set the yield of a running job (allocation layer calls this). The
+    /// lazy engine closes the clock segment first (accrual at the *old*
+    /// yield), swaps the job's rate contribution, and refreshes its
+    /// completion prediction.
     pub fn set_yield(&mut self, j: JobId, y: f64) {
         debug_assert!((0.0..=1.0 + 1e-9).contains(&y), "yield {y} out of range");
-        let job = &mut self.jobs[j];
-        debug_assert!(matches!(job.state, JobState::Running));
-        job.yield_now = y.min(1.0);
+        debug_assert!(matches!(self.jobs[j].state, JobState::Running));
+        let y = y.min(1.0);
+        if self.lazy {
+            if y.to_bits() == self.jobs[j].yield_now.to_bits() {
+                // Unchanged yield: the clock segment, the rate, and the
+                // cached predictions all stay exactly valid. This is the
+                // steady state — reallocation re-derives identical yields
+                // whenever the mapping is stable — and it is what keeps a
+                // quiet event at O(changed jobs), not O(running jobs).
+                return;
+            }
+            self.touch_clock(j);
+            if self.util_active[j] {
+                let base = self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.cpu_need;
+                self.util_rate -= base * self.jobs[j].yield_now;
+                self.util_rate += base * y;
+            }
+            self.jobs[j].yield_now = y;
+            self.refresh_prediction(j);
+        } else {
+            self.jobs[j].yield_now = y;
+        }
     }
 
     // ----- Query API ---------------------------------------------------
@@ -673,6 +1102,17 @@ impl Sim {
         self.paused_set.as_slice()
     }
 
+    /// Ids of pending jobs submitted so far, as a slice of the pending
+    /// index (no allocation; accurate in both engine modes). Same
+    /// submit-cursor semantics as [`Sim::pending`]: ids are submit-ordered
+    /// (asserted at construction), so the submitted jobs form a prefix of
+    /// the sorted pending set, found by binary search.
+    pub fn pending_ids(&self) -> &[JobId] {
+        let ids = self.pending_set.as_slice();
+        let cut = ids.partition_point(|&j| self.jobs[j].spec.submit <= self.now + 1e-9);
+        &ids[..cut]
+    }
+
     // ----- Time advancement --------------------------------------------
 
     /// Accrue virtual time and metric integrals from `self.now` to `t`.
@@ -683,6 +1123,44 @@ impl Sim {
     fn advance(&mut self, t: f64) {
         debug_assert!(t >= self.now - 1e-9);
         let dt = (t - self.now).max(0.0);
+        if dt > 0.0 && self.lazy {
+            // Constant-work accrual: demand and utilization are maintained
+            // incrementally on state/yield/penalty transitions, so a
+            // segment costs O(1) plus O(log) per penalty expiry that
+            // activates at its start. Virtual time is not touched at all —
+            // it materializes per job on demand ([`Sim::vt`]).
+            //
+            // Rate activations: the main loop stops at every penalty
+            // expiry of a running job, so no segment straddles one; an
+            // expiry at the segment start (≤ now + 1e-9, the loop's own
+            // coalescing tolerance) activates before the integrals accrue,
+            // one at the segment end activates on the next call.
+            let jobs = &self.jobs;
+            let active = &self.util_active;
+            let mut due = std::mem::take(&mut self.due_scratch);
+            due.clear();
+            self.activations.pop_due(
+                self.now + 1e-9,
+                |j, tt| {
+                    matches!(jobs[j].state, JobState::Running)
+                        && jobs[j].penalty_until == tt
+                        && !active[j]
+                },
+                &mut due,
+            );
+            for &j in &due {
+                self.set_rate_active(j, true);
+            }
+            due.clear();
+            self.due_scratch = due;
+            let cap = self.avail_nodes as f64;
+            let util = self.util_rate;
+            self.underutil_area += (self.demand_rate.min(cap) - util).max(0.0) * dt;
+            self.util_area += util * dt;
+            self.avail_node_seconds += cap * dt;
+            self.now = t;
+            return;
+        }
         if dt > 0.0 {
             let now = self.now;
             // Demand: submitted, not done. The indexed sum is cached: it
@@ -751,13 +1229,28 @@ impl Sim {
 
     /// Earliest completion among running jobs (f64::INFINITY if none).
     ///
-    /// Predictions are recomputed from the current virtual time rather than
-    /// cached in the calendar: a cached `start + remaining/yield` drifts by
+    /// In the eager engines (Indexed, Reference) predictions are recomputed
+    /// from the current virtual time rather than cached: their `vt` is a
+    /// running sum, so a cached `start + remaining/yield` drifts by
     /// accumulated rounding relative to the same expression evaluated
-    /// later, so a heap of stale predictions cannot reproduce this min
-    /// bit-for-bit (DESIGN.md §Engine internals). The indexed fold visits
-    /// only the running set, in the same ascending order as the seed scan.
-    fn next_completion(&self) -> f64 {
+    /// later, and no heap of stale predictions can reproduce this min
+    /// bit-for-bit. The indexed fold visits only the running set, in the
+    /// same ascending order as the seed scan, which keeps Indexed ≡
+    /// Reference exact. The lazy engine removes the drift at the source —
+    /// `start + remaining/yield` is a pure function of the job's frozen
+    /// segment state `(vt_snapshot, snap_time, yield, penalty_until)` — so
+    /// its predictions live in a lazily-invalidated calendar and this query
+    /// is O(log running) amortized (DESIGN.md §Engine internals).
+    fn next_completion(&mut self) -> f64 {
+        if self.lazy {
+            let pred = &self.pred_time;
+            // Valid = still bit-equal to the job's current prediction (a
+            // superseded segment left a stale entry) — non-running jobs
+            // hold INFINITY, which never matches a scheduled time.
+            return self
+                .predictions
+                .next_after(self.now - 1e-9, |j, t| pred[j].to_bits() == t.to_bits());
+        }
         let mut best = f64::INFINITY;
         if self.full_scan {
             for job in &self.jobs {
@@ -813,6 +1306,11 @@ impl Sim {
     }
 
     fn finish_job(&mut self, j: JobId) {
+        if self.lazy {
+            // Materialize the final virtual time (≈ proc_time) and retire
+            // the job's rate before the state flips.
+            self.lazy_on_stop(j);
+        }
         let need = self.jobs[j].spec.cpu_need;
         let mem = self.jobs[j].spec.mem;
         let placement = std::mem::take(&mut self.jobs[j].placement);
@@ -823,10 +1321,35 @@ impl Sim {
         let job = &mut self.jobs[j];
         job.yield_now = 0.0;
         job.completion = Some(self.now);
+        if self.lazy {
+            self.refresh_prediction(j);
+        }
     }
 
     fn complete_ready_jobs(&mut self) -> Vec<JobId> {
         let mut done = Vec::new();
+        if self.lazy {
+            // Drain due detections instead of scanning the running set. A
+            // job is due exactly when its tolerance-crossing time is ≤ now
+            // — the same set the eager engines' job_ready scan finds.
+            // Ascending-id processing order is restored by the sort (the
+            // heap yields time order), matching the eager engines' policy
+            // callback order.
+            let det = &self.det_time;
+            let mut due = std::mem::take(&mut self.due_scratch);
+            due.clear();
+            self.detections
+                .pop_due(self.now, |j, t| det[j].to_bits() == t.to_bits(), &mut due);
+            due.sort_unstable();
+            due.dedup();
+            for &j in &due {
+                self.finish_job(j);
+                done.push(j);
+            }
+            due.clear();
+            self.due_scratch = due;
+            return done;
+        }
         if self.full_scan {
             for j in 0..self.jobs.len() {
                 if self.job_ready(j) {
@@ -853,6 +1376,86 @@ impl Sim {
         let ta = (completion - job.spec.submit).max(self.cfg.stretch_threshold);
         ta / job.spec.proc_time.max(self.cfg.stretch_threshold)
     }
+}
+
+/// The lazy engine's equivalence contract, checked between an exact
+/// ([`EngineKind::Indexed`]) result and a lazy result: *discrete* outcomes
+/// — completion order, global and per-job preemption/migration/
+/// interruption counts — must be identical, and *continuous* metrics
+/// (stretch, utilization areas, bandwidth, per-job completions, starts and
+/// virtual times) must agree within 1e-6 relative error. Returns the first
+/// divergence as an error message. This is the single definition of the
+/// contract, shared by `tests/engine_equivalence.rs` and
+/// `benches/sim_engine.rs` so the two cannot drift.
+pub fn check_lazy_equivalence(exact: &SimResult, lazy: &SimResult) -> Result<(), String> {
+    fn rel_close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1.0)
+    }
+    fn completion_order(r: &SimResult) -> Vec<JobId> {
+        let mut ids: Vec<JobId> = (0..r.jobs.len()).collect();
+        ids.sort_by(|&a, &b| {
+            let (ca, cb) = (
+                r.jobs[a].completion.unwrap_or(f64::INFINITY),
+                r.jobs[b].completion.unwrap_or(f64::INFINITY),
+            );
+            ca.partial_cmp(&cb)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.cmp(&b))
+        });
+        ids
+    }
+    let discrete = |what: &str, a: u64, b: u64| -> Result<(), String> {
+        if a == b {
+            Ok(())
+        } else {
+            Err(format!("{what} diverged: {a} vs {b}"))
+        }
+    };
+    let close = |what: &str, a: f64, b: f64| -> Result<(), String> {
+        if rel_close(a, b) {
+            Ok(())
+        } else {
+            Err(format!("{what} beyond 1e-6 relative: {a} vs {b}"))
+        }
+    };
+    if exact.jobs.len() != lazy.jobs.len() {
+        return Err(format!("job count {} vs {}", exact.jobs.len(), lazy.jobs.len()));
+    }
+    discrete("preemptions", exact.preemptions, lazy.preemptions)?;
+    discrete("migrations", exact.migrations, lazy.migrations)?;
+    discrete("interrupted_jobs", exact.interrupted_jobs, lazy.interrupted_jobs)?;
+    if completion_order(exact) != completion_order(lazy) {
+        return Err("completion order diverged".into());
+    }
+    for (j, (x, y)) in exact.jobs.iter().zip(&lazy.jobs).enumerate() {
+        discrete(&format!("job {j} preemptions"), x.preemptions as u64, y.preemptions as u64)?;
+        discrete(&format!("job {j} migrations"), x.migrations as u64, y.migrations as u64)?;
+        discrete(
+            &format!("job {j} interruptions"),
+            x.interruptions as u64,
+            y.interruptions as u64,
+        )?;
+        match (x.completion, y.completion) {
+            (Some(a), Some(b)) => close(&format!("job {j} completion"), a, b)?,
+            (None, None) => {}
+            _ => return Err(format!("job {j} completion presence diverged")),
+        }
+        match (x.first_start, y.first_start) {
+            (Some(a), Some(b)) => close(&format!("job {j} first_start"), a, b)?,
+            (None, None) => {}
+            _ => return Err(format!("job {j} first_start presence diverged")),
+        }
+        close(&format!("job {j} vt"), x.vt, y.vt)?;
+    }
+    close("max_stretch", exact.max_stretch, lazy.max_stretch)?;
+    close("avg_stretch", exact.avg_stretch, lazy.avg_stretch)?;
+    close("underutil_area", exact.underutil_area, lazy.underutil_area)?;
+    close("norm_underutil", exact.norm_underutil, lazy.norm_underutil)?;
+    close("gb_moved", exact.gb_moved, lazy.gb_moved)?;
+    close("makespan", exact.makespan, lazy.makespan)?;
+    close("avail_node_seconds", exact.avail_node_seconds, lazy.avail_node_seconds)?;
+    close("avail_utilization", exact.avail_utilization, lazy.avail_utilization)?;
+    Ok(())
 }
 
 /// Number of tasks whose node differs between two placements, treating each
@@ -1475,6 +2078,133 @@ mod tests {
         assert_eq!(sim.cluster.nodes, 6, "fresh nodes appended");
         assert_eq!(sim.avail_nodes, 6);
         assert!(sim.cluster.can_place(5));
+    }
+
+    #[test]
+    fn pending_ids_matches_pending_cursor() {
+        let t = trace(vec![
+            job(0, 0.0, 1, 0.5, 0.2, 100.0),
+            job(1, 0.0, 1, 0.5, 0.2, 100.0),
+            job(2, 50.0, 1, 0.5, 0.2, 100.0),
+        ]);
+        let mut sim = Sim::new(&t, SimConfig::default(), Box::new(RustSolver));
+        sim.now = 1.0;
+        assert_eq!(sim.pending_ids(), &sim.pending()[..]);
+        assert_eq!(sim.pending_ids(), &[0, 1], "unsubmitted job excluded");
+        sim.now = 60.0;
+        assert_eq!(sim.pending_ids(), &[0, 1, 2]);
+        sim.start_job(0, vec![0]);
+        assert_eq!(sim.pending_ids(), &[1, 2]);
+        assert_eq!(sim.pending_ids(), &sim.pending()[..]);
+    }
+
+    #[test]
+    fn lazy_vt_materializes_on_read_not_on_advance() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 100.0)]);
+        let mut sim =
+            Sim::new_with(&t, SimConfig::default(), Box::new(RustSolver), EngineKind::Lazy);
+        assert!(sim.is_lazy());
+        sim.start_job(0, vec![0]);
+        sim.set_yield(0, 0.5);
+        sim.advance(10.0);
+        assert!((sim.vt(0) - 5.0).abs() < 1e-12, "materialized read");
+        assert_eq!(sim.jobs[0].vt, 0.0, "stored field stays a snapshot");
+        sim.set_yield(0, 1.0); // yield change touches the clock
+        assert!((sim.jobs[0].vt - 5.0).abs() < 1e-12, "touch folds accrual in");
+        sim.advance(20.0);
+        assert!((sim.vt(0) - 15.0).abs() < 1e-12);
+        // Unchanged yield must not restart the segment.
+        let snap_before = sim.jobs[0].vt;
+        sim.set_yield(0, 1.0);
+        assert_eq!(sim.jobs[0].vt.to_bits(), snap_before.to_bits(), "no-op set_yield");
+    }
+
+    #[test]
+    fn lazy_engine_reproduces_pause_resume_timings() {
+        struct PauseResume;
+        impl Policy for PauseResume {
+            fn name(&self) -> String {
+                "pr".into()
+            }
+            fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+                if j == 0 {
+                    sim.start_job(0, vec![0]);
+                    sim.set_yield(0, 1.0);
+                } else {
+                    sim.pause_job(0);
+                    sim.start_job(1, vec![0]);
+                    sim.set_yield(1, 1.0);
+                }
+            }
+            fn on_complete(&mut self, sim: &mut Sim, j: JobId) {
+                if j == 1 {
+                    sim.start_job(0, vec![0]);
+                    sim.set_yield(0, 1.0);
+                }
+            }
+        }
+        let t = trace(vec![
+            job(0, 0.0, 1, 1.0, 0.5, 1000.0),
+            job(1, 100.0, 1, 1.0, 0.5, 500.0),
+        ]);
+        let r = run_with(
+            &t,
+            &mut PauseResume,
+            SimConfig::default(),
+            Box::new(RustSolver),
+            EngineKind::Lazy,
+        );
+        // Identical timeline to the eager engines: penalty expiry is an
+        // event boundary, progress resumes at 900, completion at 1800.
+        assert!((r.jobs[1].completion.unwrap() - 600.0).abs() < 1e-6);
+        assert!(
+            (r.jobs[0].completion.unwrap() - 1800.0).abs() < 1e-6,
+            "completion {}",
+            r.jobs[0].completion.unwrap()
+        );
+        assert_eq!(r.preemptions, 1);
+        assert!((r.gb_moved - 4.0).abs() < 1e-9);
+        assert!((r.jobs[0].vt - 1000.0).abs() < 1e-6, "final vt materialized");
+    }
+
+    #[test]
+    fn lazy_engine_single_job_runs_to_completion() {
+        let t = trace(vec![job(0, 0.0, 1, 0.5, 0.1, 100.0)]);
+        let r = run_with(
+            &t,
+            &mut OneShot,
+            SimConfig::default(),
+            Box::new(RustSolver),
+            EngineKind::Lazy,
+        );
+        assert!(matches!(r.jobs[0].state, JobState::Done));
+        assert!((r.jobs[0].completion.unwrap() - 100.0).abs() < 1e-6);
+        assert!((r.max_stretch - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lazy_delta_mapping_applies_cache_hit_as_noop() {
+        // Re-applying the current mapping must not move, migrate, preempt
+        // or charge anything — the delta path's defining property.
+        let t = trace(vec![
+            job(0, 0.0, 1, 0.5, 0.2, 1000.0),
+            job(1, 0.0, 1, 0.5, 0.2, 1000.0),
+        ]);
+        let mut sim =
+            Sim::new_with(&t, SimConfig::default(), Box::new(RustSolver), EngineKind::Lazy);
+        sim.start_job(0, vec![0]);
+        sim.start_job(1, vec![1]);
+        let mapping = vec![(0, vec![0]), (1, vec![1])];
+        let (gb, mig, pre) = (sim.gb_moved, sim.migrations, sim.preemptions);
+        sim.apply_mapping(&mapping);
+        assert_eq!(sim.gb_moved.to_bits(), gb.to_bits());
+        assert_eq!(sim.migrations, mig);
+        assert_eq!(sim.preemptions, pre);
+        assert!(matches!(sim.jobs[0].state, JobState::Running));
+        // A real change still applies: swap job 1 to node 2.
+        sim.apply_mapping(&[(0, vec![0]), (1, vec![2])]);
+        assert_eq!(sim.migrations, 1);
+        assert_eq!(sim.jobs[1].placement, vec![2]);
     }
 
     #[test]

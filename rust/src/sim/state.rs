@@ -23,7 +23,11 @@ pub enum JobState {
 pub struct JobSim {
     pub spec: Job,
     pub state: JobState,
-    /// Virtual time: ∫ yield dt since release (§4.1).
+    /// Virtual time: ∫ yield dt since release (§4.1). Under the eager
+    /// engines this field is current at every event; under
+    /// `EngineKind::Lazy` it is a *snapshot* taken the last time the job's
+    /// yield or penalty changed, and the live value must be read through
+    /// `Sim::vt` (which folds in the accrual since the snapshot).
     pub vt: f64,
     /// Current yield (0 unless running).
     pub yield_now: f64,

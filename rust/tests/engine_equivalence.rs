@@ -4,6 +4,14 @@
 //! shape. This is the acceptance oracle for the engine rework (DESIGN.md
 //! §Engine internals) and the determinism contract the parallel experiment
 //! grid relies on.
+//!
+//! The lazy (constant-work) engine has a two-tier contract against the
+//! Indexed exact oracle: *discrete* outcomes — completion order,
+//! preemption/migration/interruption counts, per-job event counts — must be
+//! identical, while *continuous* metrics (stretch, utilization areas,
+//! bandwidth, per-job trajectories) must agree within 1e-6 relative error
+//! (lazy clocks materialize virtual time as one product per segment instead
+//! of a per-event running sum, so the floats differ at rounding level).
 
 use dfrs::alloc::RustSolver;
 use dfrs::scenario::Scenario;
@@ -81,10 +89,25 @@ fn assert_identical(ctx: &str, a: &SimResult, b: &SimResult) {
     }
 }
 
+// ----- Lazy-engine contract: discrete-exact, continuous within 1e-6 -----
+
+/// The lazy engine's acceptance contract against the exact (Indexed)
+/// oracle — one definition, `dfrs::sim::check_lazy_equivalence`, shared
+/// with `benches/sim_engine.rs`.
+fn assert_lazy_equivalent(ctx: &str, exact: &SimResult, lazy: &SimResult) {
+    if let Err(e) = dfrs::sim::check_lazy_equivalence(exact, lazy) {
+        panic!("{ctx}: {e}");
+    }
+}
+
+/// Three-engine check: Indexed ≡ Reference bit for bit, Lazy equivalent to
+/// Indexed under the discrete/tolerance contract.
 fn check(alg: &str, trace: &Trace, label: &str) {
     let indexed = run_engine(alg, trace, EngineKind::Indexed);
     let reference = run_engine(alg, trace, EngineKind::Reference);
     assert_identical(&format!("{label} / {alg}"), &indexed, &reference);
+    let lazy = run_engine(alg, trace, EngineKind::Lazy);
+    assert_lazy_equivalent(&format!("lazy {label} / {alg}"), &indexed, &lazy);
 }
 
 /// Every algorithm family of Table 1, plus the batch baselines.
@@ -159,6 +182,8 @@ fn check_scenario(alg: &str, trace: &Trace, scenario: &Scenario, label: &str) {
     let indexed = run_engine_scenario(alg, trace, EngineKind::Indexed, scenario);
     let reference = run_engine_scenario(alg, trace, EngineKind::Reference, scenario);
     assert_identical(&format!("{label} / {alg}"), &indexed, &reference);
+    let lazy = run_engine_scenario(alg, trace, EngineKind::Lazy, scenario);
+    assert_lazy_equivalent(&format!("lazy {label} / {alg}"), &indexed, &lazy);
 }
 
 /// Fraction `f` of the way through the trace's arrival span.
@@ -355,4 +380,147 @@ fn engines_agree_on_random_traces() {
         }
         Ok(())
     });
+}
+
+// ----- Lazy engine: boundary cases and randomized differentials ---------
+
+/// Drives the boundary scenario: job 0 is paused for job 1 and resumed on
+/// its completion (rescheduling penalty), job 2 runs untouched on another
+/// node and is sized so its completion lands exactly on job 0's
+/// `penalty_until` instant.
+struct PenaltyBoundary;
+impl dfrs::sched::Policy for PenaltyBoundary {
+    fn name(&self) -> String {
+        "penalty-boundary".into()
+    }
+    fn on_submit(&mut self, sim: &mut dfrs::sim::Sim, j: dfrs::sim::JobId) {
+        match j {
+            0 => {
+                sim.start_job(0, vec![0]);
+                sim.set_yield(0, 1.0);
+            }
+            1 => {
+                sim.pause_job(0);
+                sim.start_job(1, vec![0]);
+                sim.set_yield(1, 1.0);
+            }
+            _ => {
+                sim.start_job(2, vec![1]);
+                sim.set_yield(2, 1.0);
+            }
+        }
+    }
+    fn on_complete(&mut self, sim: &mut dfrs::sim::Sim, j: dfrs::sim::JobId) {
+        if j == 1 {
+            sim.start_job(0, vec![0]); // resume: penalty until now + 300
+            sim.set_yield(0, 1.0);
+        }
+    }
+}
+
+#[test]
+fn penalty_boundary_completion_is_identical_across_all_three_engines() {
+    // Timeline: job 0 runs 0..100 (vt 100), is paused for job 1
+    // (100..600), resumes at 600 with penalty_until = 900. Job 2 starts at
+    // 150 on node 1 with 750 s of work: its predicted completion lands
+    // EXACTLY on job 0's penalty_until instant (t = 900). The engines must
+    // coalesce the completion and the penalty expiry identically; job 0
+    // then progresses 900..1800.
+    let jobs = vec![
+        Job { id: 0, submit: 0.0, tasks: 1, cpu_need: 1.0, mem: 0.5, proc_time: 1000.0 },
+        Job { id: 1, submit: 100.0, tasks: 1, cpu_need: 1.0, mem: 0.5, proc_time: 500.0 },
+        Job { id: 2, submit: 150.0, tasks: 1, cpu_need: 1.0, mem: 0.5, proc_time: 750.0 },
+    ];
+    let trace = Trace { jobs, nodes: 2, cores_per_node: 4, node_mem_gb: 4.0 };
+    let run_one = |engine: EngineKind| {
+        let mut p = PenaltyBoundary;
+        run_with(&trace, &mut p, SimConfig::default(), Box::new(RustSolver), engine)
+    };
+    let indexed = run_one(EngineKind::Indexed);
+    let reference = run_one(EngineKind::Reference);
+    let lazy = run_one(EngineKind::Lazy);
+    assert_identical("penalty-boundary", &indexed, &reference);
+    assert_lazy_equivalent("penalty-boundary lazy", &indexed, &lazy);
+    for r in [&indexed, &lazy] {
+        assert!((r.jobs[2].completion.unwrap() - 900.0).abs() < 1e-6, "job 2 at the boundary");
+        assert!((r.jobs[1].completion.unwrap() - 600.0).abs() < 1e-6);
+        assert!((r.jobs[0].completion.unwrap() - 1800.0).abs() < 1e-6, "penalty then 900 s left");
+        assert_eq!(r.preemptions, 1);
+        assert_eq!(r.migrations, 0);
+    }
+}
+
+/// A small random platform-dynamics script over the trace's arrival span:
+/// failures with repair, drain windows, arrival bursts, and elastic
+/// shrink/grow legs.
+fn random_scenario(rng: &mut Rng, trace: &Trace) -> Scenario {
+    let mut s = Scenario::new("rand");
+    for _ in 0..(1 + rng.below(3)) {
+        let at = span_at(trace, rng.range(0.1, 0.7));
+        match rng.below(4) {
+            0 => {
+                let node = rng.below(trace.nodes as u64) as usize;
+                s = s.fail(node, at, Some(at + rng.range(200.0, 5_000.0)));
+            }
+            1 => {
+                let node = rng.below(trace.nodes as u64) as usize;
+                s = s.drain(node, at, Some(at + rng.range(200.0, 5_000.0)));
+            }
+            2 => {
+                s = s.burst(at, at + rng.range(100.0, 3_000.0), rng.range(1.5, 4.0));
+            }
+            _ => {
+                let k = 1 + rng.below(2) as usize;
+                s = s.shrink(k, at).grow(k, at + rng.range(300.0, 4_000.0));
+            }
+        }
+    }
+    s
+}
+
+#[test]
+fn randomized_scenario_sequences_keep_all_three_engines_equivalent() {
+    // Differential testing under platform dynamics: for random traces and
+    // random failure/drain/burst/elastic scripts, Reference ≡ Indexed bit
+    // for bit and Lazy ≡ Indexed under the discrete/tolerance contract.
+    forall(
+        700,
+        10,
+        |rng| {
+            let trace = random_trace(rng);
+            let scenario = random_scenario(rng, &trace);
+            (trace, scenario)
+        },
+        |(trace, scenario)| {
+            for alg in ["GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+                let indexed = run_engine_scenario(alg, trace, EngineKind::Indexed, scenario);
+                let reference = run_engine_scenario(alg, trace, EngineKind::Reference, scenario);
+                if indexed.max_stretch.to_bits() != reference.max_stretch.to_bits()
+                    || indexed.preemptions != reference.preemptions
+                    || indexed.interrupted_jobs != reference.interrupted_jobs
+                {
+                    return Err(format!("{alg}: indexed/reference diverged under scenario"));
+                }
+                let lazy = run_engine_scenario(alg, trace, EngineKind::Lazy, scenario);
+                // The shared contract; Err keeps forall's case diagnostics.
+                if let Err(e) = dfrs::sim::check_lazy_equivalence(&indexed, &lazy) {
+                    return Err(format!("{alg}: lazy contract violated: {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lazy_engine_repack_cache_transparency_holds() {
+    // The delta apply path is exactly where a cached mapping replay could
+    // diverge from a recomputed one; prove caching stays unobservable in
+    // the lazy engine too.
+    let trace = scale::scale_to_load(&generate(61, 80, &LublinParams::default()), 0.8);
+    for alg in MCB8_ALGS {
+        let cached = run_engine(alg, &trace, EngineKind::Lazy);
+        let uncached = run_engine_uncached(alg, &trace, EngineKind::Lazy);
+        assert_identical(&format!("lazy cache-off / {alg}"), &cached, &uncached);
+    }
 }
