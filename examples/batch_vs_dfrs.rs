@@ -28,10 +28,10 @@ const ALGS: &[&str] = &[
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let jobs = args.usize_or("jobs", 300);
-    let traces = args.usize_or("traces", 5);
-    let load = args.f64_or("load", 0.7);
-    let seed = args.u64_or("seed", 7);
+    let jobs = args.usize_or("jobs", 300)?;
+    let traces = args.usize_or("traces", 5)?;
+    let load = args.f64_or("load", 0.7)?;
+    let seed = args.u64_or("seed", 7)?;
 
     // Trace sets: scaled synthetic + HPC2N-like weekly segments.
     let synthetic: Vec<_> = (0..traces)

@@ -18,9 +18,9 @@ use dfrs::workload::scale::scale_to_load;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let smoke = args.flag("smoke");
-    let jobs = if smoke { 60 } else { args.usize_or("jobs", 200) };
-    let load = args.f64_or("load", 0.7);
-    let trace = scale_to_load(&generate(args.u64_or("seed", 13), jobs, &LublinParams::default()), load);
+    let jobs = if smoke { 60 } else { args.usize_or("jobs", 200)? };
+    let load = args.f64_or("load", 0.7)?;
+    let trace = scale_to_load(&generate(args.u64_or("seed", 13)?, jobs, &LublinParams::default()), load);
     println!(
         "workload: {} jobs on {} nodes, offered load {:.2}{}",
         trace.jobs.len(),

@@ -14,8 +14,8 @@ use dfrs::workload::scale::scale_to_load;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let trace = scale_to_load(
-        &generate(args.u64_or("seed", 11), args.usize_or("jobs", 250), &LublinParams::default()),
-        args.f64_or("load", 0.7),
+        &generate(args.u64_or("seed", 11)?, args.usize_or("jobs", 250)?, &LublinParams::default()),
+        args.f64_or("load", 0.7)?,
     );
     let alg = "GreedyPM */per/OPT=MIN/MINVT=600";
 

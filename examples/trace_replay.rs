@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         None => {
             // Self-generated stand-in (DESIGN.md §Substitutions): write SWF
             // bytes to disk and replay through the real loader.
-            let t = hpc2n::generate(args.u64_or("seed", 3), args.usize_or("jobs", 1500));
+            let t = hpc2n::generate(args.u64_or("seed", 3)?, args.usize_or("jobs", 1500)?);
             let p = std::env::temp_dir().join("dfrs_hpc2n_like.swf");
             std::fs::write(&p, swf::to_swf(&t))?;
             println!("no --swf given; generated HPC2N-like log at {}", p.display());

@@ -99,8 +99,8 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(argv);
     let quick = args.flag("quick");
-    let seed = args.u64_or("seed", 7);
-    let trace_jobs = if quick { 120 } else { args.usize_or("jobs", 1000) };
+    let seed = args.u64_or("seed", 7).unwrap();
+    let trace_jobs = if quick { 120 } else { args.usize_or("jobs", 1000).unwrap() };
     let iters = if quick { 1 } else { 20 };
     let warmup = if quick { 1 } else { 3 };
     let sizes: &[usize] = if quick { &[60] } else { &[102, 256, 512] };

@@ -53,8 +53,8 @@ fn bit_identical(a: &SimResult, b: &SimResult) -> bool {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(argv);
-    let jobs = if args.flag("quick") { 300 } else { args.usize_or("jobs", 1000) };
-    let seed = args.u64_or("seed", 7);
+    let jobs = if args.flag("quick") { 300 } else { args.usize_or("jobs", 1000).unwrap() };
+    let seed = args.u64_or("seed", 7).unwrap();
     let base = scale_to_load(&generate(seed, jobs, &LublinParams::default()), 0.7);
     let nodes = base.nodes;
     println!("== scenario-engine benchmark: indexed vs seed loop under platform dynamics ==");

@@ -53,9 +53,9 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let args = Args::parse(argv);
     let quick = args.flag("quick");
-    let jobs = if quick { 300 } else { args.usize_or("jobs", 1000) };
-    let big_jobs = args.usize_or("big-jobs", 10_000);
-    let seed = args.u64_or("seed", 7);
+    let jobs = if quick { 300 } else { args.usize_or("jobs", 1000).unwrap() };
+    let big_jobs = args.usize_or("big-jobs", 10_000).unwrap();
+    let seed = args.u64_or("seed", 7).unwrap();
     let base = generate(seed, jobs, &LublinParams::default());
     let nodes = base.nodes;
     println!("== engine benchmark: seed full-scan vs indexed calendar vs lazy clocks ==");

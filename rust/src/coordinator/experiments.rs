@@ -18,7 +18,8 @@ use crate::scenario;
 use crate::sched::registry::{
     best_algorithms, fig1_algorithms, make_policy, table2_algorithms, table3_algorithms,
 };
-use crate::sim::{run, run_scenario, EngineKind, SimConfig, SimResult};
+use crate::coordinator::grid::{self, FaultPolicy};
+use crate::sim::{run, run_guarded, run_scenario, EngineKind, RunOptions, SimConfig, SimResult};
 use crate::util::cli::Args;
 use crate::util::stats::Summary;
 use crate::workload::{hpc2n, lublin, scale, swf, Trace};
@@ -41,19 +42,19 @@ pub struct Scale {
 }
 
 impl Scale {
-    pub fn from_args(args: &Args) -> Scale {
+    pub fn from_args(args: &Args) -> Result<Scale> {
         let full = args.flag("full");
-        Scale {
-            traces: args.usize_or("traces", if full { 100 } else { 5 }),
-            jobs: args.usize_or("jobs", if full { 1000 } else { 200 }),
-            seed: args.u64_or("seed", 42),
+        Ok(Scale {
+            traces: args.usize_or("traces", if full { 100 } else { 5 })?,
+            jobs: args.usize_or("jobs", if full { 1000 } else { 200 })?,
+            seed: args.u64_or("seed", 42)?,
             loads: if full {
                 (1..=9).map(|i| i as f64 / 10.0).collect()
             } else {
                 vec![0.1, 0.3, 0.5, 0.7, 0.9]
             },
-            period: args.f64_or("period", 600.0),
-        }
+            period: args.f64_or("period", 600.0)?,
+        })
     }
 }
 
@@ -125,12 +126,27 @@ fn run_alg(name: &str, trace: &Trace, period: f64) -> Result<SimResult> {
 
 /// Run `f` over `items` on the rayon pool, preserving input order in the
 /// output (the first error, if any, aborts the grid). Every cell builds its
-/// own policy and solver, so cells share nothing mutable.
+/// own policy and solver, so cells share nothing mutable. Each cell runs
+/// under `catch_unwind`, so a panicking cell surfaces as an error naming the
+/// cell instead of tearing down the whole process; harnesses that also
+/// quarantine and checkpoint cells use [`grid::run_cells`] instead.
 fn par_grid<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(usize, &T) -> Result<R> + Sync + Send,
 ) -> Result<Vec<R>> {
-    items.par_iter().enumerate().map(|(i, t)| f(i, t)).collect()
+    items
+        .par_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, t))) {
+                Ok(r) => r,
+                Err(payload) => Err(anyhow::anyhow!(
+                    "grid cell {i} panicked: {}",
+                    grid::panic_message(payload)
+                )),
+            }
+        })
+        .collect()
 }
 
 /// The (a, k) cross product, row-major: grid cell `a * traces + k`.
@@ -169,22 +185,32 @@ fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
 
 pub fn cmd_simulate(args: &Args) -> Result<()> {
     let alg = args.str_or("alg", "GreedyPM */per/OPT=MIN/MINVT=600");
-    let seed = args.u64_or("seed", 1);
-    let jobs = args.usize_or("jobs", 400);
-    let period = args.f64_or("period", 600.0);
+    let seed = args.u64_or("seed", 1)?;
+    let jobs = args.usize_or("jobs", 400)?;
+    let period = args.f64_or("period", 600.0)?;
     let engine = parse_engine(&args.str_or("engine", "indexed"))?;
     let trace = load_workload(args, seed, jobs)?;
     let trace = match args.get("load") {
         Some(l) => scale::scale_to_load(&trace, l.parse()?),
         None => trace,
     };
+    // Pre-flight: reject workloads that no packing can ever place, with a
+    // typed error instead of a mid-run panic.
+    if let Some(e) = crate::packing::trace_infeasibility(&trace) {
+        return Err(e.into());
+    }
     let scn_name = args.str_or("scenario", "none");
     let scn = scenario::load(&scn_name, &trace).map_err(|e| anyhow::anyhow!(e))?;
     scn.validate(trace.nodes).map_err(|e| anyhow::anyhow!("scenario {scn_name:?}: {e}"))?;
     let mut policy = make_policy(&alg, period)?;
     let solver = crate::runtime::solver_by_name(&args.str_or("solver", "auto"))?;
+    let opts = RunOptions {
+        audit: args.flag("audit"),
+        trace_out: args.get("trace-out").map(PathBuf::from),
+        ..RunOptions::default()
+    };
     let t0 = std::time::Instant::now();
-    let r = run_scenario(&trace, policy.as_mut(), SimConfig::default(), solver, engine, &scn);
+    let r = run_guarded(&trace, policy.as_mut(), SimConfig::default(), solver, engine, &scn, &opts)?;
     let wall = t0.elapsed().as_secs_f64();
     println!("algorithm          : {alg}");
     println!("jobs               : {}", trace.jobs.len());
@@ -208,6 +234,12 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     println!("bandwidth          : {:.3} GB/s", r.gb_per_sec);
     println!("makespan           : {:.0} s", r.makespan);
     println!("sim wall time      : {:.2} s", wall);
+    if opts.audit {
+        println!("audit              : every invariant held after every event");
+    }
+    if let Some(p) = &opts.trace_out {
+        println!("trace recorded     : {} (verify with `dfrs replay`)", p.display());
+    }
     if args.flag("bound") {
         let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
         println!("offline bound      : {b:.2}");
@@ -231,7 +263,7 @@ fn load_workload(args: &Args, seed: u64, jobs: usize) -> Result<Trace> {
 // ------------------------------------------------------------------- bound
 
 pub fn cmd_bound(args: &Args) -> Result<()> {
-    let trace = load_workload(args, args.u64_or("seed", 1), args.usize_or("jobs", 400))?;
+    let trace = load_workload(args, args.u64_or("seed", 1)?, args.usize_or("jobs", 400)?)?;
     let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
     println!("jobs={} nodes={} bound={b:.3}", trace.jobs.len(), trace.nodes);
     Ok(())
@@ -240,7 +272,7 @@ pub fn cmd_bound(args: &Args) -> Result<()> {
 // --------------------------------------------------------------------- gen
 
 pub fn cmd_gen(args: &Args) -> Result<()> {
-    let trace = load_workload(args, args.u64_or("seed", 1), args.usize_or("jobs", 400))?;
+    let trace = load_workload(args, args.u64_or("seed", 1)?, args.usize_or("jobs", 400)?)?;
     let text = swf::to_swf(&trace);
     match args.get("out") {
         Some(p) => std::fs::write(p, text)?,
@@ -254,8 +286,28 @@ pub fn cmd_gen(args: &Args) -> Result<()> {
 /// Dispatch a bench target, installing a bounded rayon pool when
 /// `--workers N` is given (`--workers 1` forces a serial grid; the default
 /// uses every core). Results are identical either way.
+/// Re-execute a trace recorded with `--trace-out` and diff it against the
+/// recording; any divergence (step log or result digest) is a hard error.
+pub fn cmd_replay(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: dfrs replay FILE (a trace recorded with --trace-out)")?;
+    let report = crate::sim::record::replay_file(Path::new(path))?;
+    match report.divergence {
+        None => {
+            println!(
+                "replay of {path}: {} steps re-executed, result digest matches bit-for-bit",
+                report.steps
+            );
+            Ok(())
+        }
+        Some(d) => anyhow::bail!("replay of {path} diverged: {d}"),
+    }
+}
+
 pub fn cmd_bench(args: &Args) -> Result<()> {
-    let workers = args.usize_or("workers", 0);
+    let workers = args.usize_or("workers", 0)?;
     if workers > 0 {
         let pool = rayon::ThreadPoolBuilder::new()
             .num_threads(workers)
@@ -293,11 +345,17 @@ fn cmd_bench_target(args: &Args) -> Result<()> {
 }
 
 /// Table 2: degradation from bound, per algorithm, over the 3 trace sets.
+/// The flagship grid runs fault-tolerantly: cells are crash-isolated and
+/// retried, failures become `status=failed` CSV rows, and `--checkpoint` /
+/// `--resume` make interrupted campaigns resumable byte-identically.
 pub fn bench_table2(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
+    let fp = FaultPolicy::from_args(args)?;
+    grid::prepare_checkpoint(&fp)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let mut csv = Vec::new();
+    let mut all_outcomes = Vec::new();
     for (set_name, traces) in [
         ("real-world", &sets.real_world),
         ("unscaled-synthetic", &sets.unscaled),
@@ -309,18 +367,29 @@ pub fn bench_table2(args: &Args) -> Result<()> {
         let bounds = BoundCache::new();
         precompute_bounds(&bounds, traces)?;
         let algs = table2_algorithms();
-        let grid = cross(algs.len(), traces.len());
-        let degs: Vec<f64> = par_grid(&grid, |_, &(a, k)| {
+        let cells = cross(algs.len(), traces.len());
+        let keys: Vec<String> =
+            cells.iter().map(|&(a, k)| format!("table2/{set_name}/{}/{k}", algs[a])).collect();
+        let outcomes = grid::run_cells(&keys, &fp, |i| {
+            let (a, k) = cells[i];
             let r = run_alg(algs[a], &traces[k], s.period)?;
-            Ok(r.max_stretch / bounds.get(k, &traces[k]).max(1.0))
+            Ok(vec![r.max_stretch / bounds.get(k, &traces[k]).max(1.0)])
         })?;
         let mut rows = Vec::new();
         for (a, alg) in algs.iter().enumerate() {
             let mut row = TableRow::new(*alg);
             for k in 0..traces.len() {
-                let d = degs[a * traces.len() + k];
-                row.summary.add(d);
-                csv.push(format!("{set_name},{alg},{k},{d:.4}"));
+                let o = &outcomes[a * traces.len() + k];
+                match (o.error.as_deref(), o.values.first()) {
+                    (None, Some(&d)) => {
+                        row.summary.add(d);
+                        csv.push(format!("{set_name},{alg},{k},{d:.4},ok"));
+                    }
+                    (err, _) => {
+                        let msg = grid::sanitize(err.unwrap_or("no value recorded"));
+                        csv.push(format!("{set_name},{alg},{k},,failed: {msg}"));
+                    }
+                }
             }
             rows.push(row);
         }
@@ -328,13 +397,15 @@ pub fn bench_table2(args: &Args) -> Result<()> {
             &format!("Table 2 — degradation from bound ({set_name}, {} traces)", traces.len()),
             &rows,
         );
+        all_outcomes.extend(outcomes);
     }
-    write_csv(&dir.join("table2.csv"), "set,algorithm,trace,degradation", &csv)
+    grid::report_failures(&all_outcomes);
+    write_csv(&dir.join("table2.csv"), "set,algorithm,trace,degradation,status", &csv)
 }
 
 /// Table 3: preemption/migration costs on scaled traces with load ≥ 0.7.
 pub fn bench_table3(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
     let sets = build_trace_sets(&s);
     let heavy: Vec<&Trace> =
         sets.scaled.iter().filter(|(l, _)| *l >= 0.7).map(|(_, t)| t).collect();
@@ -411,7 +482,7 @@ pub fn bench_table3(args: &Args) -> Result<()> {
 
 /// Table 4: average normalized underutilization, EASY vs the two best.
 pub fn bench_table4(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let scaled: Vec<Trace> = sets.scaled.iter().map(|(_, t)| t.clone()).collect();
@@ -440,7 +511,7 @@ pub fn bench_table4(args: &Args) -> Result<()> {
 
 /// Figure 1: average degradation vs load for selected algorithms.
 pub fn bench_fig1(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let mut csv = Vec::new();
@@ -480,7 +551,7 @@ pub fn bench_fig1(args: &Args) -> Result<()> {
 
 /// Figure 2: demand/utilization time series for one trace (illustration).
 pub fn bench_fig2(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
     let dir = out_dir(args);
     let t = lublin::generate(s.seed, s.jobs, &lublin::LublinParams::default());
     let t = scale::scale_to_load(&t, 0.7);
@@ -499,8 +570,8 @@ pub fn bench_fig2(args: &Args) -> Result<()> {
 
 /// Figures 3/5-7: normalized underutilization vs period.
 pub fn bench_fig3(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
-    let max_period = args.f64_or("max-period", 12_000.0);
+    let s = Scale::from_args(args)?;
+    let max_period = args.f64_or("max-period", 12_000.0)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let periods = period_sweep(max_period);
@@ -534,8 +605,8 @@ pub fn bench_fig3(args: &Args) -> Result<()> {
 
 /// Figures 4/8: max-stretch degradation vs period.
 pub fn bench_fig4(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
-    let max_period = args.f64_or("max-period", 12_000.0);
+    let s = Scale::from_args(args)?;
+    let max_period = args.f64_or("max-period", 12_000.0)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let periods = period_sweep(max_period);
@@ -564,8 +635,8 @@ pub fn bench_fig4(args: &Args) -> Result<()> {
 
 /// Figure 9: bandwidth vs period on heavy-load scaled traces.
 pub fn bench_fig9(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
-    let max_period = args.f64_or("max-period", 12_000.0);
+    let s = Scale::from_args(args)?;
+    let max_period = args.f64_or("max-period", 12_000.0)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let heavy: Vec<&Trace> =
@@ -607,9 +678,11 @@ fn scenario_grid_algorithms() -> Vec<&'static str> {
 /// the output is byte-identical at any `--workers` count (DESIGN.md
 /// §Determinism under rayon).
 pub fn bench_scenarios(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
+    let fp = FaultPolicy::from_args(args)?;
+    grid::prepare_checkpoint(&fp)?;
     let dir = out_dir(args);
-    let load = args.f64_or("load", 0.7);
+    let load = args.f64_or("load", 0.7)?;
     let traces: Vec<Trace> = (0..s.traces)
         .map(|i| {
             scale::scale_to_load(
@@ -631,24 +704,32 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
         "{:<40} {:<10} {:>11} {:>11} {:>9} {:>9} {:>10}",
         "Algorithm", "scenario", "max-stretch", "avg-stretch", "interrupt", "pmtn/job", "avail-util"
     );
-    // Flattened alg × scenario × trace grid, row-major, in parallel.
+    // Flattened alg × scenario × trace grid, row-major, in parallel. Cells
+    // run fault-tolerantly (crash isolation + retry + checkpoint): a failed
+    // cell poisons only its (algorithm, scenario) row, not the campaign.
     let (n_algs, n_scn, n_tr) = (algs.len(), scenario_names.len(), traces.len());
-    let grid: Vec<(usize, usize, usize)> = (0..n_algs)
+    let flat: Vec<(usize, usize, usize)> = (0..n_algs)
         .flat_map(|a| (0..n_scn).flat_map(move |sc| (0..n_tr).map(move |k| (a, sc, k))))
         .collect();
-    let cells: Vec<[f64; 5]> = par_grid(&grid, |_, &(a, sc, k)| {
+    let keys: Vec<String> = flat
+        .iter()
+        .map(|&(a, sc, k)| format!("scenarios/{}/{}/{k}", algs[a], scenario_names[sc]))
+        .collect();
+    let outcomes = grid::run_cells(&keys, &fp, |i| {
+        let (a, sc, k) = flat[i];
         let trace = &traces[k];
         let scn = scenario::builtin(scenario_names[sc], trace).map_err(|e| anyhow::anyhow!(e))?;
         let mut policy = make_policy(algs[a], s.period)?;
-        let r = run_scenario(
+        let r = run_guarded(
             trace,
             policy.as_mut(),
             SimConfig::default(),
             Box::new(crate::alloc::RustSolver),
             EngineKind::Indexed,
             &scn,
-        );
-        Ok([
+            &RunOptions::default(),
+        )?;
+        Ok(vec![
             r.max_stretch,
             r.avg_stretch,
             r.interrupted_jobs as f64,
@@ -667,11 +748,22 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
                 Summary::new(),
                 Summary::new(),
             ];
+            let mut row_error: Option<&str> = None;
             for k in 0..per_scn {
-                let cell = &cells[a * per_alg + sc * per_scn + k];
-                for (c, &v) in cols.iter_mut().zip(cell.iter()) {
-                    c.add(v);
+                let o = &outcomes[a * per_alg + sc * per_scn + k];
+                match o.error.as_deref() {
+                    None => {
+                        for (c, &v) in cols.iter_mut().zip(o.values.iter()) {
+                            c.add(v);
+                        }
+                    }
+                    Some(e) => row_error = row_error.or(Some(e)),
                 }
+            }
+            if let Some(e) = row_error {
+                println!("{:<40} {:<10} {:>11}", alg, scn_name, "FAILED");
+                csv.push(format!("{alg},{scn_name},,,,,,failed: {}", grid::sanitize(e)));
+                continue;
             }
             println!(
                 "{:<40} {:<10} {:>11.1} {:>11.2} {:>9.1} {:>9.2} {:>10.3}",
@@ -684,7 +776,7 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
                 cols[4].mean()
             );
             csv.push(format!(
-                "{alg},{scn_name},{:.4},{:.4},{:.2},{:.4},{:.4}",
+                "{alg},{scn_name},{:.4},{:.4},{:.2},{:.4},{:.4},ok",
                 cols[0].mean(),
                 cols[1].mean(),
                 cols[2].mean(),
@@ -693,9 +785,10 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
             ));
         }
     }
+    grid::report_failures(&outcomes);
     write_csv(
         &dir.join("scenarios.csv"),
-        "algorithm,scenario,max_stretch,avg_stretch,interrupted,pmtn_job,avail_util",
+        "algorithm,scenario,max_stretch,avg_stretch,interrupted,pmtn_job,avail_util,status",
         &csv,
     )
 }
@@ -706,7 +799,7 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
 /// (b) §4.3 list-ordering key — the paper's max(cpu, mem) vs Leinberger's
 ///     sum, compared by achieved packing yield on random live states.
 pub fn bench_ablation(args: &Args) -> Result<()> {
-    let s = Scale::from_args(args);
+    let s = Scale::from_args(args)?;
     let sets = build_trace_sets(&s);
     let dir = out_dir(args);
     let mut csv = Vec::new();

@@ -1,0 +1,358 @@
+//! Crash-isolated, resumable grid execution.
+//!
+//! Every experiment-grid cell runs under `catch_unwind` with a configurable
+//! retry count; a cell that keeps failing is quarantined as a
+//! `status=failed` CSV row instead of killing the whole campaign. With
+//! `--checkpoint PATH` each completed cell is appended to a JSON-lines file
+//! and fsynced, so `--resume` skips finished cells and reproduces the
+//! uninterrupted run's CSV byte-identically (cell values are stored as
+//! IEEE-754 bit patterns). Results come back in input order regardless of
+//! worker count, preserving the grid's determinism contract
+//! (DESIGN.md §Determinism under rayon).
+
+use crate::error::DfrsError;
+use crate::util::cli::Args;
+use crate::util::jsonl::{self, fmt_bits, parse_bits};
+use anyhow::{bail, Context, Result};
+use rayon::prelude::*;
+use std::collections::HashMap;
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Failure handling for one grid campaign (`--checkpoint`, `--resume`,
+/// `--retries`).
+#[derive(Debug, Clone)]
+pub struct FaultPolicy {
+    /// Extra attempts after the first failure (so `retries + 1` attempts
+    /// total per cell).
+    pub retries: u32,
+    /// JSON-lines checkpoint file, one fsynced record per completed cell.
+    pub checkpoint: Option<PathBuf>,
+    /// Skip cells already present in the checkpoint file.
+    pub resume: bool,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy { retries: 1, checkpoint: None, resume: false }
+    }
+}
+
+impl FaultPolicy {
+    pub fn from_args(args: &Args) -> Result<FaultPolicy> {
+        let fp = FaultPolicy {
+            retries: args.u64_or("retries", 1)? as u32,
+            checkpoint: args.get("checkpoint").map(PathBuf::from),
+            resume: args.flag("resume"),
+        };
+        if fp.resume && fp.checkpoint.is_none() {
+            bail!("--resume requires --checkpoint PATH");
+        }
+        Ok(fp)
+    }
+}
+
+/// Outcome of one grid cell.
+#[derive(Debug, Clone)]
+pub struct CellOutcome {
+    /// Stable cell key (also the checkpoint record key).
+    pub key: String,
+    /// Metric values on success, empty on failure.
+    pub values: Vec<f64>,
+    /// Error string of the last attempt, `None` on success.
+    pub error: Option<String>,
+    /// Attempts spent this run (0 = restored from the checkpoint).
+    pub attempts: u32,
+}
+
+impl CellOutcome {
+    pub fn status(&self) -> &'static str {
+        if self.error.is_none() {
+            "ok"
+        } else {
+            "failed"
+        }
+    }
+}
+
+/// Truncate the checkpoint file at campaign start unless resuming. Call
+/// once per campaign (a campaign may invoke [`run_cells`] several times —
+/// e.g. once per trace set — and each invocation appends).
+pub fn prepare_checkpoint(fp: &FaultPolicy) -> Result<()> {
+    if let Some(path) = &fp.checkpoint {
+        if !fp.resume {
+            std::fs::File::create(path)
+                .with_context(|| format!("cannot create checkpoint {}", path.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Parse a checkpoint file into `key -> values`. The writer fsyncs after
+/// every record, so only the *last* line can be torn (a crash mid-append);
+/// a torn last line is skipped with a warning, a malformed earlier line is
+/// a hard error.
+fn load_checkpoint(path: &Path) -> Result<HashMap<String, Vec<f64>>> {
+    let mut done = HashMap::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(done),
+        Err(e) => return Err(e).with_context(|| format!("cannot read checkpoint {}", path.display())),
+    };
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    for (i, line) in lines.iter().enumerate() {
+        let parsed = jsonl::parse_obj(line).and_then(|map| {
+            let key = map.get("key").cloned().ok_or("missing key field")?;
+            let raw = map.get("values").map(|s| s.as_str()).ok_or("missing values field")?;
+            let mut values = Vec::new();
+            if !raw.is_empty() {
+                for part in raw.split(';') {
+                    values.push(parse_bits(part)?);
+                }
+            }
+            Ok((key, values))
+        });
+        match parsed {
+            Ok((key, values)) => {
+                done.insert(key, values);
+            }
+            Err(e) if i + 1 == lines.len() => {
+                eprintln!(
+                    "warning: checkpoint {}: skipping torn final record ({e})",
+                    path.display()
+                );
+            }
+            Err(e) => bail!("corrupt checkpoint {} at record {}: {e}", path.display(), i + 1),
+        }
+    }
+    Ok(done)
+}
+
+/// Render a panic payload as a message string.
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Flatten an error string so it stays inside one CSV cell.
+pub fn sanitize(msg: &str) -> String {
+    msg.chars().map(|c| if c == '\n' || c == '\r' || c == ',' { ' ' } else { c }).collect()
+}
+
+/// Run every cell of a grid fault-tolerantly and in parallel, returning
+/// outcomes in input order (determinism contract). `f(i)` computes cell
+/// `keys[i]`; panics are caught, failures retried `fp.retries` times, and
+/// completed cells are checkpointed (and skipped on resume). Failed cells
+/// are *not* checkpointed, so a resumed campaign retries exactly them.
+pub fn run_cells<F>(keys: &[String], fp: &FaultPolicy, f: F) -> Result<Vec<CellOutcome>>
+where
+    F: Fn(usize) -> Result<Vec<f64>> + Sync + Send,
+{
+    let done: HashMap<String, Vec<f64>> = match (&fp.checkpoint, fp.resume) {
+        (Some(path), true) => load_checkpoint(path)?,
+        _ => HashMap::new(),
+    };
+    let writer: Option<Mutex<std::fs::File>> = match &fp.checkpoint {
+        Some(path) => Some(Mutex::new(
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("cannot open checkpoint {}", path.display()))?,
+        )),
+        None => None,
+    };
+    let write_error: Mutex<Option<String>> = Mutex::new(None);
+
+    let outcomes: Vec<CellOutcome> = keys
+        .par_iter()
+        .enumerate()
+        .map(|(i, key)| {
+            if let Some(values) = done.get(key) {
+                return CellOutcome {
+                    key: key.clone(),
+                    values: values.clone(),
+                    error: None,
+                    attempts: 0,
+                };
+            }
+            let mut last_err = String::new();
+            for attempt in 1..=fp.retries + 1 {
+                let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                match result {
+                    Ok(Ok(values)) => {
+                        if let Some(w) = &writer {
+                            let encoded = values
+                                .iter()
+                                .map(|v| fmt_bits(*v))
+                                .collect::<Vec<_>>()
+                                .join(";");
+                            let line = jsonl::write_obj(&[
+                                ("key", key.clone()),
+                                ("values", encoded),
+                            ]);
+                            let mut file = w.lock().unwrap();
+                            let io = file
+                                .write_all(format!("{line}\n").as_bytes())
+                                .and_then(|_| file.sync_data());
+                            if let Err(e) = io {
+                                let mut slot = write_error.lock().unwrap();
+                                slot.get_or_insert_with(|| format!("checkpoint write failed: {e}"));
+                            }
+                        }
+                        return CellOutcome {
+                            key: key.clone(),
+                            values,
+                            error: None,
+                            attempts: attempt,
+                        };
+                    }
+                    Ok(Err(e)) => last_err = format!("{e:#}"),
+                    Err(payload) => last_err = format!("panic: {}", panic_message(payload)),
+                }
+            }
+            CellOutcome {
+                key: key.clone(),
+                values: Vec::new(),
+                error: Some(last_err),
+                attempts: fp.retries + 1,
+            }
+        })
+        .collect();
+
+    if let Some(e) = write_error.into_inner().unwrap() {
+        bail!("{e}");
+    }
+    Ok(outcomes)
+}
+
+/// Print one line per failed cell plus a summary; returns the failure
+/// count (campaigns exit 0 with a nonzero-failure summary so partial
+/// results are still written).
+pub fn report_failures(outcomes: &[CellOutcome]) -> usize {
+    let failed: Vec<&CellOutcome> = outcomes.iter().filter(|o| o.error.is_some()).collect();
+    for o in &failed {
+        eprintln!(
+            "cell {} failed after {} attempt(s): {}",
+            o.key,
+            o.attempts,
+            o.error.as_deref().unwrap_or("")
+        );
+    }
+    if !failed.is_empty() {
+        eprintln!(
+            "grid finished with {}/{} failed cell(s); failed rows are quarantined as status=failed",
+            failed.len(),
+            outcomes.len()
+        );
+    }
+    failed.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("t/cell-{i}")).collect()
+    }
+
+    #[test]
+    fn panicking_cell_is_quarantined_not_fatal() {
+        let fp = FaultPolicy { retries: 1, checkpoint: None, resume: false };
+        let out = run_cells(&keys(3), &fp, |i| {
+            if i == 1 {
+                panic!("deliberate test panic");
+            }
+            Ok(vec![i as f64])
+        })
+        .unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].status(), "ok");
+        assert_eq!(out[1].status(), "failed");
+        assert_eq!(out[2].status(), "ok");
+        assert!(out[1].error.as_deref().unwrap().contains("deliberate test panic"));
+        assert_eq!(out[1].attempts, 2, "default retry gives two attempts");
+        assert_eq!(report_failures(&out), 1);
+    }
+
+    #[test]
+    fn error_cells_are_retried_and_reported() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let calls = AtomicU32::new(0);
+        let fp = FaultPolicy { retries: 2, checkpoint: None, resume: false };
+        let out = run_cells(&keys(1), &fp, |_| {
+            // Succeed only on the third attempt.
+            if calls.fetch_add(1, Ordering::SeqCst) < 2 {
+                bail!("transient");
+            }
+            Ok(vec![9.0])
+        })
+        .unwrap();
+        assert_eq!(out[0].status(), "ok");
+        assert_eq!(out[0].attempts, 3);
+        assert_eq!(out[0].values, vec![9.0]);
+    }
+
+    #[test]
+    fn checkpoint_resume_skips_done_cells() {
+        let path = std::env::temp_dir().join(format!("dfrs-ckpt-{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let fp = FaultPolicy { retries: 0, checkpoint: Some(path.clone()), resume: false };
+        prepare_checkpoint(&fp).unwrap();
+        // First run: cell 1 fails, cells 0 and 2 are checkpointed.
+        let out = run_cells(&keys(3), &fp, |i| {
+            if i == 1 {
+                bail!("first run failure");
+            }
+            Ok(vec![i as f64 * 2.0])
+        })
+        .unwrap();
+        assert_eq!(out.iter().filter(|o| o.error.is_some()).count(), 1);
+        // Resume: a healthy function; only cell 1 actually executes.
+        let fp2 = FaultPolicy { resume: true, ..fp.clone() };
+        let out2 = run_cells(&keys(3), &fp2, |i| Ok(vec![i as f64 * 2.0])).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(out2.iter().all(|o| o.error.is_none()));
+        assert_eq!(out2[0].attempts, 0, "restored from checkpoint");
+        assert_eq!(out2[2].attempts, 0, "restored from checkpoint");
+        assert_eq!(out2[1].attempts, 1, "failed cell re-ran");
+        for (i, o) in out2.iter().enumerate() {
+            assert_eq!(o.values, vec![i as f64 * 2.0]);
+        }
+    }
+
+    #[test]
+    fn torn_final_checkpoint_line_is_skipped() {
+        let path = std::env::temp_dir().join(format!("dfrs-torn-ckpt-{}.jsonl", std::process::id()));
+        let good = jsonl::write_obj(&[
+            ("key", "a".to_string()),
+            ("values", fmt_bits(1.0)),
+        ]);
+        std::fs::write(&path, format!("{good}\n{{\"key\":\"b\",\"val")).unwrap();
+        let done = load_checkpoint(&path).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done["a"], vec![1.0]);
+        // The same torn line *before* a valid record is corruption.
+        std::fs::write(&path, format!("{{\"key\":\"b\",\"val\n{good}\n")).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_requires_checkpoint() {
+        let args = Args::parse(vec!["bench", "scenarios", "--resume"]);
+        assert!(FaultPolicy::from_args(&args).is_err());
+        let args = Args::parse(vec!["bench", "--checkpoint", "x.jsonl", "--resume", "--retries", "3"]);
+        let fp = FaultPolicy::from_args(&args).unwrap();
+        assert!(fp.resume);
+        assert_eq!(fp.retries, 3);
+    }
+}

@@ -5,6 +5,7 @@
 //! index and EXPERIMENTS.md for recorded results.
 
 pub mod experiments;
+pub mod grid;
 
 use crate::util::cli::Args;
 use anyhow::Result;
@@ -36,6 +37,10 @@ COMMANDS
                                     diurnal | elastic | chaos) or a path to
                                     a scenario spec file (default none)
                   --bound           also compute the offline bound
+                  --audit           check engine invariants after every
+                                    event; abort on the first violation
+                  --trace-out PATH  record a replayable event trace
+                                    (JSON lines; see `dfrs replay`)
   bench TARGET  Regenerate a paper table/figure, or run the scenario grid:
                   table2 | table3 | table4 | fig1 | fig2 | fig3 | fig4 |
                   fig9 | ablation | scenarios | all
@@ -51,6 +56,17 @@ COMMANDS
                   --full       paper-scale run (100 traces x 1000 jobs)
                   --workers N  grid workers (default: all cores; 1 = serial;
                                results are identical at any worker count)
+                  --checkpoint PATH  JSON-lines checkpoint, one fsynced
+                               record per completed grid cell
+                  --resume     skip cells already in --checkpoint PATH
+                               (the merged CSV is byte-identical to an
+                               uninterrupted run)
+                  --retries N  extra attempts per failed cell (default 1);
+                               cells that keep failing become status=failed
+                               CSV rows instead of killing the run
+  replay FILE   Re-execute a trace recorded with --trace-out and diff the
+                replayed run against the recording (exit nonzero on any
+                divergence)
   bound         Offline max-stretch lower bound for a generated trace
                   --jobs N --seed S --workload KIND --swf PATH
   gen           Generate a trace and write SWF to stdout or --out FILE
@@ -74,14 +90,18 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
         "simulate" => (
             &[
                 "alg", "workload", "swf", "jobs", "load", "seed", "period", "solver", "engine",
-                "scenario",
+                "scenario", "trace-out",
             ],
-            &["bound"],
+            &["bound", "audit"],
         ),
         "bench" => (
-            &["traces", "jobs", "seed", "out", "period", "load", "max-period", "workers"],
-            &["full"],
+            &[
+                "traces", "jobs", "seed", "out", "period", "load", "max-period", "workers",
+                "checkpoint", "retries",
+            ],
+            &["full", "resume"],
         ),
+        "replay" => (&[], &[]),
         "bound" => (&["jobs", "seed", "workload", "swf"], &[]),
         "gen" => (&["jobs", "seed", "workload", "swf", "out"], &[]),
         "list-algs" => (&[], &[]),
@@ -98,6 +118,7 @@ pub fn run_cli(args: Args) -> Result<()> {
     match cmd {
         "simulate" => experiments::cmd_simulate(&args),
         "bench" => experiments::cmd_bench(&args),
+        "replay" => experiments::cmd_replay(&args),
         "bound" => experiments::cmd_bound(&args),
         "gen" => experiments::cmd_gen(&args),
         "list-algs" => {
@@ -137,7 +158,18 @@ mod tests {
 
     #[test]
     fn usage_documents_the_new_flags() {
-        for needle in ["--engine", "--workers", "--scenario", "scenarios"] {
+        for needle in [
+            "--engine",
+            "--workers",
+            "--scenario",
+            "scenarios",
+            "--audit",
+            "--trace-out",
+            "--checkpoint",
+            "--resume",
+            "--retries",
+            "replay",
+        ] {
             assert!(USAGE.contains(needle), "USAGE must document {needle}");
         }
     }

@@ -1,0 +1,189 @@
+//! Typed error taxonomy for the whole crate.
+//!
+//! Every input- or state-dependent failure path (workload parsing, scenario
+//! specs, packing feasibility, simulation watchdogs, CLI arguments, replay)
+//! surfaces a [`DfrsError`] variant instead of panicking. Internal-invariant
+//! violations still panic, but with context messages. The type implements
+//! `std::error::Error + Send + Sync`, so it threads through `anyhow` call
+//! sites with `?` unchanged.
+
+use std::fmt;
+
+/// Lightweight snapshot of simulator progress, attached to watchdog errors
+/// so a diverging or over-budget run still reports how far it got.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimSnapshot {
+    /// Virtual time at the moment the watchdog tripped.
+    pub now: f64,
+    /// Events processed so far.
+    pub events: u64,
+    /// Wall-clock seconds elapsed in the run loop.
+    pub wall_secs: f64,
+    /// Jobs that reached `Done`.
+    pub completed: usize,
+    /// Jobs in the trace.
+    pub total_jobs: usize,
+    /// Jobs currently running / paused / submitted-but-unstarted.
+    pub running: usize,
+    pub paused: usize,
+    pub pending: usize,
+    /// Partial metric accumulators (mirror `SimResult` counterparts).
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub interrupted_jobs: u64,
+    pub gb_moved: f64,
+    pub underutil_area: f64,
+}
+
+impl fmt::Display for SimSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "t={:.3} events={} wall={:.2}s jobs {}/{} done ({} running, {} paused, {} pending)",
+            self.now,
+            self.events,
+            self.wall_secs,
+            self.completed,
+            self.total_jobs,
+            self.running,
+            self.paused,
+            self.pending
+        )
+    }
+}
+
+/// Crate-wide error type. Variants carry enough structure for callers to
+/// quarantine, retry, or report the failure without string matching.
+#[derive(Debug, Clone)]
+pub enum DfrsError {
+    /// A malformed SWF workload line (strict parser).
+    WorkloadParse {
+        line_no: usize,
+        field: &'static str,
+        raw: String,
+    },
+    /// A malformed or out-of-range scenario spec directive.
+    ScenarioSpec { line_no: usize, message: String },
+    /// The workload cannot be packed on the platform at all.
+    PackingInfeasible {
+        jobs: usize,
+        nodes: usize,
+        detail: String,
+    },
+    /// The simulation stopped making progress (deadlock or zero-progress
+    /// event cycle).
+    SimDivergence {
+        detail: String,
+        snapshot: SimSnapshot,
+    },
+    /// A [`RunBudget`](crate::sim::RunBudget) limit was hit before the
+    /// simulation completed.
+    BudgetExhausted {
+        budget: &'static str,
+        limit: f64,
+        snapshot: SimSnapshot,
+    },
+    /// An invariant audit rule failed (`--audit`).
+    AuditViolation {
+        rule: &'static str,
+        time: f64,
+        detail: String,
+    },
+    /// A malformed command-line argument.
+    InvalidArg { arg: String, message: String },
+    /// A recorded trace could not be replayed.
+    Replay { detail: String },
+    /// An I/O failure with the path that caused it.
+    Io { path: String, detail: String },
+}
+
+impl fmt::Display for DfrsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DfrsError::WorkloadParse { line_no, field, raw } => {
+                write!(f, "SWF parse error at line {line_no}: bad {field} in {raw:?}")
+            }
+            DfrsError::ScenarioSpec { line_no, message } => {
+                write!(f, "scenario spec line {line_no}: {message}")
+            }
+            DfrsError::PackingInfeasible { jobs, nodes, detail } => {
+                write!(f, "packing infeasible ({jobs} jobs on {nodes} nodes): {detail}")
+            }
+            DfrsError::SimDivergence { detail, snapshot } => {
+                write!(f, "simulation diverged: {detail} [{snapshot}]")
+            }
+            DfrsError::BudgetExhausted { budget, limit, snapshot } => {
+                write!(f, "run budget exhausted: {budget} limit {limit} hit [{snapshot}]")
+            }
+            DfrsError::AuditViolation { rule, time, detail } => {
+                write!(f, "audit violation [{rule}] at t={time:.3}: {detail}")
+            }
+            DfrsError::InvalidArg { arg, message } => write!(f, "--{arg} {message}"),
+            DfrsError::Replay { detail } => write!(f, "replay failed: {detail}"),
+            DfrsError::Io { path, detail } => write!(f, "io error on {path}: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for DfrsError {}
+
+impl DfrsError {
+    /// Short machine-readable tag for CSV/status reporting.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            DfrsError::WorkloadParse { .. } => "workload_parse",
+            DfrsError::ScenarioSpec { .. } => "scenario_spec",
+            DfrsError::PackingInfeasible { .. } => "packing_infeasible",
+            DfrsError::SimDivergence { .. } => "sim_divergence",
+            DfrsError::BudgetExhausted { .. } => "budget_exhausted",
+            DfrsError::AuditViolation { .. } => "audit_violation",
+            DfrsError::InvalidArg { .. } => "invalid_arg",
+            DfrsError::Replay { .. } => "replay",
+            DfrsError::Io { .. } => "io",
+        }
+    }
+
+    /// Build an [`DfrsError::Io`] from a `std::io::Error` with path context.
+    pub fn io(path: &std::path::Path, err: std::io::Error) -> DfrsError {
+        DfrsError::Io { path: path.display().to_string(), detail: err.to_string() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_structure() {
+        let e = DfrsError::WorkloadParse { line_no: 7, field: "submit", raw: "x y z".into() };
+        let s = e.to_string();
+        assert!(s.contains("line 7"), "{s}");
+        assert!(s.contains("submit"), "{s}");
+        assert_eq!(e.kind(), "workload_parse");
+    }
+
+    #[test]
+    fn scenario_spec_display_prefixes_line() {
+        let e = DfrsError::ScenarioSpec { line_no: 2, message: "missing at=".into() };
+        assert!(e.to_string().contains("line 2: missing at="));
+    }
+
+    #[test]
+    fn snapshot_display_summarises_progress() {
+        let snap = SimSnapshot { now: 12.0, completed: 3, total_jobs: 9, ..Default::default() };
+        let e = DfrsError::SimDivergence { detail: "stuck".into(), snapshot: snap };
+        let s = e.to_string();
+        assert!(s.contains("3/9 done"), "{s}");
+        assert!(s.contains("stuck"), "{s}");
+    }
+
+    #[test]
+    fn error_trait_object_works_with_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(DfrsError::Replay { detail: "eof".into() })?;
+            Ok(())
+        }
+        let e = fails().unwrap_err();
+        assert!(e.to_string().contains("replay failed"), "{e}");
+    }
+}

@@ -34,6 +34,7 @@ pub mod alloc;
 pub mod benchx;
 pub mod bound;
 pub mod coordinator;
+pub mod error;
 pub mod flow;
 pub mod lp;
 pub mod metrics;

@@ -229,8 +229,8 @@ pub fn pack_into(
             }
         }
     }
-    cpu_list.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap());
-    mem_list.sort_by(|&a, &b| keys[b].partial_cmp(&keys[a]).unwrap());
+    cpu_list.sort_by(|&a, &b| keys[b].total_cmp(&keys[a]));
+    mem_list.sort_by(|&a, &b| keys[b].total_cmp(&keys[a]));
 
     let total_left: u32 = remaining.iter().sum();
     if total_left == 0 {

@@ -17,3 +17,87 @@ pub mod search;
 
 pub use mcb8::{pack, PackJob, PackResult, PackScratch};
 pub use search::{mcb8_allocate, Mcb8Outcome, RepackCache};
+
+use crate::error::DfrsError;
+use crate::workload::Trace;
+
+/// Pre-flight feasibility screen for a whole trace: a job whose per-task
+/// memory exceeds a node, or whose aggregate memory exceeds the cluster,
+/// can never be placed by any policy — every simulation of that trace would
+/// stall with the job pending forever. Returns the first offender as a
+/// typed error so harnesses can refuse the trace up front instead of
+/// tripping the zero-progress watchdog minutes in.
+///
+/// Tasks of one job may co-locate on a node, so `tasks > nodes` alone is
+/// *not* infeasible; only memory (the rigid resource) can make it so.
+pub fn trace_infeasibility(trace: &Trace) -> Option<DfrsError> {
+    const EPS: f64 = 1e-9;
+    let nodes = trace.nodes as f64;
+    for job in &trace.jobs {
+        if job.mem > 1.0 + EPS {
+            return Some(DfrsError::PackingInfeasible {
+                jobs: 1,
+                nodes: trace.nodes,
+                detail: format!(
+                    "job {} needs {:.3} of a node's memory per task; no node can hold one task",
+                    job.id, job.mem
+                ),
+            });
+        }
+        let total_mem = job.tasks as f64 * job.mem;
+        if total_mem > nodes + EPS {
+            return Some(DfrsError::PackingInfeasible {
+                jobs: 1,
+                nodes: trace.nodes,
+                detail: format!(
+                    "job {} needs {:.2} nodes' worth of memory ({} tasks x {:.3}) on a {}-node cluster",
+                    job.id, total_mem, job.tasks, job.mem, trace.nodes
+                ),
+            });
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod infeasibility_tests {
+    use super::*;
+    use crate::workload::Job;
+
+    fn trace_with(mem: f64, tasks: u32) -> Trace {
+        Trace {
+            jobs: vec![Job {
+                id: 0,
+                submit: 0.0,
+                tasks,
+                cpu_need: 0.5,
+                mem,
+                proc_time: 100.0,
+            }],
+            nodes: 4,
+            cores_per_node: 1,
+            node_mem_gb: 32.0,
+        }
+    }
+
+    #[test]
+    fn feasible_traces_pass() {
+        assert!(trace_infeasibility(&trace_with(0.5, 8)).is_none());
+        // tasks > nodes is fine: tasks co-locate.
+        assert!(trace_infeasibility(&trace_with(0.25, 16)).is_none());
+    }
+
+    #[test]
+    fn oversized_task_is_rejected() {
+        let e = trace_infeasibility(&trace_with(1.5, 1)).expect("should be infeasible");
+        assert_eq!(e.kind(), "packing_infeasible");
+        assert!(e.to_string().contains("job 0"), "{e}");
+    }
+
+    #[test]
+    fn aggregate_memory_overflow_is_rejected() {
+        // 16 tasks x 0.5 mem = 8 nodes' worth on a 4-node cluster.
+        let e = trace_infeasibility(&trace_with(0.5, 16)).expect("should be infeasible");
+        assert_eq!(e.kind(), "packing_infeasible");
+    }
+}

@@ -77,9 +77,8 @@ pub fn pack_masked_seed(
     let mut mem_list: Vec<usize> = (0..jobs.len())
         .filter(|&i| remaining[i] > 0 && jobs[i].cpu_req < jobs[i].mem)
         .collect();
-    let sort_desc = |l: &mut Vec<usize>| {
-        l.sort_by(|&a, &b| key(&jobs[b]).partial_cmp(&key(&jobs[a])).unwrap())
-    };
+    let sort_desc =
+        |l: &mut Vec<usize>| l.sort_by(|&a, &b| key(&jobs[b]).total_cmp(&key(&jobs[a])));
     sort_desc(&mut cpu_list);
     sort_desc(&mut mem_list);
 
@@ -183,7 +182,9 @@ pub fn mcb8_allocate_seed(sim: &Sim, pin: Option<PinRule>) -> Mcb8Outcome {
             return Mcb8Outcome { mapping: r.placements, yield_achieved: 1.0, dropped };
         }
         let Some(mut best) = try_pack(0.0) else {
-            let victim = candidates.pop().unwrap();
+            let victim = candidates
+                .pop()
+                .expect("reference mcb8: memory-only probe failed with no candidates");
             dropped.push(victim);
             continue;
         };
@@ -284,7 +285,9 @@ pub fn mcb8_stretch_allocate_seed(
             try_target(sim, &candidates, s, period, pin)
         };
         let Some(mut best) = probe(0.0) else {
-            let victim = candidates.pop().unwrap();
+            let victim = candidates
+                .pop()
+                .expect("reference solver: zero-speed probe failed with no candidates");
             dropped.push(victim);
             continue;
         };

@@ -195,7 +195,10 @@ pub fn mcb8_allocate_prepared(
         // Memory-only feasibility (Y -> 0). If even that fails, drop the
         // lowest-priority candidate and retry with the rest.
         if !probe(0.0, jobs, needs, nodes, blocked, pack) {
-            let victim = jobs.pop().unwrap().id; // lowest priority last
+            let victim = jobs
+                .pop()
+                .expect("mcb8_allocate: memory-only probe failed on an empty candidate list")
+                .id; // lowest priority last
             needs.pop();
             dropped.push(victim);
             continue;

@@ -267,7 +267,7 @@ pub fn load(arg: &str, trace: &Trace) -> Result<Scenario, String> {
         return builtin(arg, trace);
     }
     match std::fs::read_to_string(arg) {
-        Ok(text) => spec::parse(&text),
+        Ok(text) => spec::parse(&text).map_err(|e| e.to_string()),
         Err(e) => Err(format!(
             "scenario {arg:?} is neither a built-in ({}) nor a readable spec file: {e}",
             BUILTIN_NAMES.join(", ")

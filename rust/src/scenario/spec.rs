@@ -19,53 +19,79 @@
 //! else must be spelled out as separate lines.
 
 use super::{ArrivalMod, ClusterEvent, Scenario};
+use crate::error::DfrsError;
 use std::collections::BTreeMap;
 
 type Kv<'a> = BTreeMap<&'a str, &'a str>;
 
-fn get<'a>(kv: &Kv<'a>, key: &str, line: usize) -> Result<&'a str, String> {
-    kv.get(key).copied().ok_or_else(|| format!("line {line}: missing {key}=..."))
+/// All errors from this module are [`DfrsError::ScenarioSpec`]; its Display
+/// prefixes `scenario spec line N:`, so messages here never repeat the line.
+fn err(line_no: usize, message: String) -> DfrsError {
+    DfrsError::ScenarioSpec { line_no, message }
 }
 
-fn get_f64(kv: &Kv, key: &str, line: usize) -> Result<f64, String> {
+fn get<'a>(kv: &Kv<'a>, key: &str, line: usize) -> Result<&'a str, DfrsError> {
+    kv.get(key).copied().ok_or_else(|| err(line, format!("missing {key}=...")))
+}
+
+fn get_f64(kv: &Kv, key: &str, line: usize) -> Result<f64, DfrsError> {
     let v = get(kv, key, line)?;
-    v.parse::<f64>().map_err(|_| format!("line {line}: {key}={v:?} is not a number"))
-}
-
-fn opt_f64(kv: &Kv, key: &str, line: usize) -> Result<Option<f64>, String> {
-    match kv.get(key) {
-        None => Ok(None),
-        Some(v) => v
-            .parse::<f64>()
-            .map(Some)
-            .map_err(|_| format!("line {line}: {key}={v:?} is not a number")),
+    match v.parse::<f64>() {
+        Ok(x) if x.is_finite() => Ok(x),
+        _ => Err(err(line, format!("{key}={v:?} is not a finite number"))),
     }
 }
 
-fn get_usize(kv: &Kv, key: &str, line: usize) -> Result<usize, String> {
+/// Event times: finite and non-negative (the sim starts at t=0).
+fn get_time(kv: &Kv, key: &str, line: usize) -> Result<f64, DfrsError> {
+    let t = get_f64(kv, key, line)?;
+    if t < 0.0 {
+        return Err(err(line, format!("{key}={t} must be >= 0")));
+    }
+    Ok(t)
+}
+
+fn opt_time(kv: &Kv, key: &str, line: usize) -> Result<Option<f64>, DfrsError> {
+    match kv.get(key) {
+        None => Ok(None),
+        Some(_) => get_time(kv, key, line).map(Some),
+    }
+}
+
+fn get_usize(kv: &Kv, key: &str, line: usize) -> Result<usize, DfrsError> {
     let v = get(kv, key, line)?;
     v.parse::<usize>()
-        .map_err(|_| format!("line {line}: {key}={v:?} is not a non-negative integer"))
+        .map_err(|_| err(line, format!("{key}={v:?} is not a non-negative integer")))
+}
+
+/// Shrink/grow counts: a zero-node capacity change is a no-op and almost
+/// certainly a typo'd spec, so reject it.
+fn get_count(kv: &Kv, line: usize) -> Result<usize, DfrsError> {
+    let count = get_usize(kv, "count", line)?;
+    if count == 0 {
+        return Err(err(line, "count=0 has no effect; use count>=1".to_string()));
+    }
+    Ok(count)
 }
 
 /// A directive's `until` must end the window its `at` opens; an inverted
 /// window would sort the closing event before the opening one and make the
 /// disturbance permanent.
-fn check_window(at: f64, until: Option<f64>, line: usize) -> Result<(), String> {
+fn check_window(at: f64, until: Option<f64>, line: usize) -> Result<(), DfrsError> {
     if let Some(u) = until {
         if u <= at {
-            return Err(format!("line {line}: until={u} must be after at={at}"));
+            return Err(err(line, format!("until={u} must be after at={at}")));
         }
     }
     Ok(())
 }
 
-fn check_keys(kv: &Kv, allowed: &[&str], line: usize) -> Result<(), String> {
+fn check_keys(kv: &Kv, allowed: &[&str], line: usize) -> Result<(), DfrsError> {
     for k in kv.keys() {
         if !allowed.contains(k) {
-            return Err(format!(
-                "line {line}: unknown key {k:?} (allowed: {})",
-                allowed.join(", ")
+            return Err(err(
+                line,
+                format!("unknown key {k:?} (allowed: {})", allowed.join(", ")),
             ));
         }
     }
@@ -74,7 +100,8 @@ fn check_keys(kv: &Kv, allowed: &[&str], line: usize) -> Result<(), String> {
 
 /// Parse a scenario spec. Returns a declarative [`Scenario`]; call
 /// [`Scenario::validate`] with the target cluster size before running it.
-pub fn parse(text: &str) -> Result<Scenario, String> {
+/// Errors are [`DfrsError::ScenarioSpec`] carrying the 1-based line number.
+pub fn parse(text: &str) -> Result<Scenario, DfrsError> {
     let mut s = Scenario::default();
     for (idx, raw) in text.lines().enumerate() {
         let line_no = idx + 1;
@@ -108,8 +135,9 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
         // silently dropped.
         if directive != "name" {
             if let Some(t) = bare.first() {
-                return Err(format!(
-                    "line {line_no}: stray token {t:?} (expected key=value pairs)"
+                return Err(err(
+                    line_no,
+                    format!("stray token {t:?} (expected key=value pairs)"),
                 ));
             }
         }
@@ -118,14 +146,14 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
                 let v = bare.first().copied().or_else(|| kv.get("name").copied());
                 match v {
                     Some(v) => s.name = v.to_string(),
-                    None => return Err(format!("line {line_no}: name needs a value")),
+                    None => return Err(err(line_no, "name needs a value".to_string())),
                 }
             }
             "fail" => {
                 check_keys(&kv, &["node", "at", "until"], line_no)?;
                 let node = get_usize(&kv, "node", line_no)?;
-                let at = get_f64(&kv, "at", line_no)?;
-                let until = opt_f64(&kv, "until", line_no)?;
+                let at = get_time(&kv, "at", line_no)?;
+                let until = opt_time(&kv, "until", line_no)?;
                 check_window(at, until, line_no)?;
                 s.events.push((at, ClusterEvent::Fail(node)));
                 if let Some(u) = until {
@@ -135,14 +163,14 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
             "repair" => {
                 check_keys(&kv, &["node", "at"], line_no)?;
                 let node = get_usize(&kv, "node", line_no)?;
-                let at = get_f64(&kv, "at", line_no)?;
+                let at = get_time(&kv, "at", line_no)?;
                 s.events.push((at, ClusterEvent::Repair(node)));
             }
             "drain" => {
                 check_keys(&kv, &["node", "at", "until"], line_no)?;
                 let node = get_usize(&kv, "node", line_no)?;
-                let at = get_f64(&kv, "at", line_no)?;
-                let until = opt_f64(&kv, "until", line_no)?;
+                let at = get_time(&kv, "at", line_no)?;
+                let until = opt_time(&kv, "until", line_no)?;
                 check_window(at, until, line_no)?;
                 s.events.push((at, ClusterEvent::DrainStart(node)));
                 if let Some(u) = until {
@@ -151,9 +179,9 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
             }
             "shrink" => {
                 check_keys(&kv, &["count", "at", "until"], line_no)?;
-                let count = get_usize(&kv, "count", line_no)?;
-                let at = get_f64(&kv, "at", line_no)?;
-                let until = opt_f64(&kv, "until", line_no)?;
+                let count = get_count(&kv, line_no)?;
+                let at = get_time(&kv, "at", line_no)?;
+                let until = opt_time(&kv, "until", line_no)?;
                 check_window(at, until, line_no)?;
                 s.events.push((at, ClusterEvent::Shrink(count)));
                 if let Some(u) = until {
@@ -162,9 +190,9 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
             }
             "grow" => {
                 check_keys(&kv, &["count", "at", "until"], line_no)?;
-                let count = get_usize(&kv, "count", line_no)?;
-                let at = get_f64(&kv, "at", line_no)?;
-                let until = opt_f64(&kv, "until", line_no)?;
+                let count = get_count(&kv, line_no)?;
+                let at = get_time(&kv, "at", line_no)?;
+                let until = opt_time(&kv, "until", line_no)?;
                 check_window(at, until, line_no)?;
                 s.events.push((at, ClusterEvent::Grow(count)));
                 if let Some(u) = until {
@@ -174,21 +202,45 @@ pub fn parse(text: &str) -> Result<Scenario, String> {
             "burst" => {
                 check_keys(&kv, &["factor", "from", "until"], line_no)?;
                 let factor = get_f64(&kv, "factor", line_no)?;
-                let from = get_f64(&kv, "from", line_no)?;
-                let until = get_f64(&kv, "until", line_no)?;
+                if factor <= 0.0 {
+                    return Err(err(line_no, format!("factor={factor} must be > 0")));
+                }
+                let from = get_time(&kv, "from", line_no)?;
+                let until = get_time(&kv, "until", line_no)?;
+                if until <= from {
+                    return Err(err(
+                        line_no,
+                        format!("until={until} must be after from={from}"),
+                    ));
+                }
                 s.arrivals.push(ArrivalMod::Burst { from, until, factor });
             }
             "diurnal" => {
                 check_keys(&kv, &["period", "amplitude", "phase"], line_no)?;
                 let period = get_f64(&kv, "period", line_no)?;
+                if period <= 0.0 {
+                    return Err(err(line_no, format!("period={period} must be > 0")));
+                }
                 let amplitude = get_f64(&kv, "amplitude", line_no)?;
-                let phase = opt_f64(&kv, "phase", line_no)?.unwrap_or(0.0);
+                if !(0.0..=1.0).contains(&amplitude) {
+                    return Err(err(
+                        line_no,
+                        format!("amplitude={amplitude} must be in [0, 1]"),
+                    ));
+                }
+                let phase = match kv.get("phase") {
+                    None => 0.0,
+                    Some(_) => get_f64(&kv, "phase", line_no)?,
+                };
                 s.arrivals.push(ArrivalMod::Diurnal { period, amplitude, phase });
             }
             other => {
-                return Err(format!(
-                    "line {line_no}: unknown directive {other:?} \
-                     (expected name, fail, repair, drain, shrink, grow, burst, diurnal)"
+                return Err(err(
+                    line_no,
+                    format!(
+                        "unknown directive {other:?} \
+                         (expected name, fail, repair, drain, shrink, grow, burst, diurnal)"
+                    ),
                 ))
             }
         }
@@ -238,17 +290,19 @@ diurnal period=86400 amplitude=0.5 phase=0
     #[test]
     fn errors_carry_line_numbers() {
         let e = parse("fail node=1 at=10\nexplode node=2 at=20").unwrap_err();
+        assert_eq!(e.kind(), "scenario_spec");
+        let e = e.to_string();
         assert!(e.contains("line 2"), "{e}");
-        let e = parse("fail node=1").unwrap_err();
+        let e = parse("fail node=1").unwrap_err().to_string();
         assert!(e.contains("missing at="), "{e}");
-        let e = parse("fail node=abc at=10").unwrap_err();
+        let e = parse("fail node=abc at=10").unwrap_err().to_string();
         assert!(e.contains("not a non-negative integer"), "{e}");
-        let e = parse("fail node=1 at=10 frequency=2").unwrap_err();
+        let e = parse("fail node=1 at=10 frequency=2").unwrap_err().to_string();
         assert!(e.contains("unknown key"), "{e}");
         // A key=value pair typo'd with a space must not be silently dropped.
-        let e = parse("fail node=1 at=10 until 5000").unwrap_err();
+        let e = parse("fail node=1 at=10 until 5000").unwrap_err().to_string();
         assert!(e.contains("stray token"), "{e}");
-        let e = parse("drain node = 7 at=2000").unwrap_err();
+        let e = parse("drain node = 7 at=2000").unwrap_err().to_string();
         assert!(e.contains("stray token"), "{e}");
     }
 
@@ -261,10 +315,42 @@ diurnal period=86400 amplitude=0.5 phase=0
             "shrink count=2 at=300 until=200",
             "grow count=2 at=300 until=200",
         ] {
-            let e = parse(line).unwrap_err();
+            let e = parse(line).unwrap_err().to_string();
             assert!(e.contains("must be after"), "{line}: {e}");
         }
         assert!(parse("fail node=0 at=1000 until=5000").is_ok());
+    }
+
+    /// One rejection test per range rule: each malformed value is refused
+    /// with a message naming the offending key and the accepted range.
+    #[test]
+    fn out_of_range_values_are_rejected() {
+        let cases: [(&str, &str); 9] = [
+            ("fail node=0 at=-5", "at=-5 must be >= 0"),
+            ("fail node=0 at=1e99999", "not a finite number"), // parses to inf
+            ("drain node=0 at=10 until=-1", "until=-1 must be >= 0"),
+            ("shrink count=0 at=10", "count=0 has no effect"),
+            ("grow count=0 at=10", "count=0 has no effect"),
+            ("burst factor=0 from=0 until=10", "factor=0 must be > 0"),
+            ("burst factor=2 from=10 until=10", "until=10 must be after from=10"),
+            ("diurnal period=0 amplitude=0.5", "period=0 must be > 0"),
+            ("diurnal period=100 amplitude=1.5", "amplitude=1.5 must be in [0, 1]"),
+        ];
+        for (line, needle) in cases {
+            let e = parse(line).expect_err(line);
+            assert_eq!(e.kind(), "scenario_spec", "{line}");
+            let msg = e.to_string();
+            assert!(msg.contains(needle), "{line}: {msg} should contain {needle:?}");
+            assert!(msg.contains("line 1"), "{line}: {msg}");
+        }
+        // NaN never compares into range; make sure it is caught as
+        // non-finite rather than slipping through a `<` check.
+        let e = parse("diurnal period=NaN amplitude=0.5").unwrap_err().to_string();
+        assert!(e.contains("not a finite number"), "{e}");
+        // The boundary values themselves are accepted.
+        assert!(parse("fail node=0 at=0").is_ok());
+        assert!(parse("diurnal period=100 amplitude=1").is_ok());
+        assert!(parse("diurnal period=100 amplitude=0 phase=-3.14").is_ok());
     }
 
     #[test]

@@ -70,7 +70,7 @@ impl BatchPolicy {
         let head_need = sim.jobs[head].spec.tasks as usize;
         let mut ends: Vec<(f64, usize)> =
             self.running.iter().map(|&(e, n, _)| (e, n)).collect();
-        ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        ends.sort_by(|a, b| a.0.total_cmp(&b.0));
         let mut avail = self.free.len();
         let mut shadow_time = sim.now;
         for (e, n) in ends {

@@ -127,7 +127,7 @@ fn apply_decay(sim: &mut Sim, bound: f64, factor: f64) {
             slack[n] -= need;
         }
     }
-    running.sort_by(|&a, &b| sim.vt(a).partial_cmp(&sim.vt(b)).unwrap());
+    running.sort_by(|&a, &b| sim.vt(a).total_cmp(&sim.vt(b)));
     for &j in &running {
         if decayed.contains(&j) {
             continue;

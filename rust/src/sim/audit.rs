@@ -1,0 +1,277 @@
+//! Invariant auditor: cross-checks the engine's indexed state against a
+//! from-scratch recomputation after every event (`--audit`).
+//!
+//! The engines earn their speed from incrementally maintained state (id
+//! sets, demand accumulators, lazy clocks); each audit rule recomputes one
+//! of those structures the slow way and fails loudly on the first
+//! divergence. Rules (DESIGN.md §Robustness):
+//!
+//! 1. **vt-monotonic** — a job's virtual time never decreases, except
+//!    across a kill (the per-job `interruptions` counter resets the
+//!    baseline: a failure legitimately restarts progress from zero).
+//! 2. **capacity** — node memory is never oversubscribed, and the
+//!    yield-weighted CPU load on every node stays ≤ 1; the incremental
+//!    `cpu_load`/`free_mem` accumulators match a recomputation from the
+//!    per-node task lists.
+//! 3. **state-sets** — the sorted per-state id sets agree exactly with the
+//!    per-job `state` fields, and the live set is precisely the submitted,
+//!    not-yet-done jobs.
+//! 4. **demand** — the cached/incremental demand accumulator equals the
+//!    demand recomputed over the live set.
+//! 5. **availability** — down nodes host no tasks, and the per-node task
+//!    lists are the exact multiset transpose of running jobs' placements.
+
+use super::{JobState, Sim};
+use crate::error::DfrsError;
+
+const TOL: f64 = 1e-6;
+
+fn fail(rule: &'static str, time: f64, detail: String) -> Result<(), DfrsError> {
+    Err(DfrsError::AuditViolation { rule, time, detail })
+}
+
+/// Per-run audit state (rule 1 needs the previous event's virtual times).
+pub struct Auditor {
+    last_vt: Vec<f64>,
+    last_intr: Vec<u32>,
+}
+
+impl Auditor {
+    pub fn new(jobs: usize) -> Auditor {
+        Auditor { last_vt: vec![0.0; jobs], last_intr: vec![0; jobs] }
+    }
+
+    /// Check every rule against the current simulator state.
+    /// `next_submit_idx` is the run loop's submission cursor: jobs below it
+    /// have had their submission event processed.
+    pub fn check(&mut self, sim: &Sim, next_submit_idx: usize) -> Result<(), DfrsError> {
+        let t = sim.now;
+        self.check_vt_monotonic(sim, t)?;
+        check_capacity(sim, t)?;
+        check_state_sets(sim, next_submit_idx, t)?;
+        check_demand(sim, t)?;
+        check_availability(sim, t)?;
+        Ok(())
+    }
+
+    fn check_vt_monotonic(&mut self, sim: &Sim, t: f64) -> Result<(), DfrsError> {
+        for j in 0..sim.jobs.len() {
+            let v = sim.vt(j);
+            let intr = sim.jobs[j].interruptions;
+            if intr != self.last_intr[j] {
+                // A kill resets virtual time to zero; restart the baseline.
+                self.last_intr[j] = intr;
+            } else if v < self.last_vt[j] - 1e-9 {
+                return fail(
+                    "vt-monotonic",
+                    t,
+                    format!("job {j} vt went backwards: {} -> {v}", self.last_vt[j]),
+                );
+            }
+            self.last_vt[j] = v;
+        }
+        Ok(())
+    }
+}
+
+fn check_capacity(sim: &Sim, t: f64) -> Result<(), DfrsError> {
+    let c = &sim.cluster;
+    for n in 0..c.nodes {
+        if !(-TOL..=1.0 + TOL).contains(&c.free_mem[n]) {
+            return fail("capacity", t, format!("node {n} free_mem out of range: {}", c.free_mem[n]));
+        }
+        if c.cpu_load[n] < -TOL {
+            return fail("capacity", t, format!("node {n} cpu_load negative: {}", c.cpu_load[n]));
+        }
+        let mut mem = 0.0;
+        let mut cpu = 0.0;
+        let mut eff = 0.0;
+        for &(j, count) in &c.tasks_on[n] {
+            let job = &sim.jobs[j];
+            mem += count as f64 * job.spec.mem;
+            cpu += count as f64 * job.spec.cpu_need;
+            eff += count as f64 * job.spec.cpu_need * job.yield_now;
+        }
+        if (1.0 - c.free_mem[n] - mem).abs() > TOL {
+            return fail(
+                "capacity",
+                t,
+                format!("node {n} memory accumulator drift: free_mem={} but tasks use {mem}", c.free_mem[n]),
+            );
+        }
+        if (c.cpu_load[n] - cpu).abs() > TOL {
+            return fail(
+                "capacity",
+                t,
+                format!("node {n} cpu accumulator drift: cpu_load={} but tasks demand {cpu}", c.cpu_load[n]),
+            );
+        }
+        if eff > 1.0 + TOL {
+            return fail(
+                "capacity",
+                t,
+                format!("node {n} yield-weighted load {eff} exceeds capacity"),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn check_state_sets(sim: &Sim, next_submit_idx: usize, t: f64) -> Result<(), DfrsError> {
+    let (mut running, mut paused, mut pending, mut live) = (0usize, 0usize, 0usize, 0usize);
+    for (j, job) in sim.jobs.iter().enumerate() {
+        let (in_run, in_pause, in_pend) = (
+            sim.running_set.contains(j),
+            sim.paused_set.contains(j),
+            sim.pending_set.contains(j),
+        );
+        let expect = match job.state {
+            JobState::Running => (true, false, false),
+            JobState::Paused => (false, true, false),
+            JobState::Pending => (false, false, true),
+            JobState::Done => (false, false, false),
+        };
+        if (in_run, in_pause, in_pend) != expect {
+            return fail(
+                "state-sets",
+                t,
+                format!(
+                    "job {j} state {:?} vs set membership (running={in_run}, paused={in_pause}, pending={in_pend})",
+                    job.state
+                ),
+            );
+        }
+        match job.state {
+            JobState::Running => running += 1,
+            JobState::Paused => paused += 1,
+            JobState::Pending => pending += 1,
+            JobState::Done => {}
+        }
+        let should_live = j < next_submit_idx && !matches!(job.state, JobState::Done);
+        if sim.live_set.contains(j) != should_live {
+            return fail(
+                "state-sets",
+                t,
+                format!(
+                    "job {j} (state {:?}, submitted={}) live-set membership is {}",
+                    job.state,
+                    j < next_submit_idx,
+                    sim.live_set.contains(j)
+                ),
+            );
+        }
+        if should_live {
+            live += 1;
+        }
+    }
+    for (name, set_len, count) in [
+        ("running", sim.running_set.len(), running),
+        ("paused", sim.paused_set.len(), paused),
+        ("pending", sim.pending_set.len(), pending),
+        ("live", sim.live_set.len(), live),
+    ] {
+        if set_len != count {
+            return fail(
+                "state-sets",
+                t,
+                format!("{name} set has {set_len} entries but {count} jobs are in that state"),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn check_demand(sim: &Sim, t: f64) -> Result<(), DfrsError> {
+    let mut expect = 0.0;
+    for &j in sim.live_set.iter() {
+        expect += sim.jobs[j].spec.tasks as f64 * sim.jobs[j].spec.cpu_need;
+    }
+    let tol = TOL * expect.max(1.0);
+    if sim.lazy {
+        if (sim.demand_rate - expect).abs() > tol {
+            return fail(
+                "demand",
+                t,
+                format!("lazy demand accumulator {} != recomputed {expect}", sim.demand_rate),
+            );
+        }
+    } else if let Some(cached) = sim.demand_cache {
+        if (cached - expect).abs() > tol {
+            return fail("demand", t, format!("cached demand {cached} != recomputed {expect}"));
+        }
+    }
+    Ok(())
+}
+
+fn check_availability(sim: &Sim, t: f64) -> Result<(), DfrsError> {
+    let c = &sim.cluster;
+    // Transpose running placements into per-job totals while checking each
+    // per-node entry against the placement multiset.
+    let mut mapped = vec![0usize; sim.jobs.len()];
+    for n in 0..c.nodes {
+        if !c.up[n] && !c.tasks_on[n].is_empty() {
+            return fail(
+                "availability",
+                t,
+                format!("down node {n} still hosts {} task entries", c.tasks_on[n].len()),
+            );
+        }
+        for &(j, count) in &c.tasks_on[n] {
+            if count == 0 {
+                return fail("availability", t, format!("node {n} holds empty entry for job {j}"));
+            }
+            let job = &sim.jobs[j];
+            if !matches!(job.state, JobState::Running) {
+                return fail(
+                    "availability",
+                    t,
+                    format!("node {n} hosts job {j} which is {:?}", job.state),
+                );
+            }
+            let in_placement = job.placement.iter().filter(|&&p| p == n).count();
+            if in_placement != count as usize {
+                return fail(
+                    "availability",
+                    t,
+                    format!(
+                        "node {n} records {count} tasks of job {j} but its placement lists {in_placement}"
+                    ),
+                );
+            }
+            mapped[j] += count as usize;
+        }
+    }
+    for (j, job) in sim.jobs.iter().enumerate() {
+        if matches!(job.state, JobState::Running) {
+            if job.placement.len() != job.spec.tasks as usize {
+                return fail(
+                    "availability",
+                    t,
+                    format!(
+                        "running job {j} places {} tasks, spec says {}",
+                        job.placement.len(),
+                        job.spec.tasks
+                    ),
+                );
+            }
+            if mapped[j] != job.placement.len() {
+                return fail(
+                    "availability",
+                    t,
+                    format!(
+                        "job {j}: {} tasks on nodes but placement lists {}",
+                        mapped[j],
+                        job.placement.len()
+                    ),
+                );
+            }
+        } else if mapped[j] != 0 {
+            return fail(
+                "availability",
+                t,
+                format!("non-running job {j} still has {} tasks on nodes", mapped[j]),
+            );
+        }
+    }
+    Ok(())
+}

@@ -46,15 +46,19 @@
 //! into timed events on the main loop; the empty scenario reproduces the
 //! static-platform results bit for bit in both engine modes.
 
+pub mod audit;
 pub mod calendar;
+pub mod record;
 pub mod state;
 
 pub use state::{Cluster, IndexSet, JobId, JobSim, JobState, NodeId};
 
 use crate::alloc::YieldSolver;
+use crate::error::{DfrsError, SimSnapshot};
 use crate::scenario::{ClusterEvent, Scenario};
 use crate::workload::Trace;
 use calendar::EventCalendar;
+use std::path::PathBuf;
 
 /// Engine configuration. Defaults are the paper's (§5.1).
 #[derive(Debug, Clone)]
@@ -69,6 +73,52 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig { reschedule_penalty: 300.0, stretch_threshold: 10.0 }
     }
+}
+
+/// Watchdog limits for a guarded run ([`run_guarded`]). A limit hit returns
+/// [`DfrsError::BudgetExhausted`] (or [`DfrsError::SimDivergence`] for the
+/// zero-progress detector) carrying a [`SimSnapshot`] of partial progress,
+/// instead of looping forever or dying on an assert.
+#[derive(Debug, Clone)]
+pub struct RunBudget {
+    /// Maximum event-loop iterations (the seed engine's old hard guard).
+    pub max_events: u64,
+    /// Maximum virtual time an event may be scheduled at.
+    pub max_sim_time: f64,
+    /// Maximum wall-clock seconds for the run loop (checked every 1024
+    /// events; infinite by default so deterministic runs never consult the
+    /// wall clock).
+    pub max_wall_secs: f64,
+    /// Zero-progress detector: trip after this many consecutive events
+    /// whose virtual time does not advance at all. Legitimate same-instant
+    /// batches (completion + scenario + submission + tick) span only a
+    /// handful of iterations, so the default has huge margin while still
+    /// catching pause/restart livelocks and `t + p == t` float stalls.
+    pub zero_progress_events: u64,
+}
+
+impl Default for RunBudget {
+    fn default() -> Self {
+        RunBudget {
+            max_events: 10_000_000,
+            max_sim_time: f64::INFINITY,
+            max_wall_secs: f64::INFINITY,
+            zero_progress_events: 10_000,
+        }
+    }
+}
+
+/// Options for a guarded run: watchdog budget, per-event invariant audit,
+/// and event-trace recording for deterministic replay (`dfrs replay`).
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    pub budget: RunBudget,
+    /// Check every [`audit`] rule after each event; first violation aborts
+    /// the run with [`DfrsError::AuditViolation`].
+    pub audit: bool,
+    /// Record the modulated trace, scenario timeline, per-event step log
+    /// and final result digest to this JSON-lines file.
+    pub trace_out: Option<PathBuf>,
 }
 
 /// Which event-loop implementation a run uses. Indexed and Reference
@@ -1534,6 +1584,27 @@ pub fn run_scenario(
     engine: EngineKind,
     scenario: &Scenario,
 ) -> SimResult {
+    match run_guarded(trace, policy, cfg, solver, engine, scenario, &RunOptions::default()) {
+        Ok(r) => r,
+        // The infallible entry points keep their historical contract: a
+        // watchdog trip here means a policy bug, which is a panic.
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// [`run_scenario`] under a watchdog: returns `Err` instead of hanging or
+/// panicking when the run diverges or exceeds its [`RunBudget`], optionally
+/// auditing every event and recording a replayable trace (see
+/// [`RunOptions`]).
+pub fn run_guarded(
+    trace: &Trace,
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+    engine: EngineKind,
+    scenario: &Scenario,
+    opts: &RunOptions,
+) -> Result<SimResult, DfrsError> {
     let modulated;
     let trace = if scenario.modulates_arrivals() {
         modulated = scenario.modulate_arrivals(trace);
@@ -1542,6 +1613,77 @@ pub fn run_scenario(
         trace
     };
     let timeline = scenario.timeline();
+    let mut steps = Vec::new();
+    let capture = opts.trace_out.is_some();
+    let result = run_core(
+        trace,
+        &timeline,
+        policy,
+        cfg,
+        solver,
+        engine,
+        opts,
+        if capture { Some(&mut steps) } else { None },
+    )?;
+    if let Some(path) = &opts.trace_out {
+        let rec = record::TraceRecord {
+            alg: policy.name(),
+            period: policy.period(),
+            engine,
+            scenario_name: scenario.name.clone(),
+            trace: trace.clone(),
+            timeline,
+            steps,
+            digest: record::ResultDigest::of(&result),
+        };
+        record::write_trace(path, &rec)?;
+    }
+    Ok(result)
+}
+
+/// Summarize simulator progress for a watchdog error payload.
+fn watchdog_snapshot(sim: &Sim, events: u64, wall_secs: f64, completed: usize) -> SimSnapshot {
+    let (mut running, mut paused, mut pending) = (0usize, 0usize, 0usize);
+    for job in &sim.jobs {
+        match job.state {
+            JobState::Running => running += 1,
+            JobState::Paused => paused += 1,
+            JobState::Pending => pending += 1,
+            JobState::Done => {}
+        }
+    }
+    SimSnapshot {
+        now: sim.now,
+        events,
+        wall_secs,
+        completed,
+        total_jobs: sim.jobs.len(),
+        running,
+        paused,
+        pending,
+        preemptions: sim.preemptions,
+        migrations: sim.migrations,
+        interrupted_jobs: sim.interruptions,
+        gb_moved: sim.gb_moved,
+        underutil_area: sim.underutil_area,
+    }
+}
+
+/// The event loop proper. Shared by [`run_guarded`] and the replayer
+/// ([`record`]); the scenario is pre-compiled into `timeline` and arrival
+/// modulation has already been applied to `trace`.
+#[allow(clippy::too_many_arguments)]
+fn run_core(
+    trace: &Trace,
+    timeline: &[(f64, ClusterEvent)],
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+    engine: EngineKind,
+    opts: &RunOptions,
+    mut steps: Option<&mut Vec<record::StepRecord>>,
+) -> Result<SimResult, DfrsError> {
+    let budget = &opts.budget;
     let mut scn_idx = 0usize;
 
     let mut sim = Sim::new_with(trace, cfg, solver, engine);
@@ -1550,13 +1692,32 @@ pub fn run_scenario(
     let period = policy.period();
     let mut next_tick = period.map(|p| trace.jobs.first().map(|j| j.submit).unwrap_or(0.0) + p);
     let mut completed = 0usize;
-    // Hard cap on iterations as a hang backstop.
-    let mut guard = 0u64;
-    let guard_max = 10_000_000u64;
+    let mut auditor = if opts.audit { Some(audit::Auditor::new(n)) } else { None };
+    let wall_start = std::time::Instant::now();
+    let mut events = 0u64;
+    // Zero-progress detector state: consecutive events with `now` unchanged.
+    let mut last_now_bits = f64::NAN.to_bits();
+    let mut stalled = 0u64;
 
     while completed < n {
-        guard += 1;
-        assert!(guard < guard_max, "simulation did not terminate (policy bug?)");
+        events += 1;
+        if events > budget.max_events {
+            return Err(DfrsError::BudgetExhausted {
+                budget: "max_events",
+                limit: budget.max_events as f64,
+                snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
+            });
+        }
+        if budget.max_wall_secs.is_finite() && events % 1024 == 0 {
+            let wall = wall_start.elapsed().as_secs_f64();
+            if wall > budget.max_wall_secs {
+                return Err(DfrsError::BudgetExhausted {
+                    budget: "max_wall_secs",
+                    limit: budget.max_wall_secs,
+                    snapshot: watchdog_snapshot(&sim, events, wall, completed),
+                });
+            }
+        }
         let t_submit = if next_submit_idx < n {
             sim.jobs[next_submit_idx].spec.submit
         } else {
@@ -1567,31 +1728,58 @@ pub fn run_scenario(
         let t_pen = sim.next_penalty_end();
         let t_scn = timeline.get(scn_idx).map(|e| e.0).unwrap_or(f64::INFINITY);
         let t_next = t_submit.min(t_tick).min(t_done).min(t_pen).min(t_scn);
-        assert!(
-            t_next.is_finite(),
-            "deadlock: {} jobs incomplete, nothing scheduled (policy {})",
-            n - completed,
-            policy.name()
-        );
+        if !t_next.is_finite() {
+            return Err(DfrsError::SimDivergence {
+                detail: format!(
+                    "deadlock: {} jobs incomplete, nothing scheduled (policy {})",
+                    n - completed,
+                    policy.name()
+                ),
+                snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
+            });
+        }
+        if t_next > budget.max_sim_time {
+            return Err(DfrsError::BudgetExhausted {
+                budget: "max_sim_time",
+                limit: budget.max_sim_time,
+                snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
+            });
+        }
         sim.advance(t_next);
+        if sim.now.to_bits() == last_now_bits {
+            stalled += 1;
+            if stalled >= budget.zero_progress_events {
+                return Err(DfrsError::SimDivergence {
+                    detail: format!(
+                        "zero progress: {stalled} consecutive events with virtual time stuck at {} (policy {})",
+                        sim.now,
+                        policy.name()
+                    ),
+                    snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
+                });
+            }
+        } else {
+            last_now_bits = sim.now.to_bits();
+            stalled = 0;
+        }
 
         // 1. Completions (a job finishing exactly when its node fails is
         // credited with the completion).
         let done = sim.complete_ready_jobs();
-        if !done.is_empty() {
-            completed += done.len();
-            for j in done {
-                policy.on_complete(&mut sim, j);
-            }
+        completed += done.len();
+        for &j in &done {
+            policy.on_complete(&mut sim, j);
         }
         // 2. Scenario events: apply every event due at this instant as one
         // batch, then give the policy a single recovery callback.
+        let mut scn_applied = 0usize;
         if scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
             let mut change = PlatformChange::default();
             while scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
                 let ev = timeline[scn_idx].1;
                 sim.apply_cluster_event(&ev, &mut change);
                 scn_idx += 1;
+                scn_applied += 1;
             }
             // Per-event victim runs are each sorted; restore the documented
             // global ascending-id order across the whole batch.
@@ -1600,6 +1788,7 @@ pub fn run_scenario(
             policy.on_platform_change(&mut sim, &change);
         }
         // 3. Submissions.
+        let submit_start = next_submit_idx;
         while next_submit_idx < n && sim.jobs[next_submit_idx].spec.submit <= sim.now + 1e-9 {
             let j = next_submit_idx;
             next_submit_idx += 1;
@@ -1607,11 +1796,25 @@ pub fn run_scenario(
             policy.on_submit(&mut sim, j);
         }
         // 4. Periodic tick.
+        let mut ticked = false;
         if let (Some(t), Some(p)) = (next_tick, period) {
             if t <= sim.now + 1e-9 {
                 policy.on_tick(&mut sim);
                 next_tick = Some(t + p);
+                ticked = true;
             }
+        }
+        if let Some(s) = steps.as_deref_mut() {
+            s.push(record::StepRecord {
+                t: t_next,
+                done,
+                scn_events: scn_applied,
+                submitted: (submit_start..next_submit_idx).collect(),
+                tick: ticked,
+            });
+        }
+        if let Some(a) = auditor.as_mut() {
+            a.check(&sim, next_submit_idx)?;
         }
     }
 
@@ -1621,7 +1824,7 @@ pub fn run_scenario(
     let stretches: Vec<f64> = (0..n).map(|j| sim.bounded_stretch(j)).collect();
     let max_stretch = stretches.iter().copied().fold(0.0, f64::max);
     let avg_stretch = stretches.iter().sum::<f64>() / n as f64;
-    SimResult {
+    Ok(SimResult {
         max_stretch,
         avg_stretch,
         underutil_area: sim.underutil_area,
@@ -1643,7 +1846,7 @@ pub fn run_scenario(
         },
         makespan,
         jobs: sim.jobs,
-    }
+    })
 }
 
 #[cfg(test)]

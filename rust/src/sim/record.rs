@@ -1,0 +1,532 @@
+//! Event-trace recorder and deterministic replayer (`--trace-out` /
+//! `dfrs replay`).
+//!
+//! A recorded trace is a JSON-lines file holding everything a rerun needs
+//! bit-exactly: the *modulated* workload, the compiled scenario timeline,
+//! one step record per event-loop iteration (time, completions, scenario
+//! events, submissions, tick), and a digest of the final [`SimResult`].
+//! Floats are stored as IEEE-754 bit patterns ([`crate::util::jsonl`]), so
+//! a replay either reproduces the run exactly or reports the first
+//! diverging step — turning any heisenbug into a reproducible artifact.
+
+use super::{run_core, EngineKind, RunOptions, SimConfig, SimResult};
+use crate::error::DfrsError;
+use crate::scenario::ClusterEvent;
+use crate::util::jsonl::{self, fmt_bits, parse_bits};
+use crate::workload::{Job, Trace};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// What one event-loop iteration did (discrete outcomes only — continuous
+/// metrics are covered by the final digest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepRecord {
+    /// Virtual time the loop advanced to.
+    pub t: f64,
+    /// Jobs completed at this step, ascending.
+    pub done: Vec<usize>,
+    /// Scenario events applied at this step.
+    pub scn_events: usize,
+    /// Jobs submitted at this step, ascending.
+    pub submitted: Vec<usize>,
+    /// Whether the periodic tick fired.
+    pub tick: bool,
+}
+
+/// Bit-comparable summary of a [`SimResult`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultDigest {
+    pub max_stretch: f64,
+    pub avg_stretch: f64,
+    pub underutil_area: f64,
+    pub gb_moved: f64,
+    pub makespan: f64,
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub interrupted_jobs: u64,
+}
+
+impl ResultDigest {
+    pub fn of(r: &SimResult) -> ResultDigest {
+        ResultDigest {
+            max_stretch: r.max_stretch,
+            avg_stretch: r.avg_stretch,
+            underutil_area: r.underutil_area,
+            gb_moved: r.gb_moved,
+            makespan: r.makespan,
+            preemptions: r.preemptions,
+            migrations: r.migrations,
+            interrupted_jobs: r.interrupted_jobs,
+        }
+    }
+
+    /// First differing field, comparing floats bit-for-bit.
+    fn diff(&self, other: &ResultDigest) -> Option<String> {
+        let floats = [
+            ("max_stretch", self.max_stretch, other.max_stretch),
+            ("avg_stretch", self.avg_stretch, other.avg_stretch),
+            ("underutil_area", self.underutil_area, other.underutil_area),
+            ("gb_moved", self.gb_moved, other.gb_moved),
+            ("makespan", self.makespan, other.makespan),
+        ];
+        for (name, a, b) in floats {
+            if a.to_bits() != b.to_bits() {
+                return Some(format!("result digest: {name} {a} != {b}"));
+            }
+        }
+        let ints = [
+            ("preemptions", self.preemptions, other.preemptions),
+            ("migrations", self.migrations, other.migrations),
+            ("interrupted_jobs", self.interrupted_jobs, other.interrupted_jobs),
+        ];
+        for (name, a, b) in ints {
+            if a != b {
+                return Some(format!("result digest: {name} {a} != {b}"));
+            }
+        }
+        None
+    }
+}
+
+/// A complete recorded run.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub alg: String,
+    pub period: Option<f64>,
+    pub engine: EngineKind,
+    pub scenario_name: String,
+    /// The workload as simulated (arrival modulation already applied).
+    pub trace: Trace,
+    /// The compiled scenario timeline, sorted by time.
+    pub timeline: Vec<(f64, ClusterEvent)>,
+    pub steps: Vec<StepRecord>,
+    pub digest: ResultDigest,
+}
+
+/// Outcome of replaying a recorded trace.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// Steps the replay executed.
+    pub steps: usize,
+    /// `None` if the replay matched the recording exactly; otherwise a
+    /// description of the first divergence.
+    pub divergence: Option<String>,
+}
+
+fn engine_str(e: EngineKind) -> &'static str {
+    match e {
+        EngineKind::Indexed => "indexed",
+        EngineKind::Reference => "reference",
+        EngineKind::Lazy => "lazy",
+    }
+}
+
+fn parse_engine(s: &str) -> Result<EngineKind, String> {
+    match s {
+        "indexed" => Ok(EngineKind::Indexed),
+        "reference" => Ok(EngineKind::Reference),
+        "lazy" => Ok(EngineKind::Lazy),
+        other => Err(format!("unknown engine {other:?}")),
+    }
+}
+
+fn event_kind(ev: &ClusterEvent) -> (&'static str, usize) {
+    match *ev {
+        ClusterEvent::Fail(n) => ("fail", n),
+        ClusterEvent::Repair(n) => ("repair", n),
+        ClusterEvent::DrainStart(n) => ("drain_start", n),
+        ClusterEvent::DrainEnd(n) => ("drain_end", n),
+        ClusterEvent::Shrink(c) => ("shrink", c),
+        ClusterEvent::Grow(c) => ("grow", c),
+    }
+}
+
+fn parse_event(kind: &str, n: usize) -> Result<ClusterEvent, String> {
+    Ok(match kind {
+        "fail" => ClusterEvent::Fail(n),
+        "repair" => ClusterEvent::Repair(n),
+        "drain_start" => ClusterEvent::DrainStart(n),
+        "drain_end" => ClusterEvent::DrainEnd(n),
+        "shrink" => ClusterEvent::Shrink(n),
+        "grow" => ClusterEvent::Grow(n),
+        other => return Err(format!("unknown event kind {other:?}")),
+    })
+}
+
+fn join_ids(ids: &[usize]) -> String {
+    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(";")
+}
+
+fn split_ids(s: &str) -> Result<Vec<usize>, String> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';')
+        .map(|p| p.parse().map_err(|_| format!("bad id list entry {p:?}")))
+        .collect()
+}
+
+/// Serialize a recorded run to `path` (one JSON object per line).
+pub fn write_trace(path: &Path, rec: &TraceRecord) -> Result<(), DfrsError> {
+    let mut out = String::new();
+    out.push_str(&jsonl::write_obj(&[
+        ("type", "header".to_string()),
+        ("alg", rec.alg.clone()),
+        ("period", rec.period.map(fmt_bits).unwrap_or_else(|| "-".to_string())),
+        ("engine", engine_str(rec.engine).to_string()),
+        ("scenario", rec.scenario_name.clone()),
+        ("nodes", rec.trace.nodes.to_string()),
+        ("cores", rec.trace.cores_per_node.to_string()),
+        ("node_mem_gb", fmt_bits(rec.trace.node_mem_gb)),
+    ]));
+    out.push('\n');
+    for j in &rec.trace.jobs {
+        out.push_str(&jsonl::write_obj(&[
+            ("type", "job".to_string()),
+            ("id", j.id.to_string()),
+            ("submit", fmt_bits(j.submit)),
+            ("tasks", j.tasks.to_string()),
+            ("cpu", fmt_bits(j.cpu_need)),
+            ("mem", fmt_bits(j.mem)),
+            ("proc", fmt_bits(j.proc_time)),
+        ]));
+        out.push('\n');
+    }
+    for (t, ev) in &rec.timeline {
+        let (kind, n) = event_kind(ev);
+        out.push_str(&jsonl::write_obj(&[
+            ("type", "event".to_string()),
+            ("t", fmt_bits(*t)),
+            ("kind", kind.to_string()),
+            ("n", n.to_string()),
+        ]));
+        out.push('\n');
+    }
+    for s in &rec.steps {
+        out.push_str(&jsonl::write_obj(&[
+            ("type", "step".to_string()),
+            ("t", fmt_bits(s.t)),
+            ("done", join_ids(&s.done)),
+            ("scn", s.scn_events.to_string()),
+            ("sub", join_ids(&s.submitted)),
+            ("tick", if s.tick { "1" } else { "0" }.to_string()),
+        ]));
+        out.push('\n');
+    }
+    let d = &rec.digest;
+    out.push_str(&jsonl::write_obj(&[
+        ("type", "result".to_string()),
+        ("max_stretch", fmt_bits(d.max_stretch)),
+        ("avg_stretch", fmt_bits(d.avg_stretch)),
+        ("underutil_area", fmt_bits(d.underutil_area)),
+        ("gb_moved", fmt_bits(d.gb_moved)),
+        ("makespan", fmt_bits(d.makespan)),
+        ("preemptions", d.preemptions.to_string()),
+        ("migrations", d.migrations.to_string()),
+        ("interrupted_jobs", d.interrupted_jobs.to_string()),
+    ]));
+    out.push('\n');
+    let mut f = std::fs::File::create(path).map_err(|e| DfrsError::io(path, e))?;
+    f.write_all(out.as_bytes()).map_err(|e| DfrsError::io(path, e))?;
+    f.sync_data().map_err(|e| DfrsError::io(path, e))?;
+    Ok(())
+}
+
+fn field<'a>(
+    map: &'a BTreeMap<String, String>,
+    key: &str,
+    line_no: usize,
+) -> Result<&'a str, DfrsError> {
+    map.get(key).map(|s| s.as_str()).ok_or_else(|| DfrsError::Replay {
+        detail: format!("line {line_no}: missing field {key:?}"),
+    })
+}
+
+fn bad(line_no: usize, msg: impl std::fmt::Display) -> DfrsError {
+    DfrsError::Replay { detail: format!("line {line_no}: {msg}") }
+}
+
+/// Parse a recorded run back from `path`.
+pub fn read_trace(path: &Path) -> Result<TraceRecord, DfrsError> {
+    let text = std::fs::read_to_string(path).map_err(|e| DfrsError::io(path, e))?;
+    let mut header: Option<TraceRecord> = None;
+    let mut digest: Option<ResultDigest> = None;
+    for (idx, line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let map = jsonl::parse_obj(line).map_err(|e| bad(line_no, e))?;
+        let ty = field(&map, "type", line_no)?;
+        match ty {
+            "header" => {
+                let period = match field(&map, "period", line_no)? {
+                    "-" => None,
+                    bits => Some(parse_bits(bits).map_err(|e| bad(line_no, e))?),
+                };
+                header = Some(TraceRecord {
+                    alg: field(&map, "alg", line_no)?.to_string(),
+                    period,
+                    engine: parse_engine(field(&map, "engine", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    scenario_name: field(&map, "scenario", line_no)?.to_string(),
+                    trace: Trace {
+                        jobs: Vec::new(),
+                        nodes: field(&map, "nodes", line_no)?
+                            .parse()
+                            .map_err(|_| bad(line_no, "bad nodes"))?,
+                        cores_per_node: field(&map, "cores", line_no)?
+                            .parse()
+                            .map_err(|_| bad(line_no, "bad cores"))?,
+                        node_mem_gb: parse_bits(field(&map, "node_mem_gb", line_no)?)
+                            .map_err(|e| bad(line_no, e))?,
+                    },
+                    timeline: Vec::new(),
+                    steps: Vec::new(),
+                    digest: ResultDigest {
+                        max_stretch: 0.0,
+                        avg_stretch: 0.0,
+                        underutil_area: 0.0,
+                        gb_moved: 0.0,
+                        makespan: 0.0,
+                        preemptions: 0,
+                        migrations: 0,
+                        interrupted_jobs: 0,
+                    },
+                });
+            }
+            "job" => {
+                let rec = header.as_mut().ok_or_else(|| bad(line_no, "job before header"))?;
+                rec.trace.jobs.push(Job {
+                    id: field(&map, "id", line_no)?.parse().map_err(|_| bad(line_no, "bad id"))?,
+                    submit: parse_bits(field(&map, "submit", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    tasks: field(&map, "tasks", line_no)?
+                        .parse()
+                        .map_err(|_| bad(line_no, "bad tasks"))?,
+                    cpu_need: parse_bits(field(&map, "cpu", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    mem: parse_bits(field(&map, "mem", line_no)?).map_err(|e| bad(line_no, e))?,
+                    proc_time: parse_bits(field(&map, "proc", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                });
+            }
+            "event" => {
+                let rec = header.as_mut().ok_or_else(|| bad(line_no, "event before header"))?;
+                let t = parse_bits(field(&map, "t", line_no)?).map_err(|e| bad(line_no, e))?;
+                let n: usize =
+                    field(&map, "n", line_no)?.parse().map_err(|_| bad(line_no, "bad n"))?;
+                let ev = parse_event(field(&map, "kind", line_no)?, n)
+                    .map_err(|e| bad(line_no, e))?;
+                rec.timeline.push((t, ev));
+            }
+            "step" => {
+                let rec = header.as_mut().ok_or_else(|| bad(line_no, "step before header"))?;
+                rec.steps.push(StepRecord {
+                    t: parse_bits(field(&map, "t", line_no)?).map_err(|e| bad(line_no, e))?,
+                    done: split_ids(field(&map, "done", line_no)?).map_err(|e| bad(line_no, e))?,
+                    scn_events: field(&map, "scn", line_no)?
+                        .parse()
+                        .map_err(|_| bad(line_no, "bad scn count"))?,
+                    submitted: split_ids(field(&map, "sub", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    tick: field(&map, "tick", line_no)? == "1",
+                });
+            }
+            "result" => {
+                digest = Some(ResultDigest {
+                    max_stretch: parse_bits(field(&map, "max_stretch", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    avg_stretch: parse_bits(field(&map, "avg_stretch", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    underutil_area: parse_bits(field(&map, "underutil_area", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    gb_moved: parse_bits(field(&map, "gb_moved", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    makespan: parse_bits(field(&map, "makespan", line_no)?)
+                        .map_err(|e| bad(line_no, e))?,
+                    preemptions: field(&map, "preemptions", line_no)?
+                        .parse()
+                        .map_err(|_| bad(line_no, "bad preemptions"))?,
+                    migrations: field(&map, "migrations", line_no)?
+                        .parse()
+                        .map_err(|_| bad(line_no, "bad migrations"))?,
+                    interrupted_jobs: field(&map, "interrupted_jobs", line_no)?
+                        .parse()
+                        .map_err(|_| bad(line_no, "bad interrupted_jobs"))?,
+                });
+            }
+            other => return Err(bad(line_no, format!("unknown record type {other:?}"))),
+        }
+    }
+    let mut rec = header.ok_or_else(|| DfrsError::Replay {
+        detail: format!("{}: no header record", path.display()),
+    })?;
+    rec.digest = digest.ok_or_else(|| DfrsError::Replay {
+        detail: format!("{}: no result record (truncated trace?)", path.display()),
+    })?;
+    Ok(rec)
+}
+
+/// First step where two step logs diverge, compared bit-for-bit.
+fn diff_steps(recorded: &[StepRecord], replayed: &[StepRecord]) -> Option<String> {
+    let n = recorded.len().min(replayed.len());
+    for i in 0..n {
+        let (a, b) = (&recorded[i], &replayed[i]);
+        if a.t.to_bits() != b.t.to_bits()
+            || a.done != b.done
+            || a.scn_events != b.scn_events
+            || a.submitted != b.submitted
+            || a.tick != b.tick
+        {
+            return Some(format!(
+                "step {i}: recorded t={} done={:?} scn={} sub={:?} tick={} vs replayed t={} done={:?} scn={} sub={:?} tick={}",
+                a.t, a.done, a.scn_events, a.submitted, a.tick,
+                b.t, b.done, b.scn_events, b.submitted, b.tick
+            ));
+        }
+    }
+    if recorded.len() != replayed.len() {
+        return Some(format!(
+            "step count diverged: recorded {} vs replayed {}",
+            recorded.len(),
+            replayed.len()
+        ));
+    }
+    None
+}
+
+/// Re-execute a recorded trace and diff it against the recording.
+pub fn replay_file(path: &Path) -> Result<ReplayReport, DfrsError> {
+    let rec = read_trace(path)?;
+    let mut policy = crate::sched::registry::make_policy(&rec.alg, rec.period.unwrap_or(600.0))
+        .map_err(|e| DfrsError::Replay { detail: format!("cannot rebuild policy {:?}: {e}", rec.alg) })?;
+    let mut steps = Vec::new();
+    let result = run_core(
+        &rec.trace,
+        &rec.timeline,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(crate::alloc::RustSolver),
+        rec.engine,
+        &RunOptions::default(),
+        Some(&mut steps),
+    )?;
+    let divergence =
+        diff_steps(&rec.steps, &steps).or_else(|| rec.digest.diff(&ResultDigest::of(&result)));
+    Ok(ReplayReport { steps: steps.len(), divergence })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_lists_round_trip() {
+        assert_eq!(join_ids(&[]), "");
+        assert_eq!(split_ids("").unwrap(), Vec::<usize>::new());
+        let ids = vec![3usize, 7, 12];
+        assert_eq!(split_ids(&join_ids(&ids)).unwrap(), ids);
+        assert!(split_ids("1;x").is_err());
+    }
+
+    #[test]
+    fn event_kinds_round_trip() {
+        for ev in [
+            ClusterEvent::Fail(3),
+            ClusterEvent::Repair(1),
+            ClusterEvent::DrainStart(0),
+            ClusterEvent::DrainEnd(0),
+            ClusterEvent::Shrink(2),
+            ClusterEvent::Grow(4),
+        ] {
+            let (kind, n) = event_kind(&ev);
+            assert_eq!(parse_event(kind, n).unwrap(), ev);
+        }
+        assert!(parse_event("explode", 1).is_err());
+    }
+
+    #[test]
+    fn trace_file_round_trips() {
+        let rec = TraceRecord {
+            alg: "GreedyP */OPT=MIN".to_string(),
+            period: Some(600.0),
+            engine: EngineKind::Lazy,
+            scenario_name: "chaos".to_string(),
+            trace: Trace {
+                jobs: vec![Job {
+                    id: 0,
+                    submit: 1.5,
+                    tasks: 2,
+                    cpu_need: 0.5,
+                    mem: 0.25,
+                    proc_time: 100.0,
+                }],
+                nodes: 4,
+                cores_per_node: 2,
+                node_mem_gb: 4.0,
+            },
+            timeline: vec![(10.0, ClusterEvent::Fail(1)), (20.0, ClusterEvent::Repair(1))],
+            steps: vec![StepRecord {
+                t: 1.5,
+                done: vec![],
+                scn_events: 0,
+                submitted: vec![0],
+                tick: false,
+            }],
+            digest: ResultDigest {
+                max_stretch: 1.25,
+                avg_stretch: 1.25,
+                underutil_area: 3.5,
+                gb_moved: 0.0,
+                makespan: 101.5,
+                preemptions: 0,
+                migrations: 0,
+                interrupted_jobs: 1,
+            },
+        };
+        let path = std::env::temp_dir().join(format!("dfrs-rec-{}.jsonl", std::process::id()));
+        write_trace(&path, &rec).unwrap();
+        let back = read_trace(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.alg, rec.alg);
+        assert_eq!(back.period.map(f64::to_bits), rec.period.map(f64::to_bits));
+        assert_eq!(back.engine, rec.engine);
+        assert_eq!(back.scenario_name, rec.scenario_name);
+        assert_eq!(back.trace.jobs.len(), 1);
+        assert_eq!(back.trace.jobs[0].proc_time.to_bits(), 100.0f64.to_bits());
+        assert_eq!(back.timeline, rec.timeline);
+        assert_eq!(back.steps, rec.steps);
+        assert!(rec.digest.diff(&back.digest).is_none());
+    }
+
+    #[test]
+    fn digest_diff_reports_first_field() {
+        let a = ResultDigest {
+            max_stretch: 1.0,
+            avg_stretch: 1.0,
+            underutil_area: 0.0,
+            gb_moved: 0.0,
+            makespan: 10.0,
+            preemptions: 2,
+            migrations: 0,
+            interrupted_jobs: 0,
+        };
+        let mut b = a.clone();
+        assert!(a.diff(&b).is_none());
+        b.preemptions = 3;
+        let d = a.diff(&b).unwrap();
+        assert!(d.contains("preemptions"), "{d}");
+    }
+
+    #[test]
+    fn truncated_trace_is_a_replay_error() {
+        let path = std::env::temp_dir().join(format!("dfrs-torn-{}.jsonl", std::process::id()));
+        std::fs::write(&path, "{\"type\":\"header\",\"alg\":\"EASY\",\"period\":\"-\",\"engine\":\"indexed\",\"scenario\":\"none\",\"nodes\":\"4\",\"cores\":\"2\",\"node_mem_gb\":\"4010000000000000\"}\n").unwrap();
+        let e = read_trace(&path).unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(e.kind(), "replay");
+        assert!(e.to_string().contains("no result record"), "{e}");
+    }
+}

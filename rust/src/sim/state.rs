@@ -246,7 +246,7 @@ impl Cluster {
     /// Node indices sorted by ascending CPU load (Greedy's preference).
     pub fn by_load(&self) -> Vec<NodeId> {
         let mut idx: Vec<NodeId> = (0..self.nodes).collect();
-        idx.sort_by(|&a, &b| self.cpu_load[a].partial_cmp(&self.cpu_load[b]).unwrap());
+        idx.sort_by(|&a, &b| self.cpu_load[a].total_cmp(&self.cpu_load[b]));
         idx
     }
 }

@@ -3,6 +3,7 @@
 //! Supports `--key value`, `--key=value`, `--flag`, and positional
 //! arguments. Typed getters with defaults keep call sites terse.
 
+use crate::error::DfrsError;
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
@@ -58,22 +59,32 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    fn bad(name: &str, what: &str, v: &str) -> DfrsError {
+        DfrsError::InvalidArg {
+            arg: name.to_string(),
+            message: format!("expects {what}, got {v:?}"),
+        }
     }
 
-    pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, DfrsError> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|_| Self::bad(name, "a number", v)),
+            None => Ok(default),
+        }
     }
 
-    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, DfrsError> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|_| Self::bad(name, "an integer", v)),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, DfrsError> {
+        match self.get(name) {
+            Some(v) => v.parse().map_err(|_| Self::bad(name, "an integer", v)),
+            None => Ok(default),
+        }
     }
 
     /// Reject unknown flags/options instead of silently ignoring them.
@@ -128,10 +139,10 @@ mod tests {
             "bench", "table2", "--traces", "20", "--load=0.7", "--verbose", "--seed", "42",
         ]);
         assert_eq!(a.positional, vec!["bench", "table2"]);
-        assert_eq!(a.usize_or("traces", 0), 20);
-        assert!((a.f64_or("load", 0.0) - 0.7).abs() < 1e-12);
+        assert_eq!(a.usize_or("traces", 0).unwrap(), 20);
+        assert!((a.f64_or("load", 0.0).unwrap() - 0.7).abs() < 1e-12);
         assert!(a.flag("verbose"));
-        assert_eq!(a.u64_or("seed", 0), 42);
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 42);
     }
 
     #[test]
@@ -144,16 +155,19 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = Args::parse(Vec::<String>::new());
-        assert_eq!(a.usize_or("jobs", 400), 400);
+        assert_eq!(a.usize_or("jobs", 400).unwrap(), 400);
         assert_eq!(a.str_or("alg", "easy"), "easy");
         assert!(!a.flag("x"));
     }
 
     #[test]
-    #[should_panic]
-    fn bad_number_panics() {
+    fn bad_number_is_a_typed_error() {
         let a = Args::parse(vec!["--n", "abc"]);
-        a.usize_or("n", 1);
+        let e = a.usize_or("n", 1).unwrap_err();
+        assert_eq!(e.kind(), "invalid_arg");
+        assert!(e.to_string().contains("--n expects an integer"), "{e}");
+        assert!(a.f64_or("n", 1.0).is_err());
+        assert!(a.u64_or("n", 1).is_err());
     }
 
     #[test]

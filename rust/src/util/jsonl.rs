@@ -1,0 +1,189 @@
+//! Minimal JSON-lines helpers for checkpoint and trace files.
+//!
+//! serde is unavailable offline, so records are written as *flat JSON
+//! objects whose values are all strings* — a subset every JSON tool can
+//! read, and one we can parse back with a small hand-rolled scanner.
+//! Floats round-trip bit-exactly via their IEEE-754 bit pattern in hex
+//! ([`fmt_bits`]/[`parse_bits`]); lists are `;`-joined inside one string.
+
+use std::collections::BTreeMap;
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Serialize key/value pairs as one JSON object on a single line.
+pub fn write_obj(fields: &[(&str, String)]) -> String {
+    let mut out = String::from("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        escape_into(&mut out, k);
+        out.push_str("\":\"");
+        escape_into(&mut out, v);
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Parse a flat string-valued JSON object produced by [`write_obj`].
+pub fn parse_obj(line: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut map = BTreeMap::new();
+    let chars: Vec<char> = line.trim().chars().collect();
+    let mut i = 0usize;
+    let err = |msg: &str, i: usize| format!("bad jsonl at char {i}: {msg}");
+    let skip_ws = |chars: &[char], mut i: usize| {
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        i
+    };
+    // Expect a string literal starting at `i`; return (value, index after it).
+    fn read_string(chars: &[char], mut i: usize) -> Result<(String, usize), String> {
+        if i >= chars.len() || chars[i] != '"' {
+            return Err(format!("expected '\"' at char {i}"));
+        }
+        i += 1;
+        let mut out = String::new();
+        while i < chars.len() {
+            match chars[i] {
+                '"' => return Ok((out, i + 1)),
+                '\\' => {
+                    i += 1;
+                    let c = *chars.get(i).ok_or("truncated escape")?;
+                    match c {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        '/' => out.push('/'),
+                        'n' => out.push('\n'),
+                        'r' => out.push('\r'),
+                        't' => out.push('\t'),
+                        'u' => {
+                            if i + 4 >= chars.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex: String = chars[i + 1..i + 5].iter().collect();
+                            let code = u32::from_str_radix(&hex, 16)
+                                .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                            out.push(char::from_u32(code).ok_or("bad codepoint")?);
+                            i += 4;
+                        }
+                        other => return Err(format!("bad escape \\{other}")),
+                    }
+                    i += 1;
+                }
+                c => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    i = skip_ws(&chars, i);
+    if i >= chars.len() || chars[i] != '{' {
+        return Err(err("expected '{'", i));
+    }
+    i = skip_ws(&chars, i + 1);
+    if i < chars.len() && chars[i] == '}' {
+        return Ok(map);
+    }
+    loop {
+        let (key, next) = read_string(&chars, i).map_err(|e| err(&e, i))?;
+        i = skip_ws(&chars, next);
+        if i >= chars.len() || chars[i] != ':' {
+            return Err(err("expected ':'", i));
+        }
+        i = skip_ws(&chars, i + 1);
+        let (val, next) = read_string(&chars, i).map_err(|e| err(&e, i))?;
+        map.insert(key, val);
+        i = skip_ws(&chars, next);
+        match chars.get(i) {
+            Some(',') => i = skip_ws(&chars, i + 1),
+            Some('}') => {
+                i = skip_ws(&chars, i + 1);
+                if i != chars.len() {
+                    return Err(err("trailing content after '}'", i));
+                }
+                return Ok(map);
+            }
+            _ => return Err(err("expected ',' or '}'", i)),
+        }
+    }
+}
+
+/// Bit-exact float encoding: 16 hex digits of the IEEE-754 pattern.
+pub fn fmt_bits(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`fmt_bits`].
+pub fn parse_bits(s: &str) -> Result<f64, String> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("bad f64 bit pattern {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_round_trips() {
+        let line = write_obj(&[
+            ("key", "table2/medium/EASY/3".to_string()),
+            ("values", "3ff0000000000000;4000000000000000".to_string()),
+        ]);
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        let map = parse_obj(&line).unwrap();
+        assert_eq!(map["key"], "table2/medium/EASY/3");
+        assert_eq!(map["values"], "3ff0000000000000;4000000000000000");
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let nasty = "a\"b\\c\nd\te\r\u{1}f";
+        let line = write_obj(&[("k", nasty.to_string())]);
+        assert!(!line.contains('\n'), "must stay one line: {line:?}");
+        let map = parse_obj(&line).unwrap();
+        assert_eq!(map["k"], nasty);
+    }
+
+    #[test]
+    fn rejects_torn_lines() {
+        assert!(parse_obj("{\"key\":\"ab").is_err());
+        assert!(parse_obj("{\"key\"").is_err());
+        assert!(parse_obj("").is_err());
+        assert!(parse_obj("{\"a\":\"b\"}x").is_err());
+    }
+
+    #[test]
+    fn empty_object_parses() {
+        assert!(parse_obj("{}").unwrap().is_empty());
+        assert!(parse_obj("  { }  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn float_bits_round_trip() {
+        for x in [0.0, -0.0, 1.5, f64::INFINITY, -3.25e-9, 600.0] {
+            let s = fmt_bits(x);
+            assert_eq!(s.len(), 16);
+            assert_eq!(parse_bits(&s).unwrap().to_bits(), x.to_bits());
+        }
+        assert!(parse_bits("zzzz").is_err());
+    }
+}

@@ -14,6 +14,7 @@
 //! - otherwise: `procs` tasks, CPU need 50% (one core of the dual-core).
 
 use super::{Job, Trace};
+use crate::error::DfrsError;
 use std::path::Path;
 
 /// Raw SWF record (subset of the 18 fields).
@@ -63,6 +64,53 @@ pub fn parse_swf(text: &str) -> Vec<SwfRecord> {
     out
 }
 
+/// Parse SWF text *strictly*: every non-comment, non-blank line must be a
+/// well-formed record, or the parse fails with a typed
+/// [`DfrsError::WorkloadParse`] naming the 1-based line number and the
+/// offending field. Use this for user-supplied `--swf` files where a silent
+/// skip would hide a corrupt log; [`parse_swf`] remains the lenient path
+/// for archive logs (which really do contain junk lines).
+///
+/// Field strictness mirrors the lenient parser's semantics: the required
+/// fields (job id, submit, run time, procs) must parse as finite numbers;
+/// the optional memory/status fields degrade to "unknown" exactly as in
+/// [`parse_swf`], so on clean input `parse_swf_strict(text) == parse_swf(text)`.
+pub fn parse_swf_strict(text: &str) -> Result<Vec<SwfRecord>, DfrsError> {
+    let mut out = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with(';') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 11 {
+            return Err(DfrsError::WorkloadParse {
+                line_no,
+                field: "record",
+                raw: line.to_string(),
+            });
+        }
+        let req = |i: usize, field: &'static str| -> Result<f64, DfrsError> {
+            f[i].parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite())
+                .ok_or(DfrsError::WorkloadParse { line_no, field, raw: line.to_string() })
+        };
+        let opt = |i: usize| -> Option<f64> { f.get(i).and_then(|s| s.parse::<f64>().ok()) };
+        out.push(SwfRecord {
+            job_id: req(0, "job_id")? as i64,
+            submit: req(1, "submit")?,
+            run_time: req(3, "run_time")?,
+            procs: req(4, "procs")? as i64,
+            used_mem_kb: opt(6).unwrap_or(-1.0),
+            req_mem_kb: opt(9).unwrap_or(-1.0),
+            status: opt(10).unwrap_or(-1.0) as i64,
+        });
+    }
+    Ok(out)
+}
+
 /// Platform the HPC2N rules assume.
 pub const HPC2N_NODES: usize = 120;
 pub const HPC2N_CORES: u32 = 2;
@@ -101,7 +149,7 @@ pub fn hpc2n_jobs(records: &[SwfRecord]) -> Vec<Job> {
             proc_time: r.run_time,
         });
     }
-    jobs.sort_by(|a, b| a.submit.partial_cmp(&b.submit).unwrap());
+    jobs.sort_by(|a, b| a.submit.total_cmp(&b.submit));
     for (i, j) in jobs.iter_mut().enumerate() {
         j.id = i as u32;
     }
@@ -294,6 +342,72 @@ garbage line that should be skipped
         // Job 5: missing memory gets the 10% floor.
         assert_eq!(by_procs[4].0, 1);
         assert!((by_procs[4].2 - 0.10).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strict_parser_matches_lenient_on_clean_input() {
+        // On well-formed text the strict parser is a drop-in replacement.
+        let clean = "\
+; header
+1 0 10 3600 4 -1 204800 4 7200 204800 1 1 1 1 1 1 -1 -1
+2 60 0 100 3 -1 -1 3 200 1572864 1 1 1 1 1 1 -1 -1
+";
+        assert_eq!(parse_swf_strict(clean).unwrap(), parse_swf(clean));
+    }
+
+    #[test]
+    fn strict_parser_pinpoints_malformed_lines() {
+        // Each case: (text, expected 1-based line, expected field tag).
+        // Line numbering counts comments and blanks, like an editor would.
+        let cases: [(&str, usize, &str); 6] = [
+            ("; ok\n\ngarbage line that should fail", 3, "record"),
+            ("1 0 10 3600 4 -1 204800 4 7200 204800", 1, "record"), // 10 fields
+            ("abc 0 10 3600 4 -1 -1 4 -1 -1 1", 1, "job_id"),
+            ("1 xyz 10 3600 4 -1 -1 4 -1 -1 1", 1, "submit"),
+            ("; c\n1 0 10 nope 4 -1 -1 4 -1 -1 1", 2, "run_time"),
+            ("1 0 10 3600 inf -1 -1 4 -1 -1 1", 1, "procs"), // non-finite
+        ];
+        for (text, line_no, field) in cases {
+            let e = parse_swf_strict(text).expect_err(text);
+            assert_eq!(e.kind(), "workload_parse", "{text}");
+            let msg = e.to_string();
+            assert!(msg.contains(&format!("line {line_no}")), "{msg}");
+            assert!(msg.contains(field), "{msg} should name field {field}");
+        }
+    }
+
+    #[test]
+    fn strict_parser_survives_mangled_archive_fragments() {
+        // Fuzz-ish sweep: take a valid record and mangle it every way a
+        // truncated download or line-noise corruption plausibly would. The
+        // parser must return a typed error (never panic) and the reported
+        // line must be the mangled one.
+        let good = "1 0 10 3600 4 -1 204800 4 7200 204800 1 1 1 1 1 1 -1 -1";
+        let mut mangled: Vec<String> = Vec::new();
+        // Truncations at every byte boundary.
+        for cut in 0..good.len() {
+            mangled.push(good[..cut].to_string());
+        }
+        // Non-numeric injections into each field position.
+        for i in 0..11 {
+            let mut f: Vec<&str> = good.split_whitespace().collect();
+            f[i] = "x%y";
+            mangled.push(f.join(" "));
+        }
+        mangled.push("\u{0}\u{1}\u{2}".to_string());
+        mangled.push("NaN NaN NaN NaN NaN NaN NaN NaN NaN NaN NaN".to_string());
+        for bad in &mangled {
+            let text = format!("{good}\n{bad}\n{good}");
+            match parse_swf_strict(&text) {
+                // Mangles of optional fields (or truncations that leave a
+                // valid shorter-but-complete record) can still parse.
+                Ok(rs) => assert!(rs.len() >= 2, "{bad:?}"),
+                Err(e) => {
+                    assert_eq!(e.kind(), "workload_parse", "{bad:?}");
+                    assert!(e.to_string().contains("line 2"), "{bad:?}: {e}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! Fault-tolerance acceptance tests (DESIGN.md §Robustness): the sim
+//! watchdog (zero-progress and budget exhaustion with state snapshots),
+//! crash-isolated resumable grids (quarantine, checkpoint/resume,
+//! worker-count independence), the invariant auditor across all three
+//! engines and every built-in scenario, and the record/replay contract.
+
+use dfrs::alloc::RustSolver;
+use dfrs::coordinator::grid::{self, FaultPolicy};
+use dfrs::error::DfrsError;
+use dfrs::scenario::{self, Scenario};
+use dfrs::sched::registry::make_policy;
+use dfrs::sched::Policy;
+use dfrs::sim::{
+    record, run_guarded, EngineKind, JobId, RunBudget, RunOptions, Sim, SimConfig,
+};
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+use dfrs::workload::{Job, Trace};
+use std::path::PathBuf;
+
+const ENGINES: [EngineKind; 3] = [EngineKind::Indexed, EngineKind::Reference, EngineKind::Lazy];
+
+fn one_job_trace() -> Trace {
+    Trace {
+        jobs: vec![Job { id: 0, submit: 0.0, tasks: 1, cpu_need: 1.0, mem: 0.2, proc_time: 500.0 }],
+        nodes: 2,
+        cores_per_node: 1,
+        node_mem_gb: 4.0,
+    }
+}
+
+fn small_trace(seed: u64, jobs: usize) -> Trace {
+    scale_to_load(&generate(seed, jobs, &LublinParams::default()), 0.7)
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dfrs-robustness-{tag}-{}.jsonl", std::process::id()))
+}
+
+/// A pathological policy: every tick it pauses the running job and restarts
+/// it in place. With `period() == Some(0.0)` the tick reschedules at the
+/// same instant forever, so virtual time never advances — the hand-built
+/// zero-progress loop the watchdog must catch.
+struct Thrash;
+impl Policy for Thrash {
+    fn name(&self) -> String {
+        "thrash".into()
+    }
+    fn on_submit(&mut self, sim: &mut Sim, j: JobId) {
+        sim.start_job(j, vec![0]);
+        sim.set_yield(j, 1.0);
+    }
+    fn on_complete(&mut self, _sim: &mut Sim, _j: JobId) {}
+    fn on_tick(&mut self, sim: &mut Sim) {
+        let running = sim.running();
+        for j in running {
+            sim.pause_job(j);
+            sim.start_job(j, vec![0]);
+            sim.set_yield(j, 1.0);
+        }
+    }
+    fn period(&self) -> Option<f64> {
+        Some(0.0)
+    }
+}
+
+#[test]
+fn zero_progress_thrash_trips_watchdog_on_every_engine() {
+    let trace = one_job_trace();
+    let opts = RunOptions {
+        budget: RunBudget { zero_progress_events: 64, ..RunBudget::default() },
+        ..RunOptions::default()
+    };
+    for engine in ENGINES {
+        let err = run_guarded(
+            &trace,
+            &mut Thrash,
+            SimConfig::default(),
+            Box::new(RustSolver),
+            engine,
+            &Scenario::default(),
+            &opts,
+        )
+        .expect_err("thrash loop must not terminate normally");
+        match err {
+            DfrsError::SimDivergence { detail, snapshot } => {
+                assert!(detail.contains("zero progress"), "{engine:?}: {detail}");
+                assert!(detail.contains("thrash"), "{engine:?}: names the policy: {detail}");
+                assert_eq!(snapshot.completed, 0, "{engine:?}");
+                assert_eq!(snapshot.total_jobs, 1, "{engine:?}");
+                assert!(snapshot.events >= 64, "{engine:?}: {}", snapshot.events);
+                assert!(snapshot.preemptions >= 1, "{engine:?}: the thrash shows up");
+            }
+            other => panic!("{engine:?}: expected SimDivergence, got {other}"),
+        }
+    }
+}
+
+#[test]
+fn max_events_budget_reports_partial_progress() {
+    let trace = small_trace(5, 60);
+    let n = trace.jobs.len();
+    let opts = RunOptions {
+        budget: RunBudget { max_events: 25, ..RunBudget::default() },
+        ..RunOptions::default()
+    };
+    let mut policy = make_policy("GreedyPM */per/OPT=MIN/MINVT=600", 600.0).unwrap();
+    let err = run_guarded(
+        &trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &Scenario::default(),
+        &opts,
+    )
+    .expect_err("25 events cannot finish 60 jobs");
+    match err {
+        DfrsError::BudgetExhausted { budget, limit, snapshot } => {
+            assert_eq!(budget, "max_events");
+            assert_eq!(limit, 25.0);
+            assert_eq!(snapshot.total_jobs, n);
+            assert!(snapshot.completed < n, "partial progress: {}", snapshot.completed);
+            assert_eq!(snapshot.events, 26, "fails on the event after the limit");
+            // The snapshot is a live summary, not a blank: the in-flight
+            // job population accounts for every non-done job.
+            assert!(
+                snapshot.running + snapshot.paused + snapshot.pending > 0,
+                "{snapshot}"
+            );
+        }
+        other => panic!("expected BudgetExhausted, got {other}"),
+    }
+}
+
+#[test]
+fn max_sim_time_budget_stops_before_advancing_past_horizon() {
+    let trace = one_job_trace(); // single 500 s job submitted at t=0
+    let opts = RunOptions {
+        budget: RunBudget { max_sim_time: 100.0, ..RunBudget::default() },
+        ..RunOptions::default()
+    };
+    let mut policy = make_policy("GreedyPM */per/OPT=MIN/MINVT=600", 600.0).unwrap();
+    let err = run_guarded(
+        &trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &Scenario::default(),
+        &opts,
+    )
+    .expect_err("completion at t=500 exceeds the 100 s horizon");
+    match err {
+        DfrsError::BudgetExhausted { budget, snapshot, .. } => {
+            assert_eq!(budget, "max_sim_time");
+            assert!(snapshot.now <= 100.0, "clock must not pass the horizon: {}", snapshot.now);
+            assert_eq!(snapshot.running, 1, "the job was started before the horizon");
+        }
+        other => panic!("expected BudgetExhausted, got {other}"),
+    }
+}
+
+#[test]
+fn generous_budget_changes_nothing() {
+    // A run that fits its budget returns the exact same result as the
+    // unguarded path (the watchdog is observation-only).
+    let trace = small_trace(9, 50);
+    let mut a = make_policy("EASY", 600.0).unwrap();
+    let guarded = run_guarded(
+        &trace,
+        a.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &Scenario::default(),
+        &RunOptions::default(),
+    )
+    .expect("EASY finishes");
+    let mut b = make_policy("EASY", 600.0).unwrap();
+    let plain = dfrs::sim::run_scenario(
+        &trace,
+        b.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &Scenario::default(),
+    );
+    assert_eq!(guarded.max_stretch.to_bits(), plain.max_stretch.to_bits());
+    assert_eq!(guarded.underutil_area.to_bits(), plain.underutil_area.to_bits());
+    assert_eq!(guarded.preemptions, plain.preemptions);
+}
+
+/// One panicking cell and one diverging (watchdog-tripped) cell must not
+/// kill the grid: both come back quarantined as failed outcomes while the
+/// healthy cell succeeds.
+#[test]
+fn grid_quarantines_panicking_and_diverging_cells() {
+    let trace = one_job_trace();
+    let keys: Vec<String> = ["ok", "panics", "diverges"]
+        .iter()
+        .map(|k| format!("robustness/{k}"))
+        .collect();
+    let fp = FaultPolicy { retries: 0, checkpoint: None, resume: false };
+    let outcomes = grid::run_cells(&keys, &fp, |i| match i {
+        0 => Ok(vec![1.0]),
+        1 => panic!("cell exploded"),
+        _ => {
+            let opts = RunOptions {
+                budget: RunBudget { zero_progress_events: 64, ..RunBudget::default() },
+                ..RunOptions::default()
+            };
+            let r = run_guarded(
+                &trace,
+                &mut Thrash,
+                SimConfig::default(),
+                Box::new(RustSolver),
+                EngineKind::Indexed,
+                &Scenario::default(),
+                &opts,
+            )?;
+            Ok(vec![r.max_stretch])
+        }
+    })
+    .expect("the grid itself survives");
+    assert_eq!(outcomes[0].status(), "ok");
+    assert_eq!(outcomes[1].status(), "failed");
+    assert_eq!(outcomes[2].status(), "failed");
+    assert!(outcomes[1].error.as_deref().unwrap().contains("cell exploded"));
+    assert!(outcomes[2].error.as_deref().unwrap().contains("zero progress"));
+    assert_eq!(grid::report_failures(&outcomes), 2);
+}
+
+/// Simulate a crash mid-campaign (one cell panics), then resume from the
+/// checkpoint: the merged outcome table is identical to an uninterrupted
+/// run — same keys, bit-identical values — at any worker count.
+#[test]
+fn checkpoint_resume_is_byte_identical_at_any_worker_count() {
+    let keys: Vec<String> = (0..8).map(|i| format!("robustness/resume/{i}")).collect();
+    // Deterministic per-cell "metric": value depends only on the cell.
+    let cell_value = |i: usize| vec![i as f64 * 1.25 + 0.1, (i as f64).sqrt()];
+    // The uninterrupted oracle.
+    let oracle = grid::run_cells(&keys, &FaultPolicy { retries: 0, checkpoint: None, resume: false }, |i| {
+        Ok(cell_value(i))
+    })
+    .unwrap();
+
+    for workers in [1usize, 4] {
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(workers).build().unwrap();
+        let path = tmp_path(&format!("resume-w{workers}"));
+        std::fs::remove_file(&path).ok();
+        let fp = FaultPolicy { retries: 0, checkpoint: Some(path.clone()), resume: false };
+        grid::prepare_checkpoint(&fp).unwrap();
+        // Interrupted run: cell 5 panics, everything else is checkpointed.
+        let first = pool
+            .install(|| {
+                grid::run_cells(&keys, &fp, |i| {
+                    if i == 5 {
+                        panic!("injected crash");
+                    }
+                    Ok(cell_value(i))
+                })
+            })
+            .unwrap();
+        assert_eq!(first.iter().filter(|o| o.error.is_some()).count(), 1);
+        // Resume: only the failed cell re-runs; the rest are restored.
+        let fp2 = FaultPolicy { resume: true, ..fp.clone() };
+        let resumed = pool
+            .install(|| grid::run_cells(&keys, &fp2, |i| Ok(cell_value(i))))
+            .unwrap();
+        for (i, (a, b)) in oracle.iter().zip(resumed.iter()).enumerate() {
+            assert_eq!(a.key, b.key);
+            assert_eq!(b.error, None, "cell {i} after resume");
+            assert_eq!(
+                a.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "cell {i} values must round-trip the checkpoint bit-identically"
+            );
+            if i != 5 {
+                assert_eq!(b.attempts, 0, "cell {i} must be restored, not re-run");
+            } else {
+                assert_eq!(b.attempts, 1, "the crashed cell re-runs");
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// `--audit` equivalent: every invariant holds after every event, on every
+/// engine, across every built-in scenario.
+#[test]
+fn auditor_passes_all_engines_and_builtin_scenarios() {
+    let trace = small_trace(3, 40);
+    let opts = RunOptions { audit: true, ..RunOptions::default() };
+    for alg in ["EASY", "GreedyPM */per/OPT=MIN/MINVT=600"] {
+        for engine in ENGINES {
+            for name in scenario::BUILTIN_NAMES {
+                let scn = scenario::builtin(name, &trace).unwrap();
+                let mut policy = make_policy(alg, 600.0).unwrap();
+                let r = run_guarded(
+                    &trace,
+                    policy.as_mut(),
+                    SimConfig::default(),
+                    Box::new(RustSolver),
+                    engine,
+                    &scn,
+                    &opts,
+                );
+                match r {
+                    Ok(_) => {}
+                    Err(e) => panic!("{alg} / {engine:?} / {name}: audit failed: {e}"),
+                }
+            }
+        }
+    }
+}
+
+/// Record a run with `--trace-out`, replay it with the replayer, and
+/// require a bit-identical result digest and step sequence.
+#[test]
+fn recorded_trace_replays_identically() {
+    let trace = small_trace(11, 40);
+    for engine in [EngineKind::Indexed, EngineKind::Lazy] {
+        let path = tmp_path(&format!("replay-{engine:?}"));
+        std::fs::remove_file(&path).ok();
+        let scn = scenario::builtin("failures", &trace).unwrap();
+        let mut policy = make_policy("GreedyPM */per/OPT=MIN/MINVT=600", 600.0).unwrap();
+        let opts = RunOptions { trace_out: Some(path.clone()), ..RunOptions::default() };
+        run_guarded(
+            &trace,
+            policy.as_mut(),
+            SimConfig::default(),
+            Box::new(RustSolver),
+            engine,
+            &scn,
+            &opts,
+        )
+        .expect("recorded run finishes");
+        let report = record::replay_file(&path)
+            .unwrap_or_else(|e| panic!("{engine:?}: replay failed: {e}"));
+        assert!(report.steps > 0, "{engine:?}: a real run has steps");
+        assert_eq!(
+            report.divergence, None,
+            "{engine:?}: replay must match the recording bit for bit"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Infeasible workloads are refused up front with a typed error instead of
+/// hanging the simulation until the watchdog fires.
+#[test]
+fn infeasible_trace_is_refused_before_simulation() {
+    let mut trace = one_job_trace();
+    trace.jobs[0].mem = 1.4; // no node can hold one task
+    let e = dfrs::packing::trace_infeasibility(&trace).expect("infeasible");
+    assert_eq!(e.kind(), "packing_infeasible");
+    assert!(dfrs::packing::trace_infeasibility(&one_job_trace()).is_none());
+}
