@@ -19,7 +19,10 @@ use crate::sched::registry::{
     best_algorithms, fig1_algorithms, make_policy, table2_algorithms, table3_algorithms,
 };
 use crate::coordinator::grid::{self, FaultPolicy};
-use crate::sim::{run, run_guarded, run_scenario, EngineKind, RunOptions, SimConfig, SimResult};
+use crate::sim::{
+    run, run_guarded, run_instrumented, run_scenario, EngineKind, RunOptions, SimConfig, SimResult,
+};
+use crate::telemetry::{RecorderConfig, Telemetry};
 use crate::util::cli::Args;
 use crate::util::stats::Summary;
 use crate::workload::{hpc2n, lublin, scale, swf, Trace};
@@ -207,6 +210,7 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     let opts = RunOptions {
         audit: args.flag("audit"),
         trace_out: args.get("trace-out").map(PathBuf::from),
+        telemetry: args.get("telemetry").map(PathBuf::from),
         ..RunOptions::default()
     };
     let t0 = std::time::Instant::now();
@@ -239,6 +243,9 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     }
     if let Some(p) = &opts.trace_out {
         println!("trace recorded     : {} (verify with `dfrs replay`)", p.display());
+    }
+    if let Some(p) = &opts.telemetry {
+        println!("telemetry          : {} (render with `dfrs report`)", p.display());
     }
     if args.flag("bound") {
         let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
@@ -304,6 +311,19 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
         }
         Some(d) => anyhow::bail!("replay of {path} diverged: {d}"),
     }
+}
+
+/// Render a telemetry file written with `--telemetry`: counter table, phase
+/// timings, per-job stretch extremes, and a time-series digest.
+pub fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: dfrs report FILE (a telemetry file written with --telemetry)")?;
+    let text = std::fs::read_to_string(Path::new(path)).with_context(|| format!("read {path}"))?;
+    let t = Telemetry::from_jsonl_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{}", crate::telemetry::report::render(&t));
+    Ok(())
 }
 
 pub fn cmd_bench(args: &Args) -> Result<()> {
@@ -720,7 +740,12 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
         let trace = &traces[k];
         let scn = scenario::builtin(scenario_names[sc], trace).map_err(|e| anyhow::anyhow!(e))?;
         let mut policy = make_policy(algs[a], s.period)?;
-        let r = run_guarded(
+        // Counters-only telemetry on every cell: the recorder adds four
+        // engine-internal columns to the campaign CSV and the transparency
+        // contract (tests/telemetry.rs) guarantees the metrics themselves
+        // are unchanged. Counter values are exact in f64 (they stay far
+        // below 2^53), so checkpointed cells round-trip bit-identically.
+        let (r, tel) = run_instrumented(
             trace,
             policy.as_mut(),
             SimConfig::default(),
@@ -728,6 +753,7 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
             EngineKind::Indexed,
             &scn,
             &RunOptions::default(),
+            RecorderConfig::counters_only(),
         )?;
         Ok(vec![
             r.max_stretch,
@@ -735,19 +761,17 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
             r.interrupted_jobs as f64,
             r.preempt_per_job,
             r.avail_utilization,
+            tel.counter("events_total") as f64,
+            tel.counter("pack_probes") as f64,
+            tel.counter("opportunistic_starts") as f64,
+            tel.counter("requeue_penalties") as f64,
         ])
     })?;
     let per_scn = traces.len();
     let per_alg = scenario_names.len() * per_scn;
     for (a, alg) in algs.iter().enumerate() {
         for (sc, scn_name) in scenario_names.iter().enumerate() {
-            let mut cols = [
-                Summary::new(),
-                Summary::new(),
-                Summary::new(),
-                Summary::new(),
-                Summary::new(),
-            ];
+            let mut cols = [(); 9].map(|()| Summary::new());
             let mut row_error: Option<&str> = None;
             for k in 0..per_scn {
                 let o = &outcomes[a * per_alg + sc * per_scn + k];
@@ -762,7 +786,7 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
             }
             if let Some(e) = row_error {
                 println!("{:<40} {:<10} {:>11}", alg, scn_name, "FAILED");
-                csv.push(format!("{alg},{scn_name},,,,,,failed: {}", grid::sanitize(e)));
+                csv.push(format!("{alg},{scn_name},,,,,,,,,,failed: {}", grid::sanitize(e)));
                 continue;
             }
             println!(
@@ -776,19 +800,24 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
                 cols[4].mean()
             );
             csv.push(format!(
-                "{alg},{scn_name},{:.4},{:.4},{:.2},{:.4},{:.4},ok",
+                "{alg},{scn_name},{:.4},{:.4},{:.2},{:.4},{:.4},{:.1},{:.1},{:.1},{:.1},ok",
                 cols[0].mean(),
                 cols[1].mean(),
                 cols[2].mean(),
                 cols[3].mean(),
-                cols[4].mean()
+                cols[4].mean(),
+                cols[5].mean(),
+                cols[6].mean(),
+                cols[7].mean(),
+                cols[8].mean()
             ));
         }
     }
     grid::report_failures(&outcomes);
     write_csv(
         &dir.join("scenarios.csv"),
-        "algorithm,scenario,max_stretch,avg_stretch,interrupted,pmtn_job,avail_util,status",
+        "algorithm,scenario,max_stretch,avg_stretch,interrupted,pmtn_job,avail_util,\
+         events,pack_probes,opp_starts,requeues,status",
         &csv,
     )
 }

@@ -59,7 +59,10 @@ impl FaultPolicy {
 pub struct CellOutcome {
     /// Stable cell key (also the checkpoint record key).
     pub key: String,
-    /// Metric values on success, empty on failure.
+    /// Metric values on success, empty on failure. Harnesses may append
+    /// telemetry counter columns after the metrics; u64 counters are exact
+    /// in f64 (they stay far below 2^53), so checkpointed cells restore
+    /// them bit-identically.
     pub values: Vec<f64>,
     /// Error string of the last attempt, `None` on success.
     pub error: Option<String>,
@@ -344,6 +347,18 @@ mod tests {
         std::fs::write(&path, format!("{{\"key\":\"b\",\"val\n{good}\n")).unwrap();
         assert!(load_checkpoint(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn counter_values_round_trip_exactly_through_checkpoints() {
+        // Telemetry counters ride in the values vec as f64 (scenario-grid
+        // CSV columns); any u64 below 2^53 is exact and the bit-pattern
+        // encoding preserves it across checkpoint/resume.
+        for v in [0u64, 1, 97, 1_048_575, (1 << 53) - 1] {
+            let f = v as f64;
+            assert_eq!(parse_bits(&fmt_bits(f)).unwrap().to_bits(), f.to_bits());
+            assert_eq!(f as u64, v);
+        }
     }
 
     #[test]

@@ -41,6 +41,11 @@ COMMANDS
                                     event; abort on the first violation
                   --trace-out PATH  record a replayable event trace
                                     (JSON lines; see `dfrs replay`)
+                  --telemetry PATH  record counters, per-job lifecycle
+                                    edges, time-series samples, and phase
+                                    timings to PATH (JSON lines; a
+                                    PATH.series.csv sibling holds the time
+                                    series; see `dfrs report`)
   bench TARGET  Regenerate a paper table/figure, or run the scenario grid:
                   table2 | table3 | table4 | fig1 | fig2 | fig3 | fig4 |
                   fig9 | ablation | scenarios | all
@@ -67,6 +72,9 @@ COMMANDS
   replay FILE   Re-execute a trace recorded with --trace-out and diff the
                 replayed run against the recording (exit nonzero on any
                 divergence)
+  report FILE   Render a telemetry file written with --telemetry: counter
+                table, phase timings, per-job stretch extremes, and a
+                time-series digest
   bound         Offline max-stretch lower bound for a generated trace
                   --jobs N --seed S --workload KIND --swf PATH
   gen           Generate a trace and write SWF to stdout or --out FILE
@@ -90,7 +98,7 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
         "simulate" => (
             &[
                 "alg", "workload", "swf", "jobs", "load", "seed", "period", "solver", "engine",
-                "scenario", "trace-out",
+                "scenario", "trace-out", "telemetry",
             ],
             &["bound", "audit"],
         ),
@@ -102,6 +110,7 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
             &["full", "resume"],
         ),
         "replay" => (&[], &[]),
+        "report" => (&[], &[]),
         "bound" => (&["jobs", "seed", "workload", "swf"], &[]),
         "gen" => (&["jobs", "seed", "workload", "swf", "out"], &[]),
         "list-algs" => (&[], &[]),
@@ -119,6 +128,7 @@ pub fn run_cli(args: Args) -> Result<()> {
         "simulate" => experiments::cmd_simulate(&args),
         "bench" => experiments::cmd_bench(&args),
         "replay" => experiments::cmd_replay(&args),
+        "report" => experiments::cmd_report(&args),
         "bound" => experiments::cmd_bound(&args),
         "gen" => experiments::cmd_gen(&args),
         "list-algs" => {
@@ -169,6 +179,8 @@ mod tests {
             "--resume",
             "--retries",
             "replay",
+            "--telemetry",
+            "report",
         ] {
             assert!(USAGE.contains(needle), "USAGE must document {needle}");
         }

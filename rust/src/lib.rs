@@ -43,5 +43,6 @@ pub mod runtime;
 pub mod scenario;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -8,7 +8,13 @@ use crate::workload::Trace;
 
 /// Degradation from bound (§6.1): max bounded stretch achieved divided by
 /// the offline lower bound for the instance.
+///
+/// An empty trace has nothing to degrade: the ratio is vacuously 1.0 and
+/// the bound solver (which assumes at least one job) is never consulted.
 pub fn degradation(result: &SimResult, trace: &Trace, tau: f64) -> f64 {
+    if trace.jobs.is_empty() {
+        return 1.0;
+    }
     let b = max_stretch_lower_bound(trace, tau, 1e-3);
     result.max_stretch / b.max(1.0)
 }
@@ -37,11 +43,21 @@ impl TableRow {
     }
 }
 
-/// Print a full table in the paper's layout.
+/// Name-column width for a table: the longest algorithm name in the row
+/// set (minimum 20), so a long-named policy widens the whole column rather
+/// than overflowing it and shearing the numeric columns.
+pub fn name_width(rows: &[TableRow]) -> usize {
+    rows.iter().map(|r| r.algorithm.len()).max().unwrap_or(20).max(20)
+}
+
+/// Print a full table in the paper's layout. Every line — separator,
+/// header, rows — is exactly `name_width + 39` characters (three 12-wide
+/// numeric columns, each preceded by one space), so columns stay aligned
+/// at any name length.
 pub fn print_table(title: &str, rows: &[TableRow]) {
-    let w = rows.iter().map(|r| r.algorithm.len()).max().unwrap_or(20).max(20);
+    let w = name_width(rows);
     println!("\n{title}");
-    println!("{:-<width$}", "", width = w + 40);
+    println!("{:-<width$}", "", width = w + 39);
     println!("{:<w$} {:>12} {:>12} {:>12}", "Algorithm", "avg.", "std.", "max", w = w);
     for r in rows {
         println!("{}", r.format(w));
@@ -121,6 +137,34 @@ mod tests {
         assert!(s.contains("EASY"));
         assert!(s.contains("2.0"));
         assert!(s.contains("3.0"));
+    }
+
+    #[test]
+    fn long_names_widen_the_whole_table() {
+        let long = "GreedyPM */per/OPT=MIN/MINVT=600/and-an-extremely-long-variant-suffix";
+        let mut a = TableRow::new("EASY");
+        a.summary.extend([1.0, 2.0]);
+        let mut b = TableRow::new(long);
+        b.summary.extend([3.0, 4.0]);
+        let rows = vec![a, b];
+        let w = name_width(&rows);
+        assert_eq!(w, long.len(), "width follows the longest name past the default");
+        let ra = rows[0].format(w);
+        let rb = rows[1].format(w);
+        assert_eq!(ra.len(), rb.len(), "rows align at any name length:\n{ra}\n{rb}");
+        assert_eq!(ra.len(), w + 39, "row width = name width + three 13-char columns");
+        // Short row sets keep the default width.
+        assert_eq!(name_width(&rows[..1]), 20);
+        assert_eq!(name_width(&[]), 20);
+    }
+
+    #[test]
+    fn degradation_empty_trace_is_sane() {
+        let t = simple_trace();
+        let r = run(&t, &mut BatchPolicy::fcfs(), SimConfig::default(), Box::new(RustSolver));
+        let empty = Trace { jobs: Vec::new(), nodes: 1, cores_per_node: 1, node_mem_gb: 1.0 };
+        let d = degradation(&r, &empty, 10.0);
+        assert_eq!(d, 1.0, "empty trace: vacuous degradation, no bound solve");
     }
 
     #[test]

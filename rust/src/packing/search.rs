@@ -19,6 +19,7 @@
 use super::mcb8::{pack_into, PackJob, PackScratch, SortKey};
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
+use crate::telemetry::Counter;
 
 /// Remap-limiting rule (§4.3 "Limiting Migration").
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -188,13 +189,16 @@ pub fn mcb8_allocate_prepared(
             return Mcb8Outcome::empty(dropped);
         }
         // Fast path: everything fits at full yield.
+        sim.probe.count(Counter::PackProbes, 1);
         if probe(1.0, jobs, needs, nodes, blocked, pack) {
             let mapping = materialize(jobs, pack.slab(), pack.offsets());
             return Mcb8Outcome { mapping, yield_achieved: 1.0, dropped };
         }
         // Memory-only feasibility (Y -> 0). If even that fails, drop the
         // lowest-priority candidate and retry with the rest.
+        sim.probe.count(Counter::PackProbes, 1);
         if !probe(0.0, jobs, needs, nodes, blocked, pack) {
+            sim.probe.count(Counter::PackDropRestarts, 1);
             let victim = jobs
                 .pop()
                 .expect("mcb8_allocate: memory-only probe failed on an empty candidate list")
@@ -207,6 +211,7 @@ pub fn mcb8_allocate_prepared(
         let (mut lo, mut hi) = (0.0f64, 1.0f64);
         while hi - lo > ACCURACY {
             let mid = 0.5 * (lo + hi);
+            sim.probe.count(Counter::PackProbes, 1);
             if probe(mid, jobs, needs, nodes, blocked, pack) {
                 pack.save_to(best_slab, best_offsets);
                 lo = mid;
@@ -319,6 +324,7 @@ impl RepackCache {
             // The transparency oracle: no fingerprinting, no skipping —
             // just the scratch-reusing allocation.
             self.misses += 1;
+            sim.probe.count(Counter::RepackCacheMisses, 1);
             self.outcome = mcb8_allocate_prepared(sim, pin, &self.cand, &mut self.scratch);
             return &self.outcome;
         }
@@ -333,9 +339,11 @@ impl RepackCache {
             && self.pins_unchanged(sim, pin)
         {
             self.hits += 1;
+            sim.probe.count(Counter::RepackCacheHits, 1);
             return &self.outcome;
         }
         self.misses += 1;
+        sim.probe.count(Counter::RepackCacheMisses, 1);
 
         // Refresh the fingerprint, then recompute.
         self.key_epoch = sim.cluster.epoch;

@@ -59,6 +59,21 @@ pub enum ClusterEvent {
     Grow(usize),
 }
 
+impl ClusterEvent {
+    /// Stable kind label, used by telemetry meta records and per-kind
+    /// scenario counters (`telemetry::Counter::for_cluster_event`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ClusterEvent::Fail(_) => "fail",
+            ClusterEvent::Repair(_) => "repair",
+            ClusterEvent::DrainStart(_) => "drain_start",
+            ClusterEvent::DrainEnd(_) => "drain_end",
+            ClusterEvent::Shrink(_) => "shrink",
+            ClusterEvent::Grow(_) => "grow",
+        }
+    }
+}
+
 /// A declarative platform scenario: timed cluster events plus arrival-rate
 /// modulation. `Scenario::default()` is the empty scenario (static,
 /// always-healthy platform — today's behaviour, bit for bit).

@@ -17,6 +17,7 @@
 //! [`PlacementState`] trait is the common interface.
 
 use crate::sim::{Cluster, JobId, NodeId, Sim};
+use crate::telemetry::Counter;
 
 /// Minimal node-capacity view a Greedy placement trial needs. The `job`
 /// parameter exists so the [`Cluster`] implementation can keep its task
@@ -297,6 +298,7 @@ pub fn opportunistic_start(sim: &mut Sim) {
             let mut shadow = sim.cluster.clone();
             if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
                 sim.start_job(w, pl);
+                sim.probe.count(Counter::OpportunisticStarts, 1);
             }
         }
         return;
@@ -324,6 +326,7 @@ pub fn opportunistic_start(sim: &mut Sim) {
         let mut shadow = ShadowLoads::of(&sim.cluster);
         if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
             sim.start_job(w, pl);
+            sim.probe.count(Counter::OpportunisticStarts, 1);
             free_cap = max_free(&sim.cluster);
         }
     }

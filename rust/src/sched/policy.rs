@@ -8,6 +8,7 @@ use super::Policy;
 use crate::alloc::{reallocate, OptMode};
 use crate::packing::search::{PinRule, RepackCache};
 use crate::sim::{JobId, PlatformChange, Sim};
+use crate::telemetry::Phase;
 
 /// Action on job submission (column 2 of Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,12 +72,15 @@ impl DfrsPolicy {
     }
 
     fn run_mcb8(&mut self, sim: &mut Sim) {
+        let span = sim.probe.span_begin();
         let out = self.repack.allocate(sim, self.pin);
         sim.apply_mapping(&out.mapping);
         self.alloc(sim);
+        sim.probe.span_end(Phase::Repack, span);
     }
 
     fn run_mcb8_stretch(&mut self, sim: &mut Sim) {
+        let span = sim.probe.span_begin();
         let out =
             mcb8_stretch_allocate_into(sim, self.period, self.pin, &mut self.stretch_scratch);
         sim.apply_mapping(&out.mapping);
@@ -96,6 +100,7 @@ impl DfrsPolicy {
                 sim.set_yield(j, y);
             }
         }
+        sim.probe.span_end(Phase::StretchSolve, span);
     }
 }
 

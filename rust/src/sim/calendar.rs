@@ -36,6 +36,11 @@ impl Ord for TimeKey {
 #[derive(Debug, Clone, Default)]
 pub struct EventCalendar {
     heap: BinaryHeap<Reverse<(TimeKey, JobId)>>,
+    /// Entries removed while still valid (consumed or expired past cutoff).
+    pops: u64,
+    /// Entries removed because the validity predicate rejected them — the
+    /// lazy-invalidation work the calendar absorbs instead of eager deletes.
+    stale: u64,
 }
 
 impl EventCalendar {
@@ -56,10 +61,16 @@ impl EventCalendar {
     /// penalty expiry only moves forward, re-scheduling a fresh entry).
     pub fn next_after(&mut self, cutoff: f64, valid: impl Fn(JobId, f64) -> bool) -> f64 {
         while let Some(&Reverse((TimeKey(t), j))) = self.heap.peek() {
-            if t > cutoff && valid(j, t) {
+            let ok = valid(j, t);
+            if t > cutoff && ok {
                 return t;
             }
             self.heap.pop();
+            if ok {
+                self.pops += 1;
+            } else {
+                self.stale += 1;
+            }
         }
         f64::INFINITY
     }
@@ -84,9 +95,19 @@ impl EventCalendar {
             }
             self.heap.pop();
             if valid(j, t) {
+                self.pops += 1;
                 out.push(j);
+            } else {
+                self.stale += 1;
             }
         }
+    }
+
+    /// Lifetime `(pops, stale)` removal counts — telemetry's
+    /// `calendar_pops` / `calendar_invalidations` counters sum these over
+    /// the engine's calendars at the end of a run.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.pops, self.stale)
     }
 
     pub fn len(&self) -> usize {
@@ -159,6 +180,20 @@ mod tests {
         c.pop_due(100.0, |_, _| true, &mut out);
         assert_eq!(out, vec![2]);
         assert!(c.is_empty());
+    }
+
+    #[test]
+    fn stats_classify_valid_pops_and_stale_discards() {
+        let mut c = EventCalendar::new();
+        c.schedule(10.0, 0); // due + valid
+        c.schedule(15.0, 3); // due + stale
+        c.schedule(30.0, 2); // future
+        let mut out = Vec::new();
+        c.pop_due(20.0, |j, _| j != 3, &mut out);
+        assert_eq!(c.stats(), (1, 1));
+        // next_after discards a stale future entry permanently.
+        assert_eq!(c.next_after(0.0, |j, _| j != 2), f64::INFINITY);
+        assert_eq!(c.stats(), (1, 2));
     }
 
     #[test]

@@ -56,6 +56,9 @@ pub use state::{Cluster, IndexSet, JobId, JobSim, JobState, NodeId};
 use crate::alloc::YieldSolver;
 use crate::error::{DfrsError, SimSnapshot};
 use crate::scenario::{ClusterEvent, Scenario};
+use crate::telemetry::{
+    Counter, JobEdge, Phase, ProbeHandle, Recorder, RecorderConfig, Segment, Telemetry,
+};
 use crate::workload::Trace;
 use calendar::EventCalendar;
 use std::path::PathBuf;
@@ -119,6 +122,11 @@ pub struct RunOptions {
     /// Record the modulated trace, scenario timeline, per-event step log
     /// and final result digest to this JSON-lines file.
     pub trace_out: Option<PathBuf>,
+    /// Install a telemetry [`Recorder`] and write its JSONL export here
+    /// (plus a `<path>.series.csv` sibling with the sampled time series).
+    /// `None` (the default) runs with [`crate::telemetry::NoopProbe`] — the
+    /// statically zero-overhead path.
+    pub telemetry: Option<PathBuf>,
 }
 
 /// Which event-loop implementation a run uses. Indexed and Reference
@@ -206,6 +214,11 @@ pub struct Sim {
     pub jobs: Vec<JobSim>,
     pub now: f64,
     pub solver: Box<dyn YieldSolver>,
+    /// Observability hook ([`crate::telemetry`]). Defaults to the no-op probe;
+    /// `run_core` installs a [`Recorder`] when telemetry is requested.
+    /// Probes only observe — installing one must never change a result
+    /// (`tests/telemetry.rs` proves it).
+    pub probe: ProbeHandle,
     // Indexed state (DESIGN.md §Engine internals). The sets are maintained
     // in both engine modes; the reference mode simply ignores them on the
     // query/scan paths.
@@ -316,6 +329,7 @@ impl Sim {
             jobs,
             now: 0.0,
             solver,
+            probe: ProbeHandle::default(),
             running_set: IndexSet::new(),
             paused_set: IndexSet::new(),
             pending_set,
@@ -385,12 +399,23 @@ impl Sim {
         job.spec.tasks as f64 * job.spec.cpu_need * job.yield_now
     }
 
+    /// Emit a lifecycle edge for job `j` at the current instant. Probe-off
+    /// this is a single predicted-not-taken branch — the virtual-time
+    /// materialization only happens when a recorder is installed.
+    fn record_edge(&self, edge: JobEdge, j: JobId) {
+        if self.probe.active() {
+            let (vt, yld) = (self.vt(j), self.jobs[j].yield_now);
+            self.probe.job_edge(edge, j, self.now, vt, yld, 0.0);
+        }
+    }
+
     /// Lazy engine: fold the accrual since the snapshot into `vt` and
     /// restart the segment at `now`. Must precede any yield or penalty
     /// change (the formula in [`Sim::vt`] assumes both are constant over
     /// the segment).
     fn touch_clock(&mut self, j: JobId) {
         debug_assert!(self.lazy);
+        self.probe.count(Counter::LazyClockMaterializations, 1);
         let v = self.vt(j);
         self.jobs[j].vt = v;
         self.snap_time[j] = self.now;
@@ -550,6 +575,7 @@ impl Sim {
                 self.demand_rate += self.jobs[j].spec.tasks as f64 * self.jobs[j].spec.cpu_need;
             }
         }
+        self.record_edge(JobEdge::Submit, j);
     }
 
     /// Assign a rescheduling penalty ending at `until` and register the
@@ -588,6 +614,8 @@ impl Sim {
     /// is unconditional.
     pub fn apply_cluster_event(&mut self, ev: &ClusterEvent, change: &mut PlatformChange) {
         self.cluster.epoch += 1;
+        self.probe.count(Counter::EpochBumps, 1);
+        self.probe.count(Counter::for_cluster_event(ev), 1);
         match *ev {
             ClusterEvent::Fail(n) => self.fail_node(n, change),
             ClusterEvent::Repair(n) => self.repair_node(n, change),
@@ -688,6 +716,8 @@ impl Sim {
                 Some(n) => self.cluster.up[n] = true,
                 None => {
                     self.cluster.add_node();
+                    // add_node bumps the platform epoch a second time.
+                    self.probe.count(Counter::EpochBumps, 1);
                 }
             }
             self.avail_nodes += 1;
@@ -700,6 +730,9 @@ impl Sim {
     /// image is written — the job restarts from scratch.
     fn kill_job(&mut self, j: JobId) {
         debug_assert!(matches!(self.jobs[j].state, JobState::Running), "kill of non-running job");
+        // The edge carries the progress *lost* to the kill, so it is
+        // emitted before the reset below zeroes the virtual time.
+        self.record_edge(JobEdge::Kill, j);
         if self.lazy {
             // Progress is lost anyway; only the rate retirement matters.
             self.set_rate_active(j, false);
@@ -757,10 +790,21 @@ impl Sim {
             // it still costs the rescheduling penalty.
             self.set_penalty(j, self.now + self.cfg.reschedule_penalty);
         }
+        if requeued && !was_paused {
+            self.probe.count(Counter::RequeuePenalties, 1);
+        }
         self.jobs[j].requeue_penalty = false;
         if self.jobs[j].first_start.is_none() {
             self.jobs[j].first_start = Some(self.now);
         }
+        let edge = if was_paused {
+            JobEdge::Resume
+        } else if requeued {
+            JobEdge::Requeue
+        } else {
+            JobEdge::Start
+        };
+        self.record_edge(edge, j);
     }
 
     /// Preempt a running job: free its resources, save its image.
@@ -770,6 +814,7 @@ impl Sim {
             "pause_job on {:?}",
             self.jobs[j].state
         );
+        self.record_edge(JobEdge::Pause, j);
         if self.lazy {
             self.lazy_on_stop(j);
         }
@@ -815,6 +860,7 @@ impl Sim {
         self.migrations += 1;
         // Save + restore of the moved tasks.
         self.gb_moved += 2.0 * moved as f64 * mem * self.node_mem_gb;
+        self.record_edge(JobEdge::Migrate, j);
     }
 
     /// Atomically re-map the cluster to a desired global mapping
@@ -888,6 +934,7 @@ impl Sim {
                         self.set_penalty(j, now + penalty);
                         self.migrations += 1;
                         self.gb_moved += 2.0 * moved as f64 * mem * self.node_mem_gb;
+                        self.record_edge(JobEdge::Migrate, j);
                     }
                     self.jobs[j].placement.clone_from(new_pl);
                 }
@@ -896,18 +943,25 @@ impl Sim {
                     self.jobs[j].placement.clone_from(new_pl);
                     self.set_penalty(j, now + penalty);
                     self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
+                    self.record_edge(JobEdge::Resume, j);
                 }
                 JobState::Pending => {
                     self.set_state(j, JobState::Running);
                     self.jobs[j].placement.clone_from(new_pl);
-                    if self.jobs[j].requeue_penalty {
+                    let requeued = self.jobs[j].requeue_penalty;
+                    if requeued {
                         // Killed-and-requeued: restart pays the penalty.
                         self.set_penalty(j, now + penalty);
                         self.jobs[j].requeue_penalty = false;
+                        self.probe.count(Counter::RequeuePenalties, 1);
                     }
                     if self.jobs[j].first_start.is_none() {
                         self.jobs[j].first_start = Some(now);
                     }
+                    self.record_edge(
+                        if requeued { JobEdge::Requeue } else { JobEdge::Start },
+                        j,
+                    );
                 }
                 JobState::Done => panic!("mapping names completed job {j}"),
             }
@@ -915,6 +969,7 @@ impl Sim {
         // Phase 3: running jobs not in the mapping are preempted.
         for &j in &running {
             if !named.contains(&j) {
+                self.record_edge(JobEdge::Pause, j);
                 self.set_state(j, JobState::Paused);
                 let job = &mut self.jobs[j];
                 job.placement.clear();
@@ -1006,6 +1061,7 @@ impl Sim {
                         self.set_penalty(j, now + penalty);
                         self.migrations += 1;
                         self.gb_moved += 2.0 * m as f64 * mem * self.node_mem_gb;
+                        self.record_edge(JobEdge::Migrate, j);
                     }
                     // m == 0: untouched — the point of the delta path.
                 }
@@ -1020,6 +1076,7 @@ impl Sim {
                     self.lazy_on_start(j);
                     self.set_penalty(j, now + penalty);
                     self.gb_moved += self.jobs[j].spec.tasks as f64 * mem * self.node_mem_gb;
+                    self.record_edge(JobEdge::Resume, j);
                 }
                 JobState::Pending => {
                     let need = self.jobs[j].spec.cpu_need;
@@ -1030,13 +1087,19 @@ impl Sim {
                     self.set_state(j, JobState::Running);
                     self.jobs[j].placement.clone_from(new_pl);
                     self.lazy_on_start(j);
-                    if self.jobs[j].requeue_penalty {
+                    let requeued = self.jobs[j].requeue_penalty;
+                    if requeued {
                         self.set_penalty(j, now + penalty);
                         self.jobs[j].requeue_penalty = false;
+                        self.probe.count(Counter::RequeuePenalties, 1);
                     }
                     if self.jobs[j].first_start.is_none() {
                         self.jobs[j].first_start = Some(now);
                     }
+                    self.record_edge(
+                        if requeued { JobEdge::Requeue } else { JobEdge::Start },
+                        j,
+                    );
                 }
                 JobState::Done => unreachable!(),
             }
@@ -1044,6 +1107,7 @@ impl Sim {
         // Phase 3: preemption victims, ascending id order (preempt was
         // drawn from the sorted running set before phase 2 mutated it).
         for &j in &preempt {
+            self.record_edge(JobEdge::Pause, j);
             self.lazy_on_stop(j);
             self.set_state(j, JobState::Paused);
             let job = &mut self.jobs[j];
@@ -1205,6 +1269,19 @@ impl Sim {
             self.due_scratch = due;
             let cap = self.avail_nodes as f64;
             let util = self.util_rate;
+            if self.probe.active() {
+                self.probe.segment(Segment {
+                    t0: self.now,
+                    t1: t,
+                    demand: self.demand_rate,
+                    util,
+                    cap,
+                    running: self.running_set.len(),
+                    paused: self.paused_set.len(),
+                    pending: self.pending_ids().len(),
+                    up_nodes: self.avail_nodes,
+                });
+            }
             self.underutil_area += (self.demand_rate.min(cap) - util).max(0.0) * dt;
             self.util_area += util * dt;
             self.avail_node_seconds += cap * dt;
@@ -1270,6 +1347,21 @@ impl Sim {
             // static platform this equals `cluster.nodes` and every term
             // below is bit-identical with the pre-scenario engine.
             let cap = self.avail_nodes as f64;
+            if self.probe.active() {
+                // The index sets are maintained in every engine mode, so
+                // the sampler's counts are valid under full_scan too.
+                self.probe.segment(Segment {
+                    t0: now,
+                    t1: t,
+                    demand,
+                    util,
+                    cap,
+                    running: self.running_set.len(),
+                    paused: self.paused_set.len(),
+                    pending: self.pending_ids().len(),
+                    up_nodes: self.avail_nodes,
+                });
+            }
             self.underutil_area += (demand.min(cap) - util).max(0.0) * dt;
             self.util_area += util * dt;
             self.avail_node_seconds += cap * dt;
@@ -1356,6 +1448,7 @@ impl Sim {
     }
 
     fn finish_job(&mut self, j: JobId) {
+        let yld_at_finish = self.jobs[j].yield_now;
         if self.lazy {
             // Materialize the final virtual time (≈ proc_time) and retire
             // the job's rate before the state flips.
@@ -1373,6 +1466,14 @@ impl Sim {
         job.completion = Some(self.now);
         if self.lazy {
             self.refresh_prediction(j);
+        }
+        if self.probe.active() {
+            // The completion edge carries the job's exact bounded stretch —
+            // the recorder's stretch-so-far sampler and `dfrs report`'s
+            // extremes table both derive from it.
+            let stretch = self.bounded_stretch(j);
+            self.probe
+                .job_edge(JobEdge::Complete, j, self.now, self.jobs[j].vt, yld_at_finish, stretch);
         }
     }
 
@@ -1605,6 +1706,46 @@ pub fn run_guarded(
     scenario: &Scenario,
     opts: &RunOptions,
 ) -> Result<SimResult, DfrsError> {
+    // `--telemetry` installs a default recorder; otherwise the run is on
+    // the zero-overhead noop path.
+    let rec = opts.telemetry.as_ref().map(|_| RecorderConfig::default());
+    let (result, _telemetry) =
+        run_guarded_inner(trace, policy, cfg, solver, engine, scenario, opts, rec)?;
+    Ok(result)
+}
+
+/// [`run_guarded`] with a telemetry [`Recorder`] installed: returns the
+/// result *and* the recording. `opts.telemetry`, when set, still controls
+/// whether the recording is also written to disk. The result is guaranteed
+/// identical to an uninstrumented run — probes observe, never mutate
+/// (`tests/telemetry.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_instrumented(
+    trace: &Trace,
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+    engine: EngineKind,
+    scenario: &Scenario,
+    opts: &RunOptions,
+    rec: RecorderConfig,
+) -> Result<(SimResult, Telemetry), DfrsError> {
+    let (result, telemetry) =
+        run_guarded_inner(trace, policy, cfg, solver, engine, scenario, opts, Some(rec))?;
+    Ok((result, telemetry.expect("recorder was installed")))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_guarded_inner(
+    trace: &Trace,
+    policy: &mut dyn crate::sched::Policy,
+    cfg: SimConfig,
+    solver: Box<dyn YieldSolver>,
+    engine: EngineKind,
+    scenario: &Scenario,
+    opts: &RunOptions,
+    rec: Option<RecorderConfig>,
+) -> Result<(SimResult, Option<Telemetry>), DfrsError> {
     let modulated;
     let trace = if scenario.modulates_arrivals() {
         modulated = scenario.modulate_arrivals(trace);
@@ -1615,6 +1756,8 @@ pub fn run_guarded(
     let timeline = scenario.timeline();
     let mut steps = Vec::new();
     let capture = opts.trace_out.is_some();
+    let stretch_threshold = cfg.stretch_threshold;
+    let mut telemetry: Option<Telemetry> = None;
     let result = run_core(
         trace,
         &timeline,
@@ -1624,6 +1767,7 @@ pub fn run_guarded(
         engine,
         opts,
         if capture { Some(&mut steps) } else { None },
+        rec.map(|rc| (rc, &mut telemetry)),
     )?;
     if let Some(path) = &opts.trace_out {
         let rec = record::TraceRecord {
@@ -1632,13 +1776,46 @@ pub fn run_guarded(
             engine,
             scenario_name: scenario.name.clone(),
             trace: trace.clone(),
-            timeline,
+            timeline: timeline.clone(),
             steps,
             digest: record::ResultDigest::of(&result),
         };
         record::write_trace(path, &rec)?;
     }
-    Ok(result)
+    if let Some(t) = telemetry.as_mut() {
+        // Run identity, recorded ahead of the data so `dfrs report` can
+        // label its output. Everything here is a deterministic function of
+        // the run inputs.
+        t.meta.push(("algorithm".into(), policy.name()));
+        t.meta.push(("engine".into(), record::engine_str(engine).into()));
+        let scn = if scenario.name.is_empty() { "none" } else { scenario.name.as_str() };
+        t.meta.push(("scenario".into(), scn.into()));
+        t.meta.push(("jobs".into(), trace.jobs.len().to_string()));
+        t.meta.push(("nodes".into(), trace.nodes.to_string()));
+        t.meta.push(("stretch_threshold".into(), format!("{stretch_threshold}")));
+        t.meta.push(("scenario_events".into(), timeline.len().to_string()));
+        let mut kinds: std::collections::BTreeMap<&'static str, usize> = Default::default();
+        for (_, ev) in &timeline {
+            *kinds.entry(ev.kind_name()).or_default() += 1;
+        }
+        for (kind, count) in kinds {
+            t.meta.push((format!("timeline_{kind}"), count.to_string()));
+        }
+        if let Some(path) = &opts.telemetry {
+            t.write(path).map_err(|e| DfrsError::io(path, e))?;
+            let series = path_with_suffix(path, ".series.csv");
+            std::fs::write(&series, t.series_csv()).map_err(|e| DfrsError::io(&series, e))?;
+        }
+    }
+    Ok((result, telemetry))
+}
+
+/// `<path>` → `<path><suffix>` (appended to the full file name, so the
+/// telemetry JSONL and its series CSV sit side by side).
+fn path_with_suffix(path: &std::path::Path, suffix: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(suffix);
+    PathBuf::from(s)
 }
 
 /// Summarize simulator progress for a watchdog error payload.
@@ -1682,11 +1859,15 @@ fn run_core(
     engine: EngineKind,
     opts: &RunOptions,
     mut steps: Option<&mut Vec<record::StepRecord>>,
+    mut telemetry: Option<(RecorderConfig, &mut Option<Telemetry>)>,
 ) -> Result<SimResult, DfrsError> {
     let budget = &opts.budget;
     let mut scn_idx = 0usize;
 
     let mut sim = Sim::new_with(trace, cfg, solver, engine);
+    if let Some((rc, _)) = &telemetry {
+        sim.probe = ProbeHandle::Recorder(Box::new(Recorder::new(rc.clone())));
+    }
     let n = sim.jobs.len();
     let mut next_submit_idx = 0usize;
     let period = policy.period();
@@ -1701,6 +1882,8 @@ fn run_core(
 
     while completed < n {
         events += 1;
+        sim.probe.count(Counter::EventsTotal, 1);
+        let dispatch_span = sim.probe.span_begin();
         if events > budget.max_events {
             return Err(DfrsError::BudgetExhausted {
                 budget: "max_events",
@@ -1709,6 +1892,7 @@ fn run_core(
             });
         }
         if budget.max_wall_secs.is_finite() && events % 1024 == 0 {
+            sim.probe.count(Counter::WatchdogPolls, 1);
             let wall = wall_start.elapsed().as_secs_f64();
             if wall > budget.max_wall_secs {
                 return Err(DfrsError::BudgetExhausted {
@@ -1767,6 +1951,9 @@ fn run_core(
         // credited with the completion).
         let done = sim.complete_ready_jobs();
         completed += done.len();
+        if !done.is_empty() {
+            sim.probe.count(Counter::EventsCompletion, done.len() as u64);
+        }
         for &j in &done {
             policy.on_complete(&mut sim, j);
         }
@@ -1774,6 +1961,7 @@ fn run_core(
         // batch, then give the policy a single recovery callback.
         let mut scn_applied = 0usize;
         if scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
+            let scenario_span = sim.probe.span_begin();
             let mut change = PlatformChange::default();
             while scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
                 let ev = timeline[scn_idx].1;
@@ -1781,11 +1969,13 @@ fn run_core(
                 scn_idx += 1;
                 scn_applied += 1;
             }
+            sim.probe.count(Counter::EventsScenario, scn_applied as u64);
             // Per-event victim runs are each sorted; restore the documented
             // global ascending-id order across the whole batch.
             change.killed.sort_unstable();
             change.preempted.sort_unstable();
             policy.on_platform_change(&mut sim, &change);
+            sim.probe.span_end(Phase::ScenarioApply, scenario_span);
         }
         // 3. Submissions.
         let submit_start = next_submit_idx;
@@ -1795,10 +1985,14 @@ fn run_core(
             sim.mark_submitted(j);
             policy.on_submit(&mut sim, j);
         }
+        if next_submit_idx > submit_start {
+            sim.probe.count(Counter::EventsSubmission, (next_submit_idx - submit_start) as u64);
+        }
         // 4. Periodic tick.
         let mut ticked = false;
         if let (Some(t), Some(p)) = (next_tick, period) {
             if t <= sim.now + 1e-9 {
+                sim.probe.count(Counter::EventsTick, 1);
                 policy.on_tick(&mut sim);
                 next_tick = Some(t + p);
                 ticked = true;
@@ -1815,6 +2009,23 @@ fn run_core(
         }
         if let Some(a) = auditor.as_mut() {
             a.check(&sim, next_submit_idx)?;
+        }
+        sim.probe.span_end(Phase::EventDispatch, dispatch_span);
+    }
+
+    // Hand the recording back before `sim.jobs` moves into the result. The
+    // calendars' lifetime pop/stale counts fold in here — they accumulate
+    // internally (probe-off runs pay nothing) and only become counters at
+    // the end of an instrumented run.
+    if let Some((_, out)) = telemetry.take() {
+        let (p0, s0) = sim.penalties.stats();
+        let (p1, s1) = sim.predictions.stats();
+        let (p2, s2) = sim.detections.stats();
+        let (p3, s3) = sim.activations.stats();
+        sim.probe.count(Counter::CalendarPops, p0 + p1 + p2 + p3);
+        sim.probe.count(Counter::CalendarInvalidations, s0 + s1 + s2 + s3);
+        if let ProbeHandle::Recorder(r) = std::mem::take(&mut sim.probe) {
+            *out = Some(r.into_telemetry());
         }
     }
 

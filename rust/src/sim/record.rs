@@ -114,7 +114,7 @@ pub struct ReplayReport {
     pub divergence: Option<String>,
 }
 
-fn engine_str(e: EngineKind) -> &'static str {
+pub(crate) fn engine_str(e: EngineKind) -> &'static str {
     match e {
         EngineKind::Indexed => "indexed",
         EngineKind::Reference => "reference",
@@ -412,6 +412,7 @@ pub fn replay_file(path: &Path) -> Result<ReplayReport, DfrsError> {
         rec.engine,
         &RunOptions::default(),
         Some(&mut steps),
+        None,
     )?;
     let divergence =
         diff_steps(&rec.steps, &steps).or_else(|| rec.digest.diff(&ResultDigest::of(&result)));

@@ -1,0 +1,857 @@
+//! Crate-wide observability: zero-overhead probes, counters, per-job
+//! lifecycle traces, time-series samplers and wall-clock span timing
+//! (DESIGN.md §Telemetry).
+//!
+//! The engine and packing layers call probe hooks through a
+//! [`ProbeHandle`] stored on the `Sim`. The default handle is
+//! [`NoopProbe`]: every hook is an `#[inline(always)]` empty body behind a
+//! two-variant enum match, so a probe-off run compiles to nothing on the
+//! hot paths — `benches/telemetry.rs` guards that claim, and the
+//! transparency suite (`tests/telemetry.rs`) proves that recording does not
+//! perturb `SimResult` either (probes only observe, never mutate).
+//!
+//! A [`Recorder`] captures four data shapes:
+//! - **counters** ([`Counter`]) for engine/packing internals — events per
+//!   source, lazy-clock materializations, calendar pops/invalidations,
+//!   repack-cache hits/misses, epoch bumps, pack probes, drop-restarts,
+//!   opportunistic starts, watchdog polls, requeue penalties, and scenario
+//!   events per kind;
+//! - **per-job lifecycle edges** ([`EdgeRecord`]) — submit / start /
+//!   resume / pause / migrate / kill / requeue / complete, each with the
+//!   virtual time and yield at the edge (stretch on completion), from which
+//!   per-job stretch/yield trajectories derive;
+//! - **time-series samples** ([`Sample`]) on a fixed virtual-time cadence —
+//!   demand, utilization, capacity, per-state job counts, up-node count,
+//!   and max/avg stretch-so-far;
+//! - **wall-clock spans** ([`Phase`]) — repack, stretch solve, event
+//!   dispatch and scenario application, aggregated into a flame-style
+//!   (calls, total seconds) summary.
+//!
+//! Sinks reuse [`crate::util::jsonl`]: floats are stored as IEEE-754 bit
+//! patterns, so every record except `kind=span` is byte-deterministic for a
+//! given run (spans carry wall-clock time and are therefore written last —
+//! the deterministic records form a prefix of the file). `dfrs report`
+//! renders a recorded file ([`report`]).
+
+pub mod report;
+
+use crate::scenario::ClusterEvent;
+use crate::sim::JobId;
+use crate::util::jsonl::{self, fmt_bits, parse_bits};
+use std::cell::{Cell, RefCell};
+use std::path::Path;
+use std::time::Instant;
+
+// ----------------------------------------------------------------- counters
+
+/// Counter catalog. Names are stable — they appear in telemetry files,
+/// campaign CSVs and DESIGN.md §Telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// Event-loop iterations.
+    EventsTotal,
+    /// Submission events processed.
+    EventsSubmission,
+    /// Completion events processed.
+    EventsCompletion,
+    /// Scenario (platform) events applied.
+    EventsScenario,
+    /// Periodic policy ticks.
+    EventsTick,
+    /// Lazy engine: clock segments folded by `touch_clock`.
+    LazyClockMaterializations,
+    /// Event-calendar entries popped as due (all four calendars).
+    CalendarPops,
+    /// Event-calendar entries discarded as stale (lazy invalidation).
+    CalendarInvalidations,
+    /// MCB8 repack-skip cache replays.
+    RepackCacheHits,
+    /// MCB8 repack-skip cache recomputes.
+    RepackCacheMisses,
+    /// Platform-epoch bumps (scenario events + pool growth).
+    EpochBumps,
+    /// Binary-search packing probes (`packing::search::probe`).
+    PackProbes,
+    /// MCB8 drop-restarts (memory-infeasible candidate dropped).
+    PackDropRestarts,
+    /// Jobs started by the opportunistic Greedy sweep (`*` algorithms).
+    OpportunisticStarts,
+    /// Wall-clock watchdog polls (`max_wall_secs` checks).
+    WatchdogPolls,
+    /// Rescheduling penalties charged to killed-and-requeued jobs.
+    RequeuePenalties,
+    /// Scenario events by kind.
+    ScenarioFail,
+    ScenarioRepair,
+    ScenarioDrainStart,
+    ScenarioDrainEnd,
+    ScenarioShrink,
+    ScenarioGrow,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 22] = [
+        Counter::EventsTotal,
+        Counter::EventsSubmission,
+        Counter::EventsCompletion,
+        Counter::EventsScenario,
+        Counter::EventsTick,
+        Counter::LazyClockMaterializations,
+        Counter::CalendarPops,
+        Counter::CalendarInvalidations,
+        Counter::RepackCacheHits,
+        Counter::RepackCacheMisses,
+        Counter::EpochBumps,
+        Counter::PackProbes,
+        Counter::PackDropRestarts,
+        Counter::OpportunisticStarts,
+        Counter::WatchdogPolls,
+        Counter::RequeuePenalties,
+        Counter::ScenarioFail,
+        Counter::ScenarioRepair,
+        Counter::ScenarioDrainStart,
+        Counter::ScenarioDrainEnd,
+        Counter::ScenarioShrink,
+        Counter::ScenarioGrow,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::EventsTotal => "events_total",
+            Counter::EventsSubmission => "events_submission",
+            Counter::EventsCompletion => "events_completion",
+            Counter::EventsScenario => "events_scenario",
+            Counter::EventsTick => "events_tick",
+            Counter::LazyClockMaterializations => "lazy_clock_materializations",
+            Counter::CalendarPops => "calendar_pops",
+            Counter::CalendarInvalidations => "calendar_invalidations",
+            Counter::RepackCacheHits => "repack_cache_hits",
+            Counter::RepackCacheMisses => "repack_cache_misses",
+            Counter::EpochBumps => "epoch_bumps",
+            Counter::PackProbes => "pack_probes",
+            Counter::PackDropRestarts => "pack_drop_restarts",
+            Counter::OpportunisticStarts => "opportunistic_starts",
+            Counter::WatchdogPolls => "watchdog_polls",
+            Counter::RequeuePenalties => "requeue_penalties",
+            Counter::ScenarioFail => "scenario_fail",
+            Counter::ScenarioRepair => "scenario_repair",
+            Counter::ScenarioDrainStart => "scenario_drain_start",
+            Counter::ScenarioDrainEnd => "scenario_drain_end",
+            Counter::ScenarioShrink => "scenario_shrink",
+            Counter::ScenarioGrow => "scenario_grow",
+        }
+    }
+
+    /// The per-kind counter a scenario event increments (the kind names come
+    /// from [`ClusterEvent::kind_name`]).
+    pub fn for_cluster_event(ev: &ClusterEvent) -> Counter {
+        match ev {
+            ClusterEvent::Fail(_) => Counter::ScenarioFail,
+            ClusterEvent::Repair(_) => Counter::ScenarioRepair,
+            ClusterEvent::DrainStart(_) => Counter::ScenarioDrainStart,
+            ClusterEvent::DrainEnd(_) => Counter::ScenarioDrainEnd,
+            ClusterEvent::Shrink(_) => Counter::ScenarioShrink,
+            ClusterEvent::Grow(_) => Counter::ScenarioGrow,
+        }
+    }
+}
+
+// ------------------------------------------------------------------- phases
+
+/// Wall-clock span phases (flame-style aggregation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Phase {
+    /// `DfrsPolicy::run_mcb8` — MCB8 allocate + mapping application.
+    Repack,
+    /// `DfrsPolicy::run_mcb8_stretch` — the stretch-optimizing solve.
+    StretchSolve,
+    /// One event-loop iteration (next-event search, advance, dispatch).
+    EventDispatch,
+    /// Scenario-event batch application + recovery callback.
+    ScenarioApply,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::Repack, Phase::StretchSolve, Phase::EventDispatch, Phase::ScenarioApply];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Repack => "repack",
+            Phase::StretchSolve => "stretch_solve",
+            Phase::EventDispatch => "event_dispatch",
+            Phase::ScenarioApply => "scenario_apply",
+        }
+    }
+}
+
+// -------------------------------------------------------------------- edges
+
+/// Job lifecycle transitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobEdge {
+    /// Submission event processed (job enters the demand integral).
+    Submit,
+    /// Fresh start of a pending job.
+    Start,
+    /// Resume of a paused job (storage read + penalty).
+    Resume,
+    /// Preemption of a running job (image saved).
+    Pause,
+    /// Migration of a running job (moved tasks saved + restored).
+    Migrate,
+    /// Killed by a node failure (progress lost, requeued pending).
+    Kill,
+    /// Restart of a killed-and-requeued job (penalty, no image read).
+    Requeue,
+    /// Completion.
+    Complete,
+}
+
+impl JobEdge {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobEdge::Submit => "submit",
+            JobEdge::Start => "start",
+            JobEdge::Resume => "resume",
+            JobEdge::Pause => "pause",
+            JobEdge::Migrate => "migrate",
+            JobEdge::Kill => "kill",
+            JobEdge::Requeue => "requeue",
+            JobEdge::Complete => "complete",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<JobEdge> {
+        Some(match s {
+            "submit" => JobEdge::Submit,
+            "start" => JobEdge::Start,
+            "resume" => JobEdge::Resume,
+            "pause" => JobEdge::Pause,
+            "migrate" => JobEdge::Migrate,
+            "kill" => JobEdge::Kill,
+            "requeue" => JobEdge::Requeue,
+            "complete" => JobEdge::Complete,
+            _ => return None,
+        })
+    }
+}
+
+/// One lifecycle transition: virtual time and yield at the edge; bounded
+/// stretch on [`JobEdge::Complete`] (0 elsewhere).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeRecord {
+    pub edge: JobEdge,
+    pub job: JobId,
+    pub t: f64,
+    pub vt: f64,
+    pub yield_now: f64,
+    pub stretch: f64,
+}
+
+// ------------------------------------------------------------------ samples
+
+/// One piecewise-constant segment of simulated time, as seen by
+/// [`Sim::advance`]: the integrand values are constant over `[t0, t1)` and
+/// the job counts are the state at `t0` (events fire after the advance).
+#[derive(Debug, Clone, Copy)]
+pub struct Segment {
+    pub t0: f64,
+    pub t1: f64,
+    pub demand: f64,
+    pub util: f64,
+    pub cap: f64,
+    pub running: usize,
+    pub paused: usize,
+    pub pending: usize,
+    pub up_nodes: usize,
+}
+
+/// One fixed-cadence sample of cluster state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub t: f64,
+    pub demand: f64,
+    pub util: f64,
+    pub cap: f64,
+    pub running: usize,
+    pub paused: usize,
+    pub pending: usize,
+    pub up_nodes: usize,
+    /// Max bounded stretch over jobs completed so far (0 if none yet).
+    pub max_stretch_so_far: f64,
+    /// Mean bounded stretch over jobs completed so far (0 if none yet).
+    pub avg_stretch_so_far: f64,
+}
+
+// -------------------------------------------------------------------- probe
+
+/// The observability hook contract. Every method has an empty
+/// `#[inline(always)]` default body, which is the whole zero-overhead
+/// argument for [`NoopProbe`]: a no-op implementation inherits bodies the
+/// optimizer deletes at the call site.
+pub trait Probe {
+    #[inline(always)]
+    fn count(&self, _c: Counter, _n: u64) {}
+    #[inline(always)]
+    fn job_edge(&self, _e: JobEdge, _j: JobId, _t: f64, _vt: f64, _yld: f64, _stretch: f64) {}
+    #[inline(always)]
+    fn segment(&self, _s: Segment) {}
+    #[inline(always)]
+    fn span_begin(&self) -> Option<Instant> {
+        None
+    }
+    #[inline(always)]
+    fn span_end(&self, _p: Phase, _t0: Option<Instant>) {}
+}
+
+/// The statically-zero-overhead default probe.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopProbe;
+
+impl Probe for NoopProbe {}
+
+/// The probe installed on a `Sim`. A two-variant enum instead of a trait
+/// object: hook calls dispatch on a branch the predictor never misses, the
+/// `Noop` arm inlines to nothing, and no vtable indirection reaches the
+/// event loop. `Default` is `Noop`, so every existing construction path is
+/// probe-free.
+#[derive(Debug, Default)]
+pub enum ProbeHandle {
+    #[default]
+    Noop,
+    Recorder(Box<Recorder>),
+}
+
+impl ProbeHandle {
+    /// Whether hooks record anything. Call sites whose *arguments* cost
+    /// something to build (virtual-time materialization, segment structs)
+    /// guard on this so a probe-off run skips the argument work too.
+    #[inline(always)]
+    pub fn active(&self) -> bool {
+        matches!(self, ProbeHandle::Recorder(_))
+    }
+
+    #[inline(always)]
+    pub fn count(&self, c: Counter, n: u64) {
+        if let ProbeHandle::Recorder(r) = self {
+            r.count(c, n);
+        }
+    }
+
+    #[inline(always)]
+    pub fn job_edge(&self, e: JobEdge, j: JobId, t: f64, vt: f64, yld: f64, stretch: f64) {
+        if let ProbeHandle::Recorder(r) = self {
+            r.job_edge(e, j, t, vt, yld, stretch);
+        }
+    }
+
+    #[inline(always)]
+    pub fn segment(&self, s: Segment) {
+        if let ProbeHandle::Recorder(r) = self {
+            r.segment(s);
+        }
+    }
+
+    #[inline(always)]
+    pub fn span_begin(&self) -> Option<Instant> {
+        match self {
+            ProbeHandle::Noop => None,
+            ProbeHandle::Recorder(r) => r.span_begin(),
+        }
+    }
+
+    #[inline(always)]
+    pub fn span_end(&self, p: Phase, t0: Option<Instant>) {
+        if let ProbeHandle::Recorder(r) = self {
+            r.span_end(p, t0);
+        }
+    }
+}
+
+// ----------------------------------------------------------------- recorder
+
+/// Recorder knobs.
+#[derive(Debug, Clone)]
+pub struct RecorderConfig {
+    /// Virtual-time sampling cadence, seconds; `<= 0` disables sampling.
+    pub sample_interval: f64,
+    /// Record per-job lifecycle edges (campaign grids turn this off and
+    /// keep only the counters).
+    pub record_edges: bool,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig { sample_interval: 600.0, record_edges: true }
+    }
+}
+
+impl RecorderConfig {
+    /// Counters only: no edges, no samples — the cheap configuration the
+    /// scenario grid runs every cell under.
+    pub fn counters_only() -> Self {
+        RecorderConfig { sample_interval: 0.0, record_edges: false }
+    }
+}
+
+#[derive(Debug, Default)]
+struct SpanCell {
+    calls: Cell<u64>,
+    secs: Cell<f64>,
+}
+
+/// The recording [`Probe`]. Interior mutability (`Cell`/`RefCell`) because
+/// packing hooks fire through `&Sim`; a `Sim` is single-threaded (grid
+/// workers each own one), so plain cells are sound and cost one store per
+/// hook.
+#[derive(Debug)]
+pub struct Recorder {
+    cfg: RecorderConfig,
+    counters: [Cell<u64>; Counter::ALL.len()],
+    edges: RefCell<Vec<EdgeRecord>>,
+    samples: RefCell<Vec<Sample>>,
+    next_sample: Cell<f64>,
+    stretch_cnt: Cell<u64>,
+    stretch_sum: Cell<f64>,
+    stretch_max: Cell<f64>,
+    spans: [SpanCell; Phase::ALL.len()],
+}
+
+impl Recorder {
+    pub fn new(cfg: RecorderConfig) -> Self {
+        let next = if cfg.sample_interval > 0.0 { cfg.sample_interval } else { f64::INFINITY };
+        Recorder {
+            cfg,
+            counters: Default::default(),
+            edges: RefCell::new(Vec::new()),
+            samples: RefCell::new(Vec::new()),
+            next_sample: Cell::new(next),
+            stretch_cnt: Cell::new(0),
+            stretch_sum: Cell::new(0.0),
+            stretch_max: Cell::new(0.0),
+            spans: Default::default(),
+        }
+    }
+
+    pub fn value(&self, c: Counter) -> u64 {
+        self.counters[c as usize].get()
+    }
+
+    /// Consume the recorder into a serializable [`Telemetry`] (meta is
+    /// filled by the caller, which knows the run's identity).
+    pub fn into_telemetry(self) -> Telemetry {
+        let counters =
+            Counter::ALL.iter().map(|&c| (c.name().to_string(), self.value(c))).collect();
+        let spans = Phase::ALL
+            .iter()
+            .map(|&p| SpanSummary {
+                phase: p.name().to_string(),
+                calls: self.spans[p as usize].calls.get(),
+                secs: self.spans[p as usize].secs.get(),
+            })
+            .collect();
+        Telemetry {
+            meta: Vec::new(),
+            counters,
+            edges: self.edges.into_inner(),
+            samples: self.samples.into_inner(),
+            spans,
+        }
+    }
+}
+
+impl Probe for Recorder {
+    #[inline]
+    fn count(&self, c: Counter, n: u64) {
+        let cell = &self.counters[c as usize];
+        cell.set(cell.get() + n);
+    }
+
+    fn job_edge(&self, e: JobEdge, j: JobId, t: f64, vt: f64, yld: f64, stretch: f64) {
+        if e == JobEdge::Complete {
+            self.stretch_cnt.set(self.stretch_cnt.get() + 1);
+            self.stretch_sum.set(self.stretch_sum.get() + stretch);
+            self.stretch_max.set(self.stretch_max.get().max(stretch));
+        }
+        if self.cfg.record_edges {
+            let rec = EdgeRecord { edge: e, job: j, t, vt, yield_now: yld, stretch };
+            self.edges.borrow_mut().push(rec);
+        }
+    }
+
+    fn segment(&self, s: Segment) {
+        let iv = self.cfg.sample_interval;
+        if iv <= 0.0 {
+            return;
+        }
+        let mut next = self.next_sample.get();
+        if next > s.t1 {
+            return;
+        }
+        let cnt = self.stretch_cnt.get();
+        let (max_s, avg_s) = if cnt > 0 {
+            (self.stretch_max.get(), self.stretch_sum.get() / cnt as f64)
+        } else {
+            (0.0, 0.0)
+        };
+        let mut samples = self.samples.borrow_mut();
+        while next <= s.t1 {
+            samples.push(Sample {
+                t: next,
+                demand: s.demand,
+                util: s.util,
+                cap: s.cap,
+                running: s.running,
+                paused: s.paused,
+                pending: s.pending,
+                up_nodes: s.up_nodes,
+                max_stretch_so_far: max_s,
+                avg_stretch_so_far: avg_s,
+            });
+            next += iv;
+        }
+        self.next_sample.set(next);
+    }
+
+    #[inline]
+    fn span_begin(&self) -> Option<Instant> {
+        Some(Instant::now())
+    }
+
+    fn span_end(&self, p: Phase, t0: Option<Instant>) {
+        if let Some(t0) = t0 {
+            let cell = &self.spans[p as usize];
+            cell.calls.set(cell.calls.get() + 1);
+            cell.secs.set(cell.secs.get() + t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+// ---------------------------------------------------------------- telemetry
+
+/// Aggregated wall-clock time of one phase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanSummary {
+    pub phase: String,
+    pub calls: u64,
+    pub secs: f64,
+}
+
+/// A finished recording: what `--telemetry` writes and `dfrs report` reads.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    /// Run identity (algorithm, engine, scenario, job count, τ, …),
+    /// filled by `run_guarded`/`run_instrumented`.
+    pub meta: Vec<(String, String)>,
+    /// Full counter catalog in [`Counter::ALL`] order.
+    pub counters: Vec<(String, u64)>,
+    pub edges: Vec<EdgeRecord>,
+    pub samples: Vec<Sample>,
+    pub spans: Vec<SpanSummary>,
+}
+
+impl Telemetry {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v).unwrap_or(0)
+    }
+
+    pub fn meta_value(&self, key: &str) -> Option<&str> {
+        self.meta.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Serialize as JSON lines. Record order: `meta`, `counter`s, `edge`s,
+    /// `sample`s, then `span`s. Every record **before the first `span`** is
+    /// a deterministic function of the run (floats as IEEE-754 bit
+    /// patterns); spans carry wall-clock time and are written last so the
+    /// deterministic records form a byte-comparable prefix.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut meta: Vec<(&str, String)> = vec![("kind", "meta".to_string())];
+        for (k, v) in &self.meta {
+            meta.push((k, v.clone()));
+        }
+        out.push_str(&jsonl::write_obj(&meta));
+        out.push('\n');
+        for (name, v) in &self.counters {
+            out.push_str(&jsonl::write_obj(&[
+                ("kind", "counter".to_string()),
+                ("name", name.clone()),
+                ("value", v.to_string()),
+            ]));
+            out.push('\n');
+        }
+        for e in &self.edges {
+            out.push_str(&jsonl::write_obj(&[
+                ("kind", "edge".to_string()),
+                ("edge", e.edge.name().to_string()),
+                ("job", e.job.to_string()),
+                ("t", fmt_bits(e.t)),
+                ("vt", fmt_bits(e.vt)),
+                ("yield", fmt_bits(e.yield_now)),
+                ("stretch", fmt_bits(e.stretch)),
+            ]));
+            out.push('\n');
+        }
+        for s in &self.samples {
+            out.push_str(&jsonl::write_obj(&[
+                ("kind", "sample".to_string()),
+                ("t", fmt_bits(s.t)),
+                ("demand", fmt_bits(s.demand)),
+                ("util", fmt_bits(s.util)),
+                ("cap", fmt_bits(s.cap)),
+                ("running", s.running.to_string()),
+                ("paused", s.paused.to_string()),
+                ("pending", s.pending.to_string()),
+                ("up_nodes", s.up_nodes.to_string()),
+                ("max_stretch_so_far", fmt_bits(s.max_stretch_so_far)),
+                ("avg_stretch_so_far", fmt_bits(s.avg_stretch_so_far)),
+            ]));
+            out.push('\n');
+        }
+        for sp in &self.spans {
+            out.push_str(&jsonl::write_obj(&[
+                ("kind", "span".to_string()),
+                ("phase", sp.phase.clone()),
+                ("calls", sp.calls.to_string()),
+                ("secs", format!("{:.6}", sp.secs)),
+            ]));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The deterministic prefix of [`Telemetry::to_jsonl`]: everything but
+    /// the wall-clock `span` records. Byte-identical across repeated runs
+    /// of the same (trace, policy, engine, scenario) at any worker count.
+    pub fn deterministic_jsonl(&self) -> String {
+        let mut t = self.clone();
+        t.spans.clear();
+        t.to_jsonl()
+    }
+
+    /// Parse a file produced by [`Telemetry::to_jsonl`].
+    pub fn from_jsonl_str(text: &str) -> Result<Telemetry, String> {
+        let mut t = Telemetry::default();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let map = jsonl::parse_obj(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            let get = |k: &str| -> Result<&String, String> {
+                map.get(k).ok_or_else(|| format!("line {}: missing field {k:?}", i + 1))
+            };
+            let bits = |k: &str| -> Result<f64, String> {
+                parse_bits(get(k)?).map_err(|e| format!("line {}: field {k:?}: {e}", i + 1))
+            };
+            let int = |k: &str| -> Result<usize, String> {
+                get(k)?.parse().map_err(|_| format!("line {}: field {k:?} not an integer", i + 1))
+            };
+            match get("kind")?.as_str() {
+                "meta" => {
+                    for (k, v) in &map {
+                        if k != "kind" {
+                            t.meta.push((k.clone(), v.clone()));
+                        }
+                    }
+                }
+                "counter" => {
+                    let v = get("value")?
+                        .parse::<u64>()
+                        .map_err(|_| format!("line {}: bad counter value", i + 1))?;
+                    t.counters.push((get("name")?.clone(), v));
+                }
+                "edge" => {
+                    let edge = JobEdge::from_name(get("edge")?)
+                        .ok_or_else(|| format!("line {}: unknown edge kind", i + 1))?;
+                    t.edges.push(EdgeRecord {
+                        edge,
+                        job: int("job")?,
+                        t: bits("t")?,
+                        vt: bits("vt")?,
+                        yield_now: bits("yield")?,
+                        stretch: bits("stretch")?,
+                    });
+                }
+                "sample" => {
+                    t.samples.push(Sample {
+                        t: bits("t")?,
+                        demand: bits("demand")?,
+                        util: bits("util")?,
+                        cap: bits("cap")?,
+                        running: int("running")?,
+                        paused: int("paused")?,
+                        pending: int("pending")?,
+                        up_nodes: int("up_nodes")?,
+                        max_stretch_so_far: bits("max_stretch_so_far")?,
+                        avg_stretch_so_far: bits("avg_stretch_so_far")?,
+                    });
+                }
+                "span" => {
+                    let secs = get("secs")?
+                        .parse::<f64>()
+                        .map_err(|_| format!("line {}: bad span secs", i + 1))?;
+                    t.spans.push(SpanSummary {
+                        phase: get("phase")?.clone(),
+                        calls: get("calls")?
+                            .parse()
+                            .map_err(|_| format!("line {}: bad span calls", i + 1))?,
+                        secs,
+                    });
+                }
+                other => return Err(format!("line {}: unknown record kind {other:?}", i + 1)),
+            }
+        }
+        Ok(t)
+    }
+
+    /// Write the JSONL file at `path`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+
+    /// Human/plot-friendly CSV of the time series (decimal floats).
+    pub fn series_csv(&self) -> String {
+        let mut out = String::from(
+            "t,demand,util,cap,running,paused,pending,up_nodes,max_stretch_so_far,avg_stretch_so_far\n",
+        );
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{:.3},{:.6},{:.6},{:.3},{},{},{},{},{:.6},{:.6}\n",
+                s.t,
+                s.demand,
+                s.util,
+                s.cap,
+                s.running,
+                s.paused,
+                s.pending,
+                s.up_nodes,
+                s.max_stretch_so_far,
+                s.avg_stretch_so_far
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_catalog_is_consistent() {
+        // Discriminants index the recorder array and names are unique.
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "discriminant order must match ALL");
+        }
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Counter::ALL.len(), "counter names must be unique");
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i);
+        }
+    }
+
+    #[test]
+    fn recorder_counts_and_samples() {
+        let r = Recorder::new(RecorderConfig { sample_interval: 10.0, record_edges: true });
+        r.count(Counter::PackProbes, 3);
+        r.count(Counter::PackProbes, 2);
+        assert_eq!(r.value(Counter::PackProbes), 5);
+        r.job_edge(JobEdge::Submit, 7, 1.0, 0.0, 0.0, 0.0);
+        r.job_edge(JobEdge::Complete, 7, 25.0, 24.0, 0.0, 2.0);
+        // Segment [0, 35] crosses cadence boundaries 10, 20, 30.
+        r.segment(Segment {
+            t0: 0.0,
+            t1: 35.0,
+            demand: 4.0,
+            util: 3.0,
+            cap: 8.0,
+            running: 2,
+            paused: 1,
+            pending: 3,
+            up_nodes: 8,
+        });
+        let t = r.into_telemetry();
+        assert_eq!(t.edges.len(), 2);
+        assert_eq!(t.samples.len(), 3);
+        assert_eq!(t.samples[0].t, 10.0);
+        assert_eq!(t.samples[2].t, 30.0);
+        assert_eq!(t.samples[0].max_stretch_so_far, 2.0);
+        assert_eq!(t.counter("pack_probes"), 5);
+        // The catalog is complete even for untouched counters.
+        assert_eq!(t.counters.len(), Counter::ALL.len());
+        assert_eq!(t.counter("epoch_bumps"), 0);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_exact() {
+        let r = Recorder::new(RecorderConfig::default());
+        r.count(Counter::EventsTotal, 42);
+        r.job_edge(JobEdge::Start, 3, 0.125, 0.0, 0.0, 0.0);
+        r.job_edge(JobEdge::Complete, 3, 99.5, 99.0, 1.0, 1.5);
+        r.segment(Segment {
+            t0: 0.0,
+            t1: 700.0,
+            demand: 1.5,
+            util: 1.0,
+            cap: 4.0,
+            running: 1,
+            paused: 0,
+            pending: 0,
+            up_nodes: 4,
+        });
+        let sp = r.span_begin();
+        r.span_end(Phase::Repack, sp);
+        let mut t = r.into_telemetry();
+        t.meta.push(("alg".into(), "test".into()));
+        let text = t.to_jsonl();
+        let back = Telemetry::from_jsonl_str(&text).unwrap();
+        assert_eq!(back.meta_value("alg"), Some("test"));
+        assert_eq!(back.counters, t.counters);
+        assert_eq!(back.edges, t.edges);
+        assert_eq!(back.samples, t.samples);
+        assert_eq!(back.spans.len(), Phase::ALL.len());
+        assert_eq!(back.spans[0].calls, 1);
+        // Deterministic prefix: identical recordings serialize identically.
+        assert_eq!(t.deterministic_jsonl(), back.deterministic_jsonl());
+    }
+
+    #[test]
+    fn noop_probe_records_nothing_and_returns_no_clock() {
+        let p = NoopProbe;
+        assert!(p.span_begin().is_none());
+        let h = ProbeHandle::default();
+        assert!(!h.active());
+        assert!(h.span_begin().is_none());
+        // All hooks are callable and side-effect free.
+        h.count(Counter::EventsTotal, 1);
+        h.job_edge(JobEdge::Submit, 0, 0.0, 0.0, 0.0, 0.0);
+        h.span_end(Phase::Repack, None);
+    }
+
+    #[test]
+    fn counters_only_config_skips_edges_and_samples() {
+        let r = Recorder::new(RecorderConfig::counters_only());
+        r.job_edge(JobEdge::Complete, 0, 10.0, 10.0, 1.0, 3.0);
+        r.segment(Segment {
+            t0: 0.0,
+            t1: 1e6,
+            demand: 1.0,
+            util: 1.0,
+            cap: 1.0,
+            running: 1,
+            paused: 0,
+            pending: 0,
+            up_nodes: 1,
+        });
+        r.count(Counter::EventsTotal, 9);
+        let t = r.into_telemetry();
+        assert!(t.edges.is_empty());
+        assert!(t.samples.is_empty());
+        assert_eq!(t.counter("events_total"), 9);
+    }
+}

@@ -1,0 +1,183 @@
+//! Human-readable rendering of a recorded telemetry file — the body of the
+//! `dfrs report` subcommand. Input is a [`Telemetry`] parsed from JSONL;
+//! output is a plain-text summary: run identity, counter table, phase
+//! timings, per-job stretch extremes and a time-series digest.
+
+use super::{JobEdge, Telemetry};
+
+/// Jobs shown in each of the best/worst stretch tables.
+const TOP_N: usize = 10;
+
+/// Render the full report.
+pub fn render(t: &Telemetry) -> String {
+    let mut out = String::new();
+    out.push_str("== telemetry report ==\n");
+    if t.meta.is_empty() {
+        out.push_str("(no meta record)\n");
+    }
+    for (k, v) in &t.meta {
+        out.push_str(&format!("{k:<18}: {v}\n"));
+    }
+
+    out.push_str("\n-- counters --\n");
+    if t.counters.is_empty() {
+        out.push_str("(none recorded)\n");
+    }
+    let w = t.counters.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    for (name, v) in &t.counters {
+        out.push_str(&format!("{name:<w$}  {v:>12}\n"));
+    }
+
+    out.push_str("\n-- phase timings (wall clock) --\n");
+    if t.spans.is_empty() {
+        out.push_str("(none recorded)\n");
+    } else {
+        out.push_str(&format!(
+            "{:<16} {:>10} {:>12} {:>12}\n",
+            "phase", "calls", "total_ms", "avg_us"
+        ));
+        for sp in &t.spans {
+            let avg_us =
+                if sp.calls > 0 { sp.secs * 1e6 / sp.calls as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<16} {:>10} {:>12.3} {:>12.2}\n",
+                sp.phase,
+                sp.calls,
+                sp.secs * 1e3,
+                avg_us
+            ));
+        }
+    }
+
+    render_stretch_tables(t, &mut out);
+    render_series_digest(t, &mut out);
+    out
+}
+
+/// Best/worst bounded stretch over completed jobs, from `complete` edges.
+fn render_stretch_tables(t: &Telemetry, out: &mut String) {
+    let mut done: Vec<_> = t.edges.iter().filter(|e| e.edge == JobEdge::Complete).collect();
+    out.push_str(&format!("\n-- job stretch extremes ({} completed) --\n", done.len()));
+    if done.is_empty() {
+        out.push_str("(no completion edges; run with edge recording enabled)\n");
+        return;
+    }
+    done.sort_by(|a, b| {
+        b.stretch.partial_cmp(&a.stretch).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out.push_str(&format!(
+        "{:<8} {:>8} {:>14} {:>14} {:>12}\n",
+        "rank", "job", "stretch", "completed_at", "virtual_t"
+    ));
+    for (i, e) in done.iter().take(TOP_N).enumerate() {
+        out.push_str(&format!(
+            "{:<8} {:>8} {:>14.4} {:>14.1} {:>12.1}\n",
+            format!("#{}", i + 1),
+            e.job,
+            e.stretch,
+            e.t,
+            e.vt
+        ));
+    }
+    let best = done.last().unwrap();
+    out.push_str(&format!(
+        "{:<8} {:>8} {:>14.4} {:>14.1} {:>12.1}\n",
+        "best", best.job, best.stretch, best.t, best.vt
+    ));
+    let sum: f64 = done.iter().map(|e| e.stretch).sum();
+    out.push_str(&format!(
+        "max {:.4}  avg {:.4} over {} completions\n",
+        done[0].stretch,
+        sum / done.len() as f64,
+        done.len()
+    ));
+}
+
+/// Condensed view of the sampled time series.
+fn render_series_digest(t: &Telemetry, out: &mut String) {
+    out.push_str(&format!("\n-- time series ({} samples) --\n", t.samples.len()));
+    if t.samples.is_empty() {
+        out.push_str("(no samples; run with a positive sample interval)\n");
+        return;
+    }
+    let n = t.samples.len() as f64;
+    let avg = |f: fn(&super::Sample) -> f64| t.samples.iter().map(f).sum::<f64>() / n;
+    let peak_pending = t.samples.iter().map(|s| s.pending).max().unwrap_or(0);
+    let min_up = t.samples.iter().map(|s| s.up_nodes).min().unwrap_or(0);
+    let last = t.samples.last().unwrap();
+    out.push_str(&format!(
+        "avg demand {:.2}  avg util {:.2}  avg running {:.1}  peak pending {}  min up-nodes {}\n",
+        avg(|s| s.demand),
+        avg(|s| s.util),
+        avg(|s| s.running as f64),
+        peak_pending,
+        min_up
+    ));
+    out.push_str(&format!(
+        "final sample: t={:.0} util={:.2}/{:.0} max_stretch_so_far={:.4} avg_stretch_so_far={:.4}\n",
+        last.t, last.util, last.cap, last.max_stretch_so_far, last.avg_stretch_so_far
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{EdgeRecord, Sample, SpanSummary};
+    use super::*;
+
+    fn sample_telemetry() -> Telemetry {
+        let mut t = Telemetry {
+            meta: vec![("algorithm".into(), "DFRS".into()), ("engine".into(), "lazy".into())],
+            counters: vec![("events_total".into(), 123), ("pack_probes".into(), 456)],
+            ..Telemetry::default()
+        };
+        for j in 0..3usize {
+            t.edges.push(EdgeRecord {
+                edge: JobEdge::Complete,
+                job: j,
+                t: 100.0 * (j + 1) as f64,
+                vt: 90.0,
+                yield_now: 0.0,
+                stretch: 1.0 + j as f64,
+            });
+        }
+        t.samples.push(Sample {
+            t: 600.0,
+            demand: 3.0,
+            util: 2.5,
+            cap: 8.0,
+            running: 2,
+            paused: 0,
+            pending: 1,
+            up_nodes: 8,
+            max_stretch_so_far: 3.0,
+            avg_stretch_so_far: 2.0,
+        });
+        t.spans.push(SpanSummary { phase: "repack".into(), calls: 10, secs: 0.005 });
+        t
+    }
+
+    #[test]
+    fn report_renders_all_sections() {
+        let text = render(&sample_telemetry());
+        for needle in [
+            "telemetry report",
+            "algorithm",
+            "counters",
+            "events_total",
+            "phase timings",
+            "repack",
+            "stretch extremes",
+            "time series",
+            "max 3.0000",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn report_survives_empty_telemetry() {
+        let text = render(&Telemetry::default());
+        assert!(text.contains("no completion edges"));
+        assert!(text.contains("no samples"));
+    }
+}

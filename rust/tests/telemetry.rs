@@ -1,0 +1,288 @@
+//! Telemetry transparency suite — the acceptance oracle for the probe
+//! layer (DESIGN.md §Telemetry). Three contracts:
+//!
+//! 1. **Transparency**: installing a [`Recorder`] must not perturb the
+//!    simulation. `SimResult` from an instrumented run is bit-identical to
+//!    the uninstrumented run, for every engine and every built-in dynamic
+//!    scenario, with the per-event auditor armed.
+//! 2. **Ground truth**: counters and lifecycle edges must agree with the
+//!    quantities the engine itself reports (`SimResult` fields, trace
+//!    sizes, scenario timelines) — the recorder observes, it does not
+//!    re-derive.
+//! 3. **Determinism**: the JSONL export (minus wall-clock span records) is
+//!    byte-identical across repeated runs, and survives a parse round
+//!    trip.
+
+use dfrs::alloc::RustSolver;
+use dfrs::scenario::{builtin, Scenario};
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{run_guarded, run_instrumented, EngineKind, RunOptions, SimConfig, SimResult};
+use dfrs::telemetry::{Counter, JobEdge, RecorderConfig, Telemetry};
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+use dfrs::workload::Trace;
+
+const ALG: &str = "GreedyPM */per/OPT=MIN/MINVT=600";
+const ENGINES: [EngineKind; 3] = [EngineKind::Indexed, EngineKind::Reference, EngineKind::Lazy];
+const SCENARIOS: [&str; 4] = ["failures", "drain", "burst", "chaos"];
+
+fn trace() -> Trace {
+    scale_to_load(&generate(7, 70, &LublinParams::default()), 0.8)
+}
+
+fn scenario(name: &str, t: &Trace) -> Scenario {
+    builtin(name, t).unwrap()
+}
+
+/// Uninstrumented run — the noop-probe baseline.
+fn run_plain(t: &Trace, engine: EngineKind, scn: &Scenario) -> SimResult {
+    let mut p = make_policy(ALG, 600.0).unwrap();
+    let opts = RunOptions { audit: true, ..RunOptions::default() };
+    run_guarded(t, p.as_mut(), SimConfig::default(), Box::new(RustSolver), engine, scn, &opts)
+        .unwrap()
+}
+
+/// Instrumented run with a full recorder (edges + samples), still audited.
+fn run_recorded(t: &Trace, engine: EngineKind, scn: &Scenario) -> (SimResult, Telemetry) {
+    let mut p = make_policy(ALG, 600.0).unwrap();
+    let opts = RunOptions { audit: true, ..RunOptions::default() };
+    run_instrumented(
+        t,
+        p.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        engine,
+        scn,
+        &opts,
+        RecorderConfig::default(),
+    )
+    .unwrap()
+}
+
+/// Bit-level equality of every metric and per-job trajectory — the same
+/// bar `tests/engine_equivalence.rs` holds the engines to.
+fn assert_identical(ctx: &str, a: &SimResult, b: &SimResult) {
+    let f = |x: f64| x.to_bits();
+    assert_eq!(f(a.max_stretch), f(b.max_stretch), "{ctx}: max_stretch");
+    assert_eq!(f(a.avg_stretch), f(b.avg_stretch), "{ctx}: avg_stretch");
+    assert_eq!(f(a.underutil_area), f(b.underutil_area), "{ctx}: underutil_area");
+    assert_eq!(f(a.norm_underutil), f(b.norm_underutil), "{ctx}: norm_underutil");
+    assert_eq!(f(a.gb_moved), f(b.gb_moved), "{ctx}: gb_moved");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.migrations, b.migrations, "{ctx}: migrations");
+    assert_eq!(a.interrupted_jobs, b.interrupted_jobs, "{ctx}: interrupted_jobs");
+    assert_eq!(f(a.makespan), f(b.makespan), "{ctx}: makespan");
+    assert_eq!(f(a.avail_node_seconds), f(b.avail_node_seconds), "{ctx}: avail_node_seconds");
+    assert_eq!(f(a.avail_utilization), f(b.avail_utilization), "{ctx}: avail_utilization");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{ctx}: job count");
+    for (j, (x, y)) in a.jobs.iter().zip(&b.jobs).enumerate() {
+        assert_eq!(f(x.vt), f(y.vt), "{ctx}: job {j} vt");
+        assert_eq!(x.completion.map(f), y.completion.map(f), "{ctx}: job {j} completion");
+        assert_eq!(x.first_start.map(f), y.first_start.map(f), "{ctx}: job {j} first_start");
+        assert_eq!(x.preemptions, y.preemptions, "{ctx}: job {j} preemptions");
+        assert_eq!(x.migrations, y.migrations, "{ctx}: job {j} migrations");
+        assert_eq!(x.interruptions, y.interruptions, "{ctx}: job {j} interruptions");
+    }
+}
+
+fn edge_count(t: &Telemetry, e: JobEdge) -> u64 {
+    t.edges.iter().filter(|r| r.edge == e).count() as u64
+}
+
+#[test]
+fn recorder_is_transparent_for_every_engine_and_scenario() {
+    let tr = trace();
+    for engine in ENGINES {
+        for name in SCENARIOS {
+            let scn = scenario(name, &tr);
+            let plain = run_plain(&tr, engine, &scn);
+            let (recorded, _) = run_recorded(&tr, engine, &scn);
+            assert_identical(&format!("{engine:?}/{name}"), &plain, &recorded);
+        }
+    }
+}
+
+#[test]
+fn counters_and_edges_match_audited_ground_truth() {
+    let tr = trace();
+    let n = tr.jobs.len() as u64;
+    for engine in ENGINES {
+        for name in SCENARIOS {
+            let scn = scenario(name, &tr);
+            let (r, t) = run_recorded(&tr, engine, &scn);
+            let ctx = format!("{engine:?}/{name}");
+
+            // Event-source counters against trace/scenario sizes. Every job
+            // is submitted and completes exactly once; scenario events past
+            // the last completion are never dispatched.
+            assert_eq!(t.counter("events_submission"), n, "{ctx}: submissions");
+            assert_eq!(t.counter("events_completion"), n, "{ctx}: completions");
+            let timeline = scn.timeline().len() as u64;
+            assert!(
+                t.counter("events_scenario") <= timeline,
+                "{ctx}: scenario events {} > timeline {timeline}",
+                t.counter("events_scenario"),
+            );
+            // "burst" only modulates arrivals (empty timeline); the other
+            // builtins carry cluster events that all land inside the
+            // arrival span, i.e. before the last completion.
+            if timeline > 0 {
+                assert!(t.counter("events_scenario") > 0, "{ctx}: scenario applied nothing");
+            }
+            let by_kind: u64 = [
+                "scenario_fail",
+                "scenario_repair",
+                "scenario_drain_start",
+                "scenario_drain_end",
+                "scenario_shrink",
+                "scenario_grow",
+            ]
+            .iter()
+            .map(|k| t.counter(k))
+            .sum();
+            assert_eq!(by_kind, t.counter("events_scenario"), "{ctx}: per-kind breakdown");
+            assert!(
+                t.counter("events_total")
+                    >= t.counter("events_completion").max(t.counter("events_submission")),
+                "{ctx}: total events bound"
+            );
+
+            // Lifecycle edges against the engine's own accounting.
+            assert_eq!(edge_count(&t, JobEdge::Submit), n, "{ctx}: submit edges");
+            assert_eq!(edge_count(&t, JobEdge::Complete), n, "{ctx}: complete edges");
+            assert_eq!(edge_count(&t, JobEdge::Pause), r.preemptions, "{ctx}: pause edges");
+            assert_eq!(edge_count(&t, JobEdge::Migrate), r.migrations, "{ctx}: migrate edges");
+            assert_eq!(edge_count(&t, JobEdge::Kill), r.interrupted_jobs, "{ctx}: kill edges");
+            assert_eq!(
+                edge_count(&t, JobEdge::Requeue),
+                t.counter("requeue_penalties"),
+                "{ctx}: requeue edges vs penalty counter"
+            );
+            // Paused jobs leave Paused by resuming (or being requeued after
+            // a kill while paused) — they never complete from Paused, so
+            // resumes can't exceed pauses.
+            assert!(
+                edge_count(&t, JobEdge::Resume) <= edge_count(&t, JobEdge::Pause),
+                "{ctx}: more resumes than pauses"
+            );
+
+            // The completion edges carry exact bounded stretches: their max
+            // reproduces the result's max_stretch bit for bit.
+            let edge_max = t
+                .edges
+                .iter()
+                .filter(|e| e.edge == JobEdge::Complete)
+                .map(|e| e.stretch)
+                .fold(0.0_f64, f64::max);
+            assert_eq!(
+                edge_max.to_bits(),
+                r.max_stretch.to_bits(),
+                "{ctx}: max stretch from edges {edge_max} vs result {}",
+                r.max_stretch
+            );
+
+            // Samples cover the run and stay within physical bounds.
+            assert!(!t.samples.is_empty(), "{ctx}: no samples");
+            for s in &t.samples {
+                assert!(s.util <= s.cap + 1e-9, "{ctx}: util {} above cap {}", s.util, s.cap);
+                assert!(s.running + s.paused + s.pending <= tr.jobs.len(), "{ctx}: job census");
+            }
+            for w in t.samples.windows(2) {
+                assert!(w[0].t < w[1].t, "{ctx}: sample times not increasing");
+            }
+        }
+    }
+}
+
+#[test]
+fn discrete_counters_agree_across_engines() {
+    // Counters that are a pure function of the discrete trajectory, which
+    // all three engines share. Engine-internal counters (lazy clock
+    // materializations, calendar traffic, repack-cache hits) legitimately
+    // differ and are excluded.
+    const DISCRETE: &[&str] = &[
+        "events_submission",
+        "events_completion",
+        "events_scenario",
+        "scenario_fail",
+        "scenario_repair",
+        "scenario_drain_start",
+        "scenario_drain_end",
+        "scenario_shrink",
+        "scenario_grow",
+        "requeue_penalties",
+        "opportunistic_starts",
+    ];
+    let tr = trace();
+    for name in SCENARIOS {
+        let scn = scenario(name, &tr);
+        let (_, ti) = run_recorded(&tr, EngineKind::Indexed, &scn);
+        let (_, tr_) = run_recorded(&tr, EngineKind::Reference, &scn);
+        let (_, tl) = run_recorded(&tr, EngineKind::Lazy, &scn);
+        // Indexed and Reference are bit-identical runs: every counter that
+        // is not engine-private must match exactly, including total event
+        // count, tick count and packing probes.
+        for c in Counter::ALL {
+            let nm = c.name();
+            if matches!(
+                nm,
+                "lazy_clock_materializations"
+                    | "calendar_pops"
+                    | "calendar_invalidations"
+                    | "repack_cache_hits"
+                    | "repack_cache_misses"
+            ) {
+                continue;
+            }
+            assert_eq!(
+                ti.counter(nm),
+                tr_.counter(nm),
+                "{name}: indexed vs reference counter {nm}"
+            );
+        }
+        for nm in DISCRETE {
+            assert_eq!(ti.counter(nm), tl.counter(nm), "{name}: indexed vs lazy counter {nm}");
+        }
+        // Lazy never runs the eager prediction path and vice versa.
+        assert_eq!(ti.counter("lazy_clock_materializations"), 0, "{name}: indexed lazy clocks");
+        assert!(tl.counter("lazy_clock_materializations") > 0, "{name}: lazy materializes");
+    }
+}
+
+#[test]
+fn jsonl_export_is_deterministic_and_round_trips() {
+    let tr = trace();
+    let scn = scenario("chaos", &tr);
+    let (_, a) = run_recorded(&tr, EngineKind::Lazy, &scn);
+    let (_, b) = run_recorded(&tr, EngineKind::Lazy, &scn);
+    // Span records aggregate wall-clock time and are excluded from the
+    // byte-identity surface; everything else must match byte for byte.
+    assert_eq!(a.deterministic_jsonl(), b.deterministic_jsonl(), "repeat runs diverged");
+
+    let parsed = Telemetry::from_jsonl_str(&a.to_jsonl()).unwrap();
+    assert_eq!(parsed.counters, a.counters, "counters round trip");
+    assert_eq!(parsed.edges, a.edges, "edges round trip");
+    assert_eq!(parsed.samples, a.samples, "samples round trip");
+    assert_eq!(parsed.meta, a.meta, "meta round trips");
+}
+
+#[test]
+fn counters_only_config_skips_edges_but_keeps_counters() {
+    let tr = trace();
+    let scn = scenario("failures", &tr);
+    let mut p = make_policy(ALG, 600.0).unwrap();
+    let (_, t) = run_instrumented(
+        &tr,
+        p.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &scn,
+        &RunOptions::default(),
+        RecorderConfig::counters_only(),
+    )
+    .unwrap();
+    assert!(t.edges.is_empty(), "counters_only must not record edges");
+    assert!(t.samples.is_empty(), "counters_only must not sample");
+    assert_eq!(t.counter("events_completion"), tr.jobs.len() as u64);
+}
