@@ -1,10 +1,12 @@
-//! Packing-core benchmark (DESIGN.md §Packing internals): the seed packing
-//! core (`packing::reference` — per-probe allocations, per-victim rebuilds)
-//! vs the scratch-arena core (probe reuse, flat slab, victim pop) on live
-//! MCB8 and MCB8-stretch allocation states drawn from a 1000-job Lublin
-//! trace, plus the repack-skip cache replay rate and the allocation-event
-//! counts that contextualize it (how often each policy family actually runs
-//! the packing core over a full simulation).
+//! Packing-core benchmark (DESIGN.md §Packing internals): three tiers on
+//! live MCB8 and MCB8-stretch allocation states drawn from a Lublin trace —
+//! the seed core (`packing::reference` — per-probe allocations, per-victim
+//! rebuilds), the scratch-arena linear core (`KernelMode::Arena`, the PR 3
+//! baseline: probe reuse, flat slab, victim pop), and the indexed kernel
+//! (default `Auto`: eligibility-tree fill loop, sound probe pruning,
+//! order-stable resort skips). Plus the repack-skip cache replay rate and
+//! the allocation-event counts that contextualize it (how often each policy
+//! family actually runs the packing core over a full simulation).
 //!
 //! Every timed pair is also checked byte-identical, mirroring
 //! `tests/packing_equivalence.rs`. Writes `BENCH_packing.json` at the repo
@@ -16,6 +18,7 @@
 
 use dfrs::alloc::RustSolver;
 use dfrs::benchx::bench;
+use dfrs::packing::mcb8::KernelMode;
 use dfrs::packing::reference::{mcb8_allocate_seed, mcb8_stretch_allocate_seed};
 use dfrs::packing::search::{
     collect_candidates, mcb8_allocate_prepared, Mcb8Scratch, PinRule, RepackCache,
@@ -100,10 +103,11 @@ fn main() {
     let args = Args::parse(argv);
     let quick = args.flag("quick");
     let seed = args.u64_or("seed", 7).unwrap();
-    let trace_jobs = if quick { 120 } else { args.usize_or("jobs", 1000).unwrap() };
+    let trace_jobs = if quick { 120 } else { args.usize_or("jobs", 2048).unwrap() };
     let iters = if quick { 1 } else { 20 };
     let warmup = if quick { 1 } else { 3 };
-    let sizes: &[usize] = if quick { &[60] } else { &[102, 256, 512] };
+    let sizes_all: &[usize] = if quick { &[60] } else { &[102, 256, 512, 1024, 2048] };
+    let sizes: Vec<usize> = sizes_all.iter().copied().filter(|&s| s <= trace_jobs).collect();
 
     let trace = generate(seed, trace_jobs, &LublinParams::default());
     println!("== packing core: seed (pre-arena) vs scratch-arena ==");
@@ -115,9 +119,11 @@ fn main() {
     let mut entries = Vec::new();
     let mut speedup_mcb8 = f64::NAN;
     let mut speedup_stretch = f64::NAN;
+    let mut kernel_mcb8 = f64::NAN;
+    let mut kernel_stretch = f64::NAN;
     let mut all_identical = true;
 
-    for &n_jobs in sizes {
+    for &n_jobs in &sizes {
         let sim = live_state(&trace, n_jobs, 99);
 
         // --- plain MCB8 allocation path ---------------------------------
@@ -125,21 +131,34 @@ fn main() {
             std::hint::black_box(mcb8_allocate_seed(&sim, PIN).yield_achieved);
         });
         println!("{}", s_seed.report());
-        let mut scratch = Mcb8Scratch::default();
-        let s_arena = bench(&format!("mcb8_arena  [{n_jobs} live]"), warmup, iters, || {
+        let mut scratch = Mcb8Scratch::default(); // Auto: indexed kernel
+        let s_kernel = bench(&format!("mcb8_kernel [{n_jobs} live]"), warmup, iters, || {
             let cands = collect_candidates(&sim);
             let out = mcb8_allocate_prepared(&sim, PIN, &cands, &mut scratch);
             std::hint::black_box(out.yield_achieved);
         });
+        println!("{}", s_kernel.report());
+        let mut flat = Mcb8Scratch::default();
+        flat.set_kernel_mode(KernelMode::Arena); // PR 3 linear baseline
+        let s_arena = bench(&format!("mcb8_arena  [{n_jobs} live]"), warmup, iters, || {
+            let cands = collect_candidates(&sim);
+            let out = mcb8_allocate_prepared(&sim, PIN, &cands, &mut flat);
+            std::hint::black_box(out.yield_achieved);
+        });
         println!("{}", s_arena.report());
         let mcb8_speedup = s_seed.p50_s / s_arena.p50_s.max(1e-12);
+        let mcb8_kernel_vs_arena = s_arena.p50_s / s_kernel.p50_s.max(1e-12);
         let identical = {
             let a = mcb8_allocate_seed(&sim, PIN);
             let cands = collect_candidates(&sim);
             let b = mcb8_allocate_prepared(&sim, PIN, &cands, &mut scratch);
+            let c = mcb8_allocate_prepared(&sim, PIN, &cands, &mut flat);
             a.mapping == b.mapping
                 && a.dropped == b.dropped
                 && a.yield_achieved.to_bits() == b.yield_achieved.to_bits()
+                && b.mapping == c.mapping
+                && b.dropped == c.dropped
+                && b.yield_achieved.to_bits() == c.yield_achieved.to_bits()
         };
         all_identical &= identical;
 
@@ -148,17 +167,26 @@ fn main() {
             std::hint::black_box(mcb8_stretch_allocate_seed(&sim, 600.0, PIN).target_stretch);
         });
         println!("{}", t_seed.report());
-        let mut st_scratch = StretchScratch::default();
-        let t_arena = bench(&format!("stretch_arena[{n_jobs} live]"), warmup, iters, || {
+        let mut st_scratch = StretchScratch::default(); // Auto: indexed kernel
+        let t_kernel = bench(&format!("stretch_kernel[{n_jobs} live]"), warmup, iters, || {
             let out = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_scratch);
+            std::hint::black_box(out.target_stretch);
+        });
+        println!("{}", t_kernel.report());
+        let mut st_flat = StretchScratch::default();
+        st_flat.set_kernel_mode(KernelMode::Arena);
+        let t_arena = bench(&format!("stretch_arena[{n_jobs} live]"), warmup, iters, || {
+            let out = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_flat);
             std::hint::black_box(out.target_stretch);
         });
         println!("{}", t_arena.report());
         let stretch_speedup = t_seed.p50_s / t_arena.p50_s.max(1e-12);
+        let stretch_kernel_vs_arena = t_arena.p50_s / t_kernel.p50_s.max(1e-12);
         let st_identical = {
             let a = mcb8_stretch_allocate_seed(&sim, 600.0, PIN);
             let b = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_scratch);
-            a == b
+            let c = mcb8_stretch_allocate_into(&sim, 600.0, PIN, &mut st_flat);
+            a == b && b == c
         };
         all_identical &= st_identical;
 
@@ -170,23 +198,33 @@ fn main() {
         });
         println!("{}", c_hit.report());
         println!(
-            "  speedup: mcb8 {mcb8_speedup:.2}x, stretch {stretch_speedup:.2}x, \
-             cache hits {} / misses {}; byte-identical: {}\n",
+            "  speedup vs seed: mcb8 {mcb8_speedup:.2}x, stretch {stretch_speedup:.2}x; \
+             kernel vs arena: mcb8 {mcb8_kernel_vs_arena:.2}x, \
+             stretch {stretch_kernel_vs_arena:.2}x; cache hits {} / misses {}; \
+             byte-identical: {}\n",
             cache.hits(),
             cache.misses(),
             identical && st_identical
         );
         speedup_mcb8 = mcb8_speedup;
         speedup_stretch = stretch_speedup;
+        kernel_mcb8 = mcb8_kernel_vs_arena;
+        kernel_stretch = stretch_kernel_vs_arena;
 
         entries.push(format!(
-            "{{\"live_jobs\": {n_jobs}, \"mcb8_seed_p50_s\": {:.6}, \"mcb8_arena_p50_s\": {:.6}, \
-             \"mcb8_speedup\": {mcb8_speedup:.2}, \"stretch_seed_p50_s\": {:.6}, \
+            "{{\"live_jobs\": {n_jobs}, \"mcb8_seed_p50_s\": {:.6}, \
+             \"mcb8_kernel_p50_s\": {:.6}, \"mcb8_arena_p50_s\": {:.6}, \
+             \"mcb8_speedup\": {mcb8_speedup:.2}, \
+             \"mcb8_kernel_vs_arena\": {mcb8_kernel_vs_arena:.2}, \
+             \"stretch_seed_p50_s\": {:.6}, \"stretch_kernel_p50_s\": {:.6}, \
              \"stretch_arena_p50_s\": {:.6}, \"stretch_speedup\": {stretch_speedup:.2}, \
+             \"stretch_kernel_vs_arena\": {stretch_kernel_vs_arena:.2}, \
              \"cache_hit_p50_s\": {:.9}, \"byte_identical\": {}}}",
             s_seed.p50_s,
+            s_kernel.p50_s,
             s_arena.p50_s,
             t_seed.p50_s,
+            t_kernel.p50_s,
             t_arena.p50_s,
             c_hit.p50_s,
             identical && st_identical
@@ -213,6 +251,7 @@ fn main() {
     // headline: the slower of the two path speedups at the largest size —
     // the conservative claim.
     let headline = speedup_mcb8.min(speedup_stretch);
+    let kernel_headline = kernel_mcb8.min(kernel_stretch);
     let meta = dfrs::benchx::bench_meta_json();
     let json = format!(
         "{{\n  \"bench\": \"packing\",\n  \"meta\": {meta},\n  \
@@ -221,8 +260,12 @@ fn main() {
          \"runs\": [\n    {}\n  ],\n  \"events\": {{\"greedy_star\": {greedy_events}, \
          \"mcb8_per\": {mcb8_events}}},\n  \"speedup_mcb8\": {speedup_mcb8:.2},\n  \
          \"speedup_stretch\": {speedup_stretch:.2},\n  \"speedup\": {headline:.2},\n  \
+         \"speedup_kernel_mcb8\": {kernel_mcb8:.2},\n  \
+         \"speedup_kernel_stretch\": {kernel_stretch:.2},\n  \
+         \"speedup_kernel\": {kernel_headline:.2},\n  \
          \"speedup_note\": \"headline = min(mcb8, stretch) p50 speedup at the largest live-set \
-         size; seed baseline = packing::reference (pre-arena core)\",\n  \
+         size; seed baseline = packing::reference (pre-arena core); speedup_kernel_* = indexed \
+         kernel (Auto) vs KernelMode::Arena linear baseline at the largest size\",\n  \
          \"bit_identical\": {all_identical}\n}}\n",
         trace.nodes,
         entries.join(",\n    ")

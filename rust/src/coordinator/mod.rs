@@ -73,8 +73,9 @@ COMMANDS
                 replayed run against the recording (exit nonzero on any
                 divergence)
   report FILE   Render a telemetry file written with --telemetry: counter
-                table, phase timings, per-job stretch extremes, and a
-                time-series digest
+                table (incl. the packing-kernel counters pack_probes_pruned,
+                pack_sort_skips and pack_tree_descents), phase timings,
+                per-job stretch extremes, and a time-series digest
   bound         Offline max-stretch lower bound for a generated trace
                   --jobs N --seed S --workload KIND --swf PATH
   gen           Generate a trace and write SWF to stdout or --out FILE

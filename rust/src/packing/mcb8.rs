@@ -17,6 +17,18 @@
 //! wrappers kept for callers outside the binary-search hot path. The seed
 //! (pre-arena) implementation survives verbatim in `packing::reference` as
 //! the byte-identity oracle and the baseline of `benches/packing.rs`.
+//!
+//! Above a size cutover (or when forced via [`KernelMode::Indexed`]) the
+//! fill loop runs off an *eligibility index*: a min-segment tree per sorted
+//! list ([`EligTree`] internally) that answers "first job in sorted order
+//! with `cpu_req ≤ C && mem ≤ M`" in O(log J) and tombstones exhausted jobs
+//! in O(log J), provably selecting the exact job the seed's linear scan
+//! selects. Because probes only rescale `cpu_req`, consecutive calls often
+//! present the same list membership in an already-sorted order; the kernel
+//! detects that with an O(J) strict-order precheck and skips the resort
+//! (order-stable resorts). Both optimizations — and the PR 3 arena baseline
+//! — are selectable per scratch via [`PackScratch::set_kernel_mode`] and
+//! proven byte-identical in `tests/packing_equivalence.rs`.
 
 use crate::sim::NodeId;
 
@@ -57,6 +69,125 @@ pub enum SortKey {
     Sum,
 }
 
+/// Fill-loop kernel selection (DESIGN.md §Packing internals). All three
+/// modes return byte-identical results; they differ only in how the next
+/// eligible job is found and whether the sorted lists are rebuilt per call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// Eligibility index above [`INDEX_CUTOVER`] unpinned jobs, linear scan
+    /// below; order-stable resort skip on. The production default.
+    #[default]
+    Auto,
+    /// Always use the eligibility index (differential tests force the tree
+    /// on small inputs the cutover would route to the linear scan).
+    Indexed,
+    /// The PR 3 scratch-arena baseline: linear fill, unconditional per-call
+    /// list rebuild + resort, and no probe pruning in the callers that
+    /// consult this mode. Bench baseline and oracle cross-check.
+    Arena,
+}
+
+/// Unpinned-job count at which `KernelMode::Auto` switches the fill loop
+/// from the linear scan to the eligibility index. Below this the O(J)
+/// scan's cache behavior beats the tree's pointer chasing.
+pub const INDEX_CUTOVER: usize = 48;
+
+/// Which sorted list a job index belongs to this call (see
+/// `PackScratch::assign`): pinned/exhausted, CPU-intensive, mem-intensive.
+const ASSIGN_NONE: u8 = 0;
+const ASSIGN_CPU: u8 = 1;
+const ASSIGN_MEM: u8 = 2;
+
+/// The strict total order of the fill lists: key descending (`total_cmp`),
+/// then job index ascending. The seed sorts an index-ascending list with a
+/// *stable* key-only comparator, which yields exactly this order — so
+/// sorting any permutation with this comparator reproduces the seed's list
+/// byte for byte, and checking it pairwise proves a stale permutation is
+/// still canonical under new keys.
+fn list_cmp(keys: &[f64], a: usize, b: usize) -> std::cmp::Ordering {
+    keys[b].total_cmp(&keys[a]).then_with(|| a.cmp(&b))
+}
+
+/// Is `list` already in the canonical order under the current keys? For a
+/// strict total order over distinct indices, adjacent-pair validation is
+/// equivalent to full sortedness.
+fn list_sorted(keys: &[f64], list: &[usize]) -> bool {
+    list.windows(2).all(|w| list_cmp(keys, w[0], w[1]) == std::cmp::Ordering::Less)
+}
+
+/// Eligibility index over one sorted job list: a flat min-segment tree
+/// whose leaf `p` mirrors `(cpu_req, mem)` of `list[p]` (`+inf` once
+/// exhausted). Internal nodes hold per-subtree minima of both dimensions,
+/// so a descent can prune any subtree whose minima already exceed the
+/// node's remaining capacity — a *necessary* condition that is exact at
+/// the leaves, where the same `≤` comparisons as the linear scan decide.
+/// Walking left before right therefore returns the first job, in list
+/// order, the linear scan would have picked.
+#[derive(Debug, Default)]
+struct EligTree {
+    /// Leaf span (power of two ≥ list length; leaves at `[size, 2·size)`).
+    size: usize,
+    cpu: Vec<f64>,
+    mem: Vec<f64>,
+}
+
+impl EligTree {
+    fn build(&mut self, list: &[usize], jobs: &[PackJob]) {
+        self.size = list.len().next_power_of_two();
+        let len = 2 * self.size;
+        self.cpu.clear();
+        self.cpu.resize(len, f64::INFINITY);
+        self.mem.clear();
+        self.mem.resize(len, f64::INFINITY);
+        for (p, &i) in list.iter().enumerate() {
+            self.cpu[self.size + p] = jobs[i].cpu_req;
+            self.mem[self.size + p] = jobs[i].mem;
+        }
+        for v in (1..self.size).rev() {
+            self.cpu[v] = self.cpu[2 * v].min(self.cpu[2 * v + 1]);
+            self.mem[v] = self.mem[2 * v].min(self.mem[2 * v + 1]);
+        }
+    }
+
+    /// Tombstone leaf `p` (job exhausted) and repair the minima: O(log J).
+    fn remove(&mut self, p: usize) {
+        let mut v = self.size + p;
+        self.cpu[v] = f64::INFINITY;
+        self.mem[v] = f64::INFINITY;
+        while v > 1 {
+            v /= 2;
+            self.cpu[v] = self.cpu[2 * v].min(self.cpu[2 * v + 1]);
+            self.mem[v] = self.mem[2 * v].min(self.mem[2 * v + 1]);
+        }
+    }
+
+    /// Leftmost leaf position with `cpu ≤ c && mem ≤ m`, counting visited
+    /// tree nodes into `visits` (telemetry: pack_tree_descents).
+    fn first_fit(&self, c: f64, m: f64, visits: &mut u64) -> Option<usize> {
+        if self.size == 0 {
+            return None;
+        }
+        self.find(1, c, m, visits)
+    }
+
+    fn find(&self, v: usize, c: f64, m: f64, visits: &mut u64) -> Option<usize> {
+        *visits += 1;
+        if v >= self.size {
+            // Leaf: the exact comparisons the linear scan performs (this,
+            // not the subtree-min prune, decides — so NaN requirements are
+            // rejected here exactly as `NaN <= c` rejects them in the scan).
+            return if self.cpu[v] <= c && self.mem[v] <= m { Some(v - self.size) } else { None };
+        }
+        if self.cpu[v] > c || self.mem[v] > m {
+            return None; // no leaf below can satisfy both dimensions
+        }
+        if let Some(p) = self.find(2 * v, c, m, visits) {
+            return Some(p);
+        }
+        self.find(2 * v + 1, c, m, visits)
+    }
+}
+
 /// Reusable scratch arena for the packing core (DESIGN.md §Packing
 /// internals). All buffers the fill loop needs — node states, per-job
 /// remaining-task counters, cached sort keys, the two sorted index lists,
@@ -76,6 +207,19 @@ pub struct PackScratch {
     slab: Vec<NodeId>,
     offsets: Vec<usize>,
     filled: Vec<u32>,
+    cpu_tree: EligTree,
+    mem_tree: EligTree,
+    /// Leaf position of each job index inside its list's tree.
+    pos: Vec<u32>,
+    /// The list assignment (`ASSIGN_*` per job index) `cpu_list`/`mem_list`
+    /// currently reflect; valid only while `lists_valid`.
+    assign: Vec<u8>,
+    /// Double buffer for the incoming call's assignment.
+    assign_scratch: Vec<u8>,
+    lists_valid: bool,
+    mode: KernelMode,
+    sort_skips: u64,
+    tree_descents: u64,
 }
 
 impl PackScratch {
@@ -104,6 +248,23 @@ impl PackScratch {
     pub fn save_to(&self, slab: &mut Vec<NodeId>, offsets: &mut Vec<usize>) {
         slab.clone_from(&self.slab);
         offsets.clone_from(&self.offsets);
+    }
+
+    /// Fill-loop kernel knob (benches and differential tests); production
+    /// callers leave the [`KernelMode::Auto`] default in place.
+    pub fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.mode
+    }
+
+    /// Drain the kernel's cumulative `(sort_skips, tree_descents)` tallies;
+    /// allocation entry points flush them into the telemetry counters
+    /// `pack_sort_skips` / `pack_tree_descents`.
+    pub fn take_stats(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.sort_skips), std::mem::take(&mut self.tree_descents))
     }
 
     /// Materialize the slab into the allocating [`PackResult`] shape.
@@ -163,8 +324,25 @@ pub fn pack_into(
     blocked: Option<&[bool]>,
     scratch: &mut PackScratch,
 ) -> bool {
-    let PackScratch { state, remaining, keys, cpu_list, mem_list, slab, offsets, filled } =
-        scratch;
+    let PackScratch {
+        state,
+        remaining,
+        keys,
+        cpu_list,
+        mem_list,
+        slab,
+        offsets,
+        filled,
+        cpu_tree,
+        mem_tree,
+        pos,
+        assign,
+        assign_scratch,
+        lists_valid,
+        mode,
+        sort_skips,
+        tree_descents,
+    } = scratch;
     let is_blocked = |n: usize| blocked.map(|b| b[n]).unwrap_or(false);
     state.clear();
     state.extend((0..nodes).map(|n| {
@@ -218,23 +396,79 @@ pub fn pack_into(
             SortKey::Sum => j.cpu_req + j.mem,
         });
     }
-    cpu_list.clear();
-    mem_list.clear();
+    // List assignment for this call: which sorted list (if any) each job
+    // index belongs to. Membership depends only on the pin/exhaustion state
+    // and the `cpu_req >= mem` split, so when it matches the assignment the
+    // lists were built under, the member *sets* are already correct and
+    // only the order needs validating — probes rescale every CPU-intensive
+    // key by the same yield factor, so the stale permutation is usually
+    // still canonical and the resort can be skipped (order-stable resorts).
+    assign_scratch.clear();
     for (i, j) in jobs.iter().enumerate() {
-        if remaining[i] > 0 {
-            if j.cpu_req >= j.mem {
-                cpu_list.push(i);
-            } else {
-                mem_list.push(i);
+        assign_scratch.push(if remaining[i] == 0 {
+            ASSIGN_NONE
+        } else if j.cpu_req >= j.mem {
+            ASSIGN_CPU
+        } else {
+            ASSIGN_MEM
+        });
+    }
+    let reuse = *mode != KernelMode::Arena && *lists_valid && assign_scratch == assign;
+    if reuse {
+        let cpu_ok = list_sorted(keys, cpu_list);
+        let mem_ok = list_sorted(keys, mem_list);
+        if cpu_ok && mem_ok {
+            *sort_skips += 1;
+        }
+        if !cpu_ok {
+            cpu_list.sort_unstable_by(|&a, &b| list_cmp(keys, a, b));
+        }
+        if !mem_ok {
+            mem_list.sort_unstable_by(|&a, &b| list_cmp(keys, a, b));
+        }
+    } else {
+        cpu_list.clear();
+        mem_list.clear();
+        for (i, &a) in assign_scratch.iter().enumerate() {
+            match a {
+                ASSIGN_CPU => cpu_list.push(i),
+                ASSIGN_MEM => mem_list.push(i),
+                _ => {}
             }
         }
+        // `list_cmp` is a strict total order, so the unstable sort lands on
+        // the same unique permutation the seed's stable key-only sort does.
+        cpu_list.sort_unstable_by(|&a, &b| list_cmp(keys, a, b));
+        mem_list.sort_unstable_by(|&a, &b| list_cmp(keys, a, b));
     }
-    cpu_list.sort_by(|&a, &b| keys[b].total_cmp(&keys[a]));
-    mem_list.sort_by(|&a, &b| keys[b].total_cmp(&keys[a]));
+    std::mem::swap(assign, assign_scratch);
+    *lists_valid = true;
 
     let total_left: u32 = remaining.iter().sum();
     if total_left == 0 {
         return true;
+    }
+
+    // Eligibility index: above the cutover (or when forced), mirror each
+    // list into a min-segment tree so every "first fitting job" lookup is
+    // O(log J) and every exhaustion an O(log J) tombstone instead of the
+    // seed's O(J) retain.
+    let use_tree = match *mode {
+        KernelMode::Arena => false,
+        KernelMode::Indexed => true,
+        KernelMode::Auto => cpu_list.len() + mem_list.len() >= INDEX_CUTOVER,
+    };
+    if use_tree {
+        pos.clear();
+        pos.resize(jobs.len(), 0);
+        for (p, &i) in cpu_list.iter().enumerate() {
+            pos[i] = p as u32;
+        }
+        for (p, &i) in mem_list.iter().enumerate() {
+            pos[i] = p as u32;
+        }
+        cpu_tree.build(cpu_list, jobs);
+        mem_tree.build(mem_list, jobs);
     }
 
     let mut placed = 0u32;
@@ -253,17 +487,28 @@ pub fn pack_into(
             // Prefer the list that counteracts the imbalance: if available
             // memory exceeds available CPU, pick a memory-intensive job.
             let prefer_mem = s.mem > s.cpu;
-            let pick = |list: &[usize]| -> Option<usize> {
-                list.iter().copied().find(|&i| {
-                    remaining[i] > 0
-                        && jobs[i].cpu_req <= s.cpu + 1e-9
-                        && jobs[i].mem <= s.mem + 1e-9
-                })
-            };
-            let choice = if prefer_mem {
-                pick(mem_list).or_else(|| pick(cpu_list))
+            let (c, m) = (s.cpu + 1e-9, s.mem + 1e-9);
+            let choice = if use_tree {
+                let (t1, l1, t2, l2) = if prefer_mem {
+                    (&*mem_tree, &**mem_list, &*cpu_tree, &**cpu_list)
+                } else {
+                    (&*cpu_tree, &**cpu_list, &*mem_tree, &**mem_list)
+                };
+                match t1.first_fit(c, m, tree_descents) {
+                    Some(p) => Some(l1[p]),
+                    None => t2.first_fit(c, m, tree_descents).map(|p| l2[p]),
+                }
             } else {
-                pick(cpu_list).or_else(|| pick(mem_list))
+                let pick = |list: &[usize]| -> Option<usize> {
+                    list.iter()
+                        .copied()
+                        .find(|&i| remaining[i] > 0 && jobs[i].cpu_req <= c && jobs[i].mem <= m)
+                };
+                if prefer_mem {
+                    pick(mem_list).or_else(|| pick(cpu_list))
+                } else {
+                    pick(cpu_list).or_else(|| pick(mem_list))
+                }
             };
             let Some(i) = choice else { break };
             let s = &mut state[n];
@@ -277,9 +522,12 @@ pub fn pack_into(
                 // Drop exhausted ids lazily; all tasks placed.
                 return true;
             }
-            if remaining[i] == 0 {
-                cpu_list.retain(|&x| x != i);
-                mem_list.retain(|&x| x != i);
+            if remaining[i] == 0 && use_tree {
+                // Tombstone in the tree only: the Vec lists stay intact so
+                // the next call can reuse them, and the linear path's
+                // `remaining[i] > 0` check already skips exhausted jobs.
+                let t = if assign[i] == ASSIGN_CPU { &mut *cpu_tree } else { &mut *mem_tree };
+                t.remove(pos[i] as usize);
             }
         }
         if pristine && placed == placed_before {
@@ -504,6 +752,105 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prop_eligibility_tree_picks_exactly_the_linear_scan_job() {
+        // The tree must return the first in-order eligible position under
+        // the same <= comparisons, for arbitrary lists and capacities,
+        // including tombstoned entries.
+        forall(
+            4242,
+            120,
+            |rng: &mut Rng| {
+                let njobs = 1 + rng.below(24) as usize;
+                let jobs: Vec<PackJob> = (0..njobs)
+                    .map(|id| PackJob {
+                        id,
+                        tasks: 1,
+                        cpu_req: rng.range(0.0, 1.1),
+                        mem: rng.range(0.05, 1.1),
+                        pinned: None,
+                    })
+                    .collect();
+                let dead: Vec<bool> = (0..njobs).map(|_| rng.chance(0.3)).collect();
+                let caps: Vec<(f64, f64)> =
+                    (0..8).map(|_| (rng.range(0.0, 1.2), rng.range(0.0, 1.2))).collect();
+                (jobs, dead, caps)
+            },
+            |(jobs, dead, caps)| {
+                let list: Vec<usize> = (0..jobs.len()).collect();
+                let mut tree = EligTree::default();
+                tree.build(&list, jobs);
+                for (p, &d) in dead.iter().enumerate() {
+                    if d {
+                        tree.remove(p);
+                    }
+                }
+                let mut visits = 0u64;
+                for &(c, m) in caps {
+                    let linear = list.iter().copied().find(|&i| {
+                        !dead[i] && jobs[i].cpu_req <= c && jobs[i].mem <= m
+                    });
+                    let tree_pick = tree.first_fit(c, m, &mut visits);
+                    if tree_pick != linear {
+                        return Err(format!(
+                            "c={c} m={m}: tree {tree_pick:?} vs linear {linear:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn kernel_modes_are_byte_identical_across_reused_scratches() {
+        // One scratch per mode, driven through heterogeneous cases (pins,
+        // masks, repeats that trigger the resort skip): every mode must
+        // reproduce the allocating `pack_masked` result exactly.
+        let mut auto = PackScratch::new();
+        let mut indexed = PackScratch::new();
+        indexed.set_kernel_mode(KernelMode::Indexed);
+        let mut arena = PackScratch::new();
+        arena.set_kernel_mode(KernelMode::Arena);
+        let cases: Vec<(Vec<PackJob>, usize, Option<Vec<bool>>)> = vec![
+            (vec![job(0, 2, 0.4, 0.3), job(1, 1, 0.2, 0.6)], 2, None),
+            (vec![job(0, 2, 0.4, 0.3), job(1, 1, 0.2, 0.6)], 2, None), // repeat: skip path
+            (vec![job(0, 2, 0.1, 0.8), job(1, 1, 0.1, 0.7)], 1, None), // infeasible
+            (
+                vec![
+                    PackJob { id: 0, tasks: 2, cpu_req: 0.5, mem: 0.5, pinned: Some(vec![1, 2]) },
+                    job(1, 1, 0.4, 0.4),
+                ],
+                3,
+                None,
+            ),
+            (vec![job(0, 2, 0.4, 0.4)], 3, Some(vec![true, false, true])),
+            (vec![job(0, 2, 0.4, 0.4)], 3, Some(vec![true, true, true])),
+            (vec![job(0, 3, 0.0, 0.5), job(1, 3, 0.0, 0.5)], 3, None),
+            (vec![job(0, 3, 0.0, 0.5), job(1, 3, 0.0, 0.5)], 3, None), // repeat: skip path
+        ];
+        for (jobs, nodes, mask) in &cases {
+            let blocked = mask.as_deref();
+            let want = pack_masked(jobs, *nodes, SortKey::Max, blocked);
+            for (name, scratch) in
+                [("auto", &mut auto), ("indexed", &mut indexed), ("arena", &mut arena)]
+            {
+                let got = if pack_into(jobs, *nodes, SortKey::Max, blocked, scratch) {
+                    Some(scratch.to_result(jobs))
+                } else {
+                    None
+                };
+                assert_eq!(got, want, "mode {name} diverged on {nodes} nodes");
+            }
+        }
+        let (skips, _) = auto.take_stats();
+        assert!(skips >= 1, "repeated identical calls must skip at least one resort");
+        let (arena_skips, arena_descents) = arena.take_stats();
+        assert_eq!((arena_skips, arena_descents), (0, 0), "arena mode must not skip or descend");
+        let (_, descents) = indexed.take_stats();
+        assert!(descents > 0, "indexed mode must route picks through the tree");
     }
 
     #[test]

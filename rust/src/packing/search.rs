@@ -16,7 +16,7 @@
 //! `packing::reference` and proven byte-identical by
 //! `tests/packing_equivalence.rs`.
 
-use super::mcb8::{pack_into, PackJob, PackScratch, SortKey};
+use super::mcb8::{pack_into, KernelMode, PackJob, PackScratch, SortKey};
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
 use crate::telemetry::Counter;
@@ -119,17 +119,88 @@ pub struct Mcb8Scratch {
     best_offsets: Vec<usize>,
 }
 
-/// Rewrite the CPU requirements for yield `y` and attempt the packing.
+impl Mcb8Scratch {
+    /// Kernel knob of the owned packing arena (bench/test entry point);
+    /// [`KernelMode::Arena`] also disables this module's probe pruning so
+    /// the PR 3 baseline is reproduced end to end.
+    pub fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.pack.set_kernel_mode(mode);
+    }
+}
+
+/// Sound necessary-condition precheck for a packing attempt (DESIGN.md
+/// §Packing internals). Returns true only when **no** packing of `jobs`
+/// can succeed on `up_capacity` placeable unit-capacity nodes:
+///
+/// * some job with tasks needs more than a whole node in one dimension
+///   (`cpu_req`/`mem` beyond `1 + 1e-9` — even a pristine node rejects it
+///   under the fill loop's `≤ capacity + 1e-9` comparison, as does the
+///   pinned pre-placement check), or
+/// * the summed demand `Σ tasks·cpu_req` (resp. `Σ tasks·mem`) exceeds the
+///   total capacity of placeable nodes plus the slack the fill loop could
+///   conceivably manufacture: each placement may overshoot its node by at
+///   most `1e-9`, so a successful pack consumes at most
+///   `up_capacity + total_tasks·1e-9` per dimension; an extra `1e-9`
+///   relative margin swamps f64 summation error.
+///
+/// One-sided by construction: a false return promises nothing, a true
+/// return implies `pack_into` fails, so probes can skip the fill loop
+/// without changing their boolean outcome.
+pub fn bounds_infeasible(jobs: &[PackJob], up_capacity: f64) -> bool {
+    let mut cpu = 0.0f64;
+    let mut mem = 0.0f64;
+    let mut tasks = 0u64;
+    for pj in jobs {
+        if pj.tasks == 0 {
+            continue;
+        }
+        if pj.cpu_req > 1.0 + 1e-9 || pj.mem > 1.0 + 1e-9 {
+            return true;
+        }
+        let t = pj.tasks as f64;
+        cpu += t * pj.cpu_req;
+        mem += t * pj.mem;
+        tasks += pj.tasks as u64;
+    }
+    let slack = 1e-9 * (tasks as f64 + 1.0);
+    cpu > up_capacity + slack + 1e-9 * cpu || mem > up_capacity + slack + 1e-9 * mem
+}
+
+/// Flush the packing kernel's per-allocation tallies into the telemetry
+/// counters (shared with the stretch allocation path).
+pub(crate) fn flush_pack_stats(sim: &Sim, pack: &mut PackScratch) {
+    let (skips, descents) = pack.take_stats();
+    if skips > 0 {
+        sim.probe.count(Counter::PackSortSkips, skips);
+    }
+    if descents > 0 {
+        sim.probe.count(Counter::PackTreeDescents, descents);
+    }
+}
+
+/// Rewrite the CPU requirements for yield `y` and attempt the packing,
+/// counting the probe. A probe whose aggregate demand already violates
+/// [`bounds_infeasible`] is answered false without running the fill loop
+/// (`pack_probes_pruned`) — this short-circuits the failing half of the
+/// yield bisection and most drop-restart iterations.
+#[allow(clippy::too_many_arguments)]
 fn probe(
+    sim: &Sim,
     y: f64,
     jobs: &mut [PackJob],
     needs: &[f64],
     nodes: usize,
     blocked: &[bool],
+    up_capacity: f64,
     pack: &mut PackScratch,
 ) -> bool {
+    sim.probe.count(Counter::PackProbes, 1);
     for (pj, need) in jobs.iter_mut().zip(needs) {
         pj.cpu_req = (need * y).min(1.0);
+    }
+    if pack.kernel_mode() != KernelMode::Arena && bounds_infeasible(jobs, up_capacity) {
+        sim.probe.count(Counter::PackProbesPruned, 1);
+        return false;
     }
     pack_into(jobs, nodes, SortKey::Max, Some(blocked), pack)
 }
@@ -159,6 +230,17 @@ pub fn mcb8_allocate_prepared(
     candidates: &[JobId],
     scratch: &mut Mcb8Scratch,
 ) -> Mcb8Outcome {
+    let out = allocate_core(sim, pin, candidates, scratch);
+    flush_pack_stats(sim, &mut scratch.pack);
+    out
+}
+
+fn allocate_core(
+    sim: &Sim,
+    pin: Option<PinRule>,
+    candidates: &[JobId],
+    scratch: &mut Mcb8Scratch,
+) -> Mcb8Outcome {
     let nodes = sim.cluster.nodes;
     let Mcb8Scratch { pack, jobs, needs, blocked, best_slab, best_offsets } = scratch;
     // Scenario engine: down/draining nodes receive no tasks. All-false on a
@@ -183,21 +265,22 @@ pub fn mcb8_allocate_prepared(
         needs.push(spec.cpu_need);
     }
     let mut dropped = Vec::new();
+    // Total capacity of placeable nodes, per dimension (unit capacities):
+    // the bounds side of every probe's prune check.
+    let up_capacity = blocked.iter().filter(|&&b| !b).count() as f64;
 
     loop {
         if jobs.is_empty() {
             return Mcb8Outcome::empty(dropped);
         }
         // Fast path: everything fits at full yield.
-        sim.probe.count(Counter::PackProbes, 1);
-        if probe(1.0, jobs, needs, nodes, blocked, pack) {
+        if probe(sim, 1.0, jobs, needs, nodes, blocked, up_capacity, pack) {
             let mapping = materialize(jobs, pack.slab(), pack.offsets());
             return Mcb8Outcome { mapping, yield_achieved: 1.0, dropped };
         }
         // Memory-only feasibility (Y -> 0). If even that fails, drop the
         // lowest-priority candidate and retry with the rest.
-        sim.probe.count(Counter::PackProbes, 1);
-        if !probe(0.0, jobs, needs, nodes, blocked, pack) {
+        if !probe(sim, 0.0, jobs, needs, nodes, blocked, up_capacity, pack) {
             sim.probe.count(Counter::PackDropRestarts, 1);
             let victim = jobs
                 .pop()
@@ -211,8 +294,7 @@ pub fn mcb8_allocate_prepared(
         let (mut lo, mut hi) = (0.0f64, 1.0f64);
         while hi - lo > ACCURACY {
             let mid = 0.5 * (lo + hi);
-            sim.probe.count(Counter::PackProbes, 1);
-            if probe(mid, jobs, needs, nodes, blocked, pack) {
+            if probe(sim, mid, jobs, needs, nodes, blocked, up_capacity, pack) {
                 pack.save_to(best_slab, best_offsets);
                 lo = mid;
             } else {
@@ -435,6 +517,33 @@ mod tests {
 
     fn job(id: u32, tasks: u32, need: f64, mem: f64) -> Job {
         Job { id, submit: 0.0, tasks, cpu_need: need, mem, proc_time: 1000.0 }
+    }
+
+    #[test]
+    fn bounds_precheck_is_one_sided() {
+        use crate::packing::mcb8::pack_masked;
+        let pj = |tasks: u32, cpu: f64, mem: f64| PackJob {
+            id: 0,
+            tasks,
+            cpu_req: cpu,
+            mem,
+            pinned: None,
+        };
+        // Aggregate CPU demand over capacity: prune fires AND the pack fails.
+        let over = vec![pj(3, 0.9, 0.1)];
+        assert!(bounds_infeasible(&over, 2.0));
+        assert!(pack_masked(&over, 2, SortKey::Max, None).is_none());
+        // A per-task requirement beyond a whole node.
+        assert!(bounds_infeasible(&[pj(1, 0.1, 1.5)], 4.0));
+        // Zero-task jobs are vacuous and must not trigger the dimension check.
+        assert!(!bounds_infeasible(&[pj(0, 0.1, 1.5)], 4.0));
+        // Feasible aggregate demand: no prune.
+        assert!(!bounds_infeasible(&[pj(2, 0.5, 0.5)], 2.0));
+        // Fragmentation-infeasible but bounds-feasible: the precheck is
+        // one-sided, so it must stay silent even though the pack fails.
+        let frag = vec![pj(3, 0.1, 0.6)];
+        assert!(!bounds_infeasible(&frag, 2.0));
+        assert!(pack_masked(&frag, 2, SortKey::Max, None).is_none());
     }
 
     #[test]

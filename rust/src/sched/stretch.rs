@@ -21,9 +21,12 @@
 //! `RepackCache`): required yields depend on raw flow and virtual times,
 //! which differ at any two distinct event instants.
 
-use crate::packing::mcb8::{pack_into, PackJob, PackScratch, SortKey};
-use crate::packing::search::{collect_candidates, pinned_placement, PinRule};
+use crate::packing::mcb8::{pack_into, KernelMode, PackJob, PackScratch, SortKey};
+use crate::packing::search::{
+    bounds_infeasible, collect_candidates, flush_pack_stats, pinned_placement, PinRule,
+};
 use crate::sim::{JobId, NodeId, Sim};
+use crate::telemetry::Counter;
 
 /// Outcome: mapping plus the yield each placed job needs to hit the target.
 #[derive(Debug, Clone, PartialEq)]
@@ -69,11 +72,26 @@ pub struct StretchScratch {
 }
 
 impl StretchScratch {
+    /// Kernel knob of the owned packing arena (bench/test entry point);
+    /// [`KernelMode::Arena`] also disables the probe pruning below.
+    pub fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.pack.set_kernel_mode(mode);
+    }
+
     /// One probe at inverse target `inv`: recompute every candidate's
     /// required yield (None if any job would need yield > 1 — checked in
     /// candidate order, before packing, exactly like the seed `try_target`),
-    /// rewrite the CPU requirements, and attempt the packing.
-    fn probe(&mut self, sim: &Sim, inv: f64, period: f64, nodes: usize) -> bool {
+    /// rewrite the CPU requirements, and attempt the packing. As in plain
+    /// MCB8, a probe whose aggregate demand violates the sound bounds
+    /// precheck is answered false without running the fill loop.
+    fn probe(
+        &mut self,
+        sim: &Sim,
+        inv: f64,
+        period: f64,
+        nodes: usize,
+        up_capacity: f64,
+    ) -> bool {
         let s = if inv <= 0.0 { f64::INFINITY } else { 1.0 / inv };
         self.yields.clear();
         for (pj, need) in self.jobs.iter_mut().zip(&self.needs) {
@@ -82,6 +100,12 @@ impl StretchScratch {
             };
             self.yields.push(y);
             pj.cpu_req = (need * y).min(1.0);
+        }
+        if self.pack.kernel_mode() != KernelMode::Arena
+            && bounds_infeasible(&self.jobs, up_capacity)
+        {
+            sim.probe.count(Counter::PackProbesPruned, 1);
+            return false;
         }
         pack_into(&self.jobs, nodes, SortKey::Max, Some(&self.blocked), &mut self.pack)
     }
@@ -103,6 +127,17 @@ pub fn mcb8_stretch_allocate(sim: &Sim, period: f64, pin: Option<PinRule>) -> St
 /// hot-path entry point; `DfrsPolicy` holds one across events). Byte-
 /// identical to `packing::reference::mcb8_stretch_allocate_seed`.
 pub fn mcb8_stretch_allocate_into(
+    sim: &Sim,
+    period: f64,
+    pin: Option<PinRule>,
+    scratch: &mut StretchScratch,
+) -> StretchOutcome {
+    let out = stretch_core(sim, period, pin, scratch);
+    flush_pack_stats(sim, &mut scratch.pack);
+    out
+}
+
+fn stretch_core(
     sim: &Sim,
     period: f64,
     pin: Option<PinRule>,
@@ -136,6 +171,7 @@ pub fn mcb8_stretch_allocate_into(
         });
         scratch.needs.push(spec.cpu_need);
     }
+    let up_capacity = scratch.blocked.iter().filter(|&&b| !b).count() as f64;
 
     loop {
         if scratch.jobs.is_empty() {
@@ -149,7 +185,7 @@ pub fn mcb8_stretch_allocate_into(
         // Search over inv = 1/S in (0, 1]: larger inv = tighter stretch.
         // inv -> 0 means S -> inf: every job needs yield ~0, so feasibility
         // there is pure memory packing.
-        if !scratch.probe(sim, 0.0, period, nodes) {
+        if !scratch.probe(sim, 0.0, period, nodes, up_capacity) {
             let victim = scratch.jobs.pop().unwrap().id;
             scratch.needs.pop();
             dropped.push(victim);
@@ -157,14 +193,14 @@ pub fn mcb8_stretch_allocate_into(
         }
         scratch.save_best();
         let mut best_inv = 0.0f64;
-        if scratch.probe(sim, 1.0, period, nodes) {
+        if scratch.probe(sim, 1.0, period, nodes, up_capacity) {
             scratch.save_best();
             best_inv = 1.0;
         } else {
             let (mut lo, mut hi) = (0.0f64, 1.0f64);
             while hi - lo > ACCURACY {
                 let mid = 0.5 * (lo + hi);
-                if scratch.probe(sim, mid, period, nodes) {
+                if scratch.probe(sim, mid, period, nodes, up_capacity) {
                     scratch.save_best();
                     lo = mid;
                     best_inv = mid;
@@ -213,7 +249,15 @@ pub fn improve_max_stretch(sim: &Sim, yields: &mut [(JobId, f64)], period: f64) 
     let predicted = |j: JobId, y: f64| {
         (sim.jobs[j].flow_time(sim.now) + period) / (sim.vt(j) + y * period).max(1e-9)
     };
-    for _ in 0..10_000 {
+    // Slack-derived round bound: every round raises exactly one job by up
+    // to STEP, and a job entering at yield y can absorb at most
+    // ceil((1-y)/STEP) raises before it clamps at 1.0 and leaves the
+    // candidate set — so the loop provably exhausts its candidates within
+    // this many rounds and the bound is never the binding exit. (The seed's
+    // fixed 10_000 silently truncated improvement on large job sets.)
+    let max_rounds: usize =
+        yields.iter().map(|&(_, y)| (((1.0 - y).max(0.0)) / STEP).ceil() as usize).sum();
+    for _ in 0..max_rounds {
         // Worst predicted stretch among jobs that can still be raised.
         let mut worst: Option<usize> = None;
         let mut worst_s = 0.0;
@@ -235,10 +279,15 @@ pub fn improve_max_stretch(sim: &Sim, yields: &mut [(JobId, f64)], period: f64) 
         }
         let Some(idx) = worst else { break };
         let (j, ref mut y) = yields[idx];
-        *y = (*y + STEP).min(1.0);
+        let before = *y;
+        *y = (before + STEP).min(1.0);
+        // Debit the *realized* raise: when the step clamps at 1.0 the job
+        // takes less than STEP, and debiting the full step would leak node
+        // slack that later rounds could still hand to other jobs.
+        let delta = *y - before;
         let need = sim.jobs[j].spec.cpu_need;
         for &n in &sim.jobs[j].placement {
-            slack[n] -= need * STEP;
+            slack[n] -= need * delta;
         }
     }
 }
@@ -320,6 +369,77 @@ mod tests {
         let mut ys = vec![(0usize, 0.2f64)];
         improve_max_stretch(&sim, &mut ys, 600.0);
         assert!(ys[0].1 > 0.9, "slack should push yield to ~1: {}", ys[0].1);
+    }
+
+    #[test]
+    fn clamped_raise_debits_only_the_realized_delta() {
+        // Job A sits at yield 0.995 with the worst predicted stretch, so it
+        // is raised first and clamps at 1.0 — a realized raise of 0.005,
+        // not the full 0.01 step. The leak debited need*STEP = 0.004 of
+        // node slack instead of need*delta = 0.002, which would leave job B
+        // one full raise short: B must end at 0.60, not 0.59.
+        let mut sim = sim_with(vec![job(0, 1, 0.4, 0.1), job(1, 1, 1.0, 0.1)], 1);
+        sim.start_job(0, vec![0]);
+        sim.start_job(1, vec![0]);
+        sim.jobs[0].vt = 1.0; // worst predicted stretch -> raised first
+        sim.jobs[1].vt = 1000.0;
+        sim.now = 1000.0;
+        let mut ys = vec![(0usize, 0.995f64), (1usize, 0.0f64)];
+        improve_max_stretch(&sim, &mut ys, 600.0);
+        assert_eq!(ys[0].1, 1.0, "A clamps at full yield");
+        assert!(
+            (ys[1].1 - 0.60).abs() < 1e-3,
+            "B should absorb the slack A did not take: y_B = {}",
+            ys[1].1
+        );
+        // The granted yields exactly saturate the node: 0.4*1.0 + 1.0*0.6.
+        let used: f64 = ys.iter().map(|&(j, y)| sim.jobs[j].spec.cpu_need * y).sum();
+        assert!(used <= 1.0 + 1e-9, "node over-committed: {used}");
+    }
+
+    #[test]
+    fn improve_loop_terminates_by_exhaustion_not_round_bound() {
+        const STEP: f64 = 0.01;
+        // Three contention shapes; the last needs ~15_000 raises, past the
+        // seed's fixed 10_000-round bound, so it proves the slack-derived
+        // bound lifted the truncation. At exit, every job must either sit
+        // at full yield or lack a full STEP of slack on some of its nodes —
+        // exactly the fixpoint an unbounded loop reaches.
+        let shapes: Vec<(Vec<f64>, Vec<f64>)> = vec![
+            (vec![0.3, 0.5, 0.2], vec![0.0, 0.1, 0.25]),
+            (vec![1.0, 1.0, 1.0], vec![0.3, 0.3, 0.3]),
+            (vec![0.001; 150], vec![0.0; 150]),
+        ];
+        for (needs, y0) in shapes {
+            let jobs: Vec<Job> =
+                needs.iter().enumerate().map(|(i, &nd)| job(i as u32, 1, nd, 0.005)).collect();
+            let count = jobs.len();
+            let mut sim = sim_with(jobs, 2);
+            for i in 0..count {
+                sim.start_job(i, vec![i % 2]);
+                sim.jobs[i].vt = (i as f64 + 1.0) * 7.0;
+            }
+            sim.now = 500.0;
+            let mut ys: Vec<(JobId, f64)> =
+                y0.iter().enumerate().map(|(i, &y)| (i, y)).collect();
+            improve_max_stretch(&sim, &mut ys, 600.0);
+            let mut slack = vec![1.0f64; sim.cluster.nodes];
+            for &(j, y) in &ys {
+                let need = sim.jobs[j].spec.cpu_need;
+                for &n in &sim.jobs[j].placement {
+                    slack[n] -= need * y;
+                }
+            }
+            for &(j, y) in &ys {
+                if y >= 1.0 - 1e-9 {
+                    continue;
+                }
+                let need = sim.jobs[j].spec.cpu_need;
+                let raisable =
+                    sim.jobs[j].placement.iter().all(|&n| slack[n] >= need * STEP - 1e-12);
+                assert!(!raisable, "job {j} still raisable at yield {y}: loop truncated early");
+            }
+        }
     }
 
     #[test]

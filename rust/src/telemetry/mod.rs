@@ -88,10 +88,18 @@ pub enum Counter {
     ScenarioDrainEnd,
     ScenarioShrink,
     ScenarioGrow,
+    /// Packing probes answered by the sound bounds precheck without running
+    /// the fill loop (`packing::search::bounds_infeasible`; plain + stretch).
+    PackProbesPruned,
+    /// `pack_into` calls that reused the previous sorted job lists verbatim
+    /// (order-stable resort skip).
+    PackSortSkips,
+    /// Eligibility-index nodes visited by the indexed fill loop.
+    PackTreeDescents,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 22] = [
+    pub const ALL: [Counter; 25] = [
         Counter::EventsTotal,
         Counter::EventsSubmission,
         Counter::EventsCompletion,
@@ -114,6 +122,9 @@ impl Counter {
         Counter::ScenarioDrainEnd,
         Counter::ScenarioShrink,
         Counter::ScenarioGrow,
+        Counter::PackProbesPruned,
+        Counter::PackSortSkips,
+        Counter::PackTreeDescents,
     ];
 
     pub fn name(self) -> &'static str {
@@ -140,6 +151,9 @@ impl Counter {
             Counter::ScenarioDrainEnd => "scenario_drain_end",
             Counter::ScenarioShrink => "scenario_shrink",
             Counter::ScenarioGrow => "scenario_grow",
+            Counter::PackProbesPruned => "pack_probes_pruned",
+            Counter::PackSortSkips => "pack_sort_skips",
+            Counter::PackTreeDescents => "pack_tree_descents",
         }
     }
 

@@ -7,14 +7,27 @@
 
 use crate::util::rng::Rng;
 
-/// Run `prop` on `n` cases produced by `gen`. Panics with diagnostics on the
-/// first failing case.
+/// Budget multiplier for property suites: CI's release-mode differential
+/// smoke sets `DFRS_FORALL_SCALE` to run the same properties over an
+/// enlarged case count without touching the test code. Unset (the normal
+/// developer run) means 1.
+pub fn budget_scale() -> usize {
+    std::env::var("DFRS_FORALL_SCALE")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Run `prop` on `n` cases produced by `gen` (times the `DFRS_FORALL_SCALE`
+/// budget multiplier). Panics with diagnostics on the first failing case.
 pub fn forall<T, G, P>(seed: u64, n: usize, mut gen: G, mut prop: P)
 where
     T: std::fmt::Debug,
     G: FnMut(&mut Rng) -> T,
     P: FnMut(&T) -> Result<(), String>,
 {
+    let n = n * budget_scale();
     let mut rng = Rng::new(seed);
     for i in 0..n {
         let case = gen(&mut rng);
@@ -46,7 +59,7 @@ mod tests {
                 }
             },
         );
-        assert_eq!(count, 100);
+        assert_eq!(count, 100 * budget_scale());
     }
 
     #[test]

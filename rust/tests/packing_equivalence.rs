@@ -7,14 +7,17 @@
 //! `tests/engine_equivalence.rs`.
 
 use dfrs::alloc::RustSolver;
-use dfrs::packing::mcb8::{pack_masked, PackJob, SortKey};
+use dfrs::packing::mcb8::{pack_into, pack_masked, KernelMode, PackJob, PackScratch, SortKey};
 use dfrs::packing::reference::{
     mcb8_allocate_seed, mcb8_stretch_allocate_seed, pack_masked_seed,
 };
-use dfrs::packing::search::{mcb8_allocate, PinRule, RepackCache};
+use dfrs::packing::search::{
+    bounds_infeasible, collect_candidates, mcb8_allocate, mcb8_allocate_prepared, Mcb8Scratch,
+    PinRule, RepackCache,
+};
 use dfrs::scenario::ClusterEvent;
 use dfrs::sched::greedy::greedy_place;
-use dfrs::sched::stretch::mcb8_stretch_allocate;
+use dfrs::sched::stretch::{mcb8_stretch_allocate, mcb8_stretch_allocate_into, StretchScratch};
 use dfrs::sim::{PlatformChange, Sim, SimConfig};
 use dfrs::util::check::forall;
 use dfrs::util::rng::Rng;
@@ -125,10 +128,179 @@ fn prop_scratch_pack_matches_seed_pack() {
 }
 
 #[test]
+fn prop_forced_kernels_match_seed_pack_across_warm_reuse() {
+    // Same raw-layer differential, but through two persistent scratches in
+    // forced kernel modes. Reusing the scratches across heterogeneous cases
+    // exercises the order-stable resort skip (stale lists + assignment
+    // comparison) and eligibility-tree rebuild/tombstone paths; the arena
+    // scratch pins the PR 3 linear baseline. Both must stay byte-identical
+    // to the seed on every case.
+    let mut indexed = PackScratch::new();
+    indexed.set_kernel_mode(KernelMode::Indexed);
+    let mut arena = PackScratch::new();
+    arena.set_kernel_mode(KernelMode::Arena);
+    forall(
+        3030,
+        150,
+        |rng: &mut Rng| {
+            let nodes = 2 + rng.below(8) as usize;
+            let njobs = 1 + rng.below(10) as usize;
+            let jobs: Vec<PackJob> = (0..njobs)
+                .map(|id| {
+                    let tasks = 1 + rng.below(3) as u32;
+                    let pinned = if rng.chance(0.25) {
+                        Some((0..tasks).map(|k| (id + k as usize) % nodes).collect())
+                    } else {
+                        None
+                    };
+                    PackJob {
+                        id,
+                        tasks,
+                        cpu_req: rng.range(0.0, 1.0),
+                        mem: rng.range(0.05, 0.9),
+                        pinned,
+                    }
+                })
+                .collect();
+            let blocked: Option<Vec<bool>> = if rng.chance(0.5) {
+                Some((0..nodes).map(|_| rng.chance(0.25)).collect())
+            } else {
+                None
+            };
+            let key = if rng.chance(0.5) { SortKey::Max } else { SortKey::Sum };
+            (jobs, nodes, blocked, key)
+        },
+        |(jobs, nodes, blocked, key)| {
+            let mask = blocked.as_deref();
+            let seed = pack_masked_seed(jobs, *nodes, *key, mask);
+            for (name, scratch) in [("indexed", &mut indexed), ("arena", &mut arena)] {
+                let got = if pack_into(jobs, *nodes, *key, mask, scratch) {
+                    Some(scratch.to_result(jobs))
+                } else {
+                    None
+                };
+                if got != seed {
+                    return Err(format!("{name} kernel diverged: {got:?} vs {seed:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bounds_prune_implies_seed_pack_failure() {
+    // Soundness of the probe precheck: whenever `bounds_infeasible` claims
+    // a job set cannot pack into the unblocked capacity, the reference pack
+    // must indeed fail. The generator is biased toward overload so the
+    // prune fires on a healthy fraction of cases (asserted non-vacuous).
+    let mut fired = 0u32;
+    forall(
+        515,
+        200,
+        |rng: &mut Rng| {
+            let nodes = 1 + rng.below(5) as usize;
+            let njobs = 1 + rng.below(12) as usize;
+            let jobs: Vec<PackJob> = (0..njobs)
+                .map(|id| PackJob {
+                    id,
+                    tasks: rng.below(6) as u32,
+                    cpu_req: rng.range(0.0, 1.2),
+                    mem: rng.range(0.05, 1.1),
+                    pinned: None,
+                })
+                .collect();
+            let blocked: Vec<bool> = (0..nodes).map(|_| rng.chance(0.4)).collect();
+            (jobs, nodes, blocked)
+        },
+        |(jobs, nodes, blocked)| {
+            let up = blocked.iter().filter(|&&b| !b).count() as f64;
+            if bounds_infeasible(jobs, up) {
+                fired += 1;
+                if pack_masked_seed(jobs, *nodes, SortKey::Max, Some(blocked.as_slice()))
+                    .is_some()
+                {
+                    return Err("prune fired on a packing the seed solves".into());
+                }
+            }
+            Ok(())
+        },
+    );
+    assert!(fired > 20, "precheck never fired ({fired} hits) — generator too tame");
+}
+
+#[test]
+fn prop_pack_feasibility_under_degenerate_masks() {
+    // Availability-mask edge cases: with every node blocked, no job with a
+    // real memory footprint can place, in any kernel or in the seed; with
+    // exactly one pristine node, the pristine-node short-circuit must agree
+    // byte-for-byte across kernels and with the seed.
+    let mut indexed = PackScratch::new();
+    indexed.set_kernel_mode(KernelMode::Indexed);
+    let mut arena = PackScratch::new();
+    arena.set_kernel_mode(KernelMode::Arena);
+    forall(
+        606,
+        120,
+        |rng: &mut Rng| {
+            let nodes = 1 + rng.below(6) as usize;
+            let njobs = 1 + rng.below(8) as usize;
+            let jobs: Vec<PackJob> = (0..njobs)
+                .map(|id| PackJob {
+                    id,
+                    tasks: 1 + rng.below(3) as u32,
+                    cpu_req: rng.range(0.0, 1.0),
+                    mem: rng.range(0.05, 0.9),
+                    pinned: None,
+                })
+                .collect();
+            let open = rng.below(nodes as u64) as usize;
+            (jobs, nodes, open)
+        },
+        |(jobs, nodes, open)| {
+            let all = vec![true; *nodes];
+            if pack_masked_seed(jobs, *nodes, SortKey::Max, Some(all.as_slice())).is_some() {
+                return Err("seed packed onto a fully-blocked platform".into());
+            }
+            for scratch in [&mut indexed, &mut arena] {
+                if pack_into(jobs, *nodes, SortKey::Max, Some(all.as_slice()), scratch) {
+                    return Err("kernel packed onto a fully-blocked platform".into());
+                }
+            }
+            let mut one = vec![true; *nodes];
+            one[*open] = false;
+            let seed = pack_masked_seed(jobs, *nodes, SortKey::Max, Some(one.as_slice()));
+            for (name, scratch) in [("indexed", &mut indexed), ("arena", &mut arena)] {
+                let got = if pack_into(jobs, *nodes, SortKey::Max, Some(one.as_slice()), scratch)
+                {
+                    Some(scratch.to_result(jobs))
+                } else {
+                    None
+                };
+                if got != seed {
+                    return Err(format!(
+                        "{name} diverged on single-pristine mask: {got:?} vs {seed:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_mcb8_allocation_matches_seed_core() {
     // Sim is not Debug, so this loop is hand-rolled rather than forall-ed;
-    // the fixed seed keeps every case reproducible.
+    // the fixed seed keeps every case reproducible. Besides the default
+    // (Auto) path, warm forced-Indexed and forced-Arena scratches run every
+    // case: the eligibility tree must match the seed even on inputs the
+    // cutover would route to the linear scan, and list/tree state must
+    // never leak between heterogeneous allocations.
     let mut rng = Rng::new(7701);
+    let mut indexed = Mcb8Scratch::default();
+    indexed.set_kernel_mode(KernelMode::Indexed);
+    let mut arena = Mcb8Scratch::default();
+    arena.set_kernel_mode(KernelMode::Arena);
     for case in 0..60 {
         let degrade = rng.chance(0.4);
         let pin = pin_cases(&mut rng);
@@ -147,12 +319,23 @@ fn prop_mcb8_allocation_matches_seed_core() {
             live.yield_achieved,
             seed.yield_achieved
         );
+        let cands = collect_candidates(&sim);
+        let tree = mcb8_allocate_prepared(&sim, pin, &cands, &mut indexed);
+        assert_eq!(tree, seed, "case {case}: forced-indexed kernel diverged");
+        assert_eq!(tree.yield_achieved.to_bits(), seed.yield_achieved.to_bits());
+        let flat = mcb8_allocate_prepared(&sim, pin, &cands, &mut arena);
+        assert_eq!(flat, seed, "case {case}: arena-baseline kernel diverged");
+        assert_eq!(flat.yield_achieved.to_bits(), seed.yield_achieved.to_bits());
     }
 }
 
 #[test]
 fn prop_stretch_allocation_matches_seed_core() {
     let mut rng = Rng::new(7702);
+    let mut indexed = StretchScratch::default();
+    indexed.set_kernel_mode(KernelMode::Indexed);
+    let mut arena = StretchScratch::default();
+    arena.set_kernel_mode(KernelMode::Arena);
     for case in 0..60 {
         let degrade = rng.chance(0.4);
         let pin = pin_cases(&mut rng);
@@ -160,6 +343,10 @@ fn prop_stretch_allocation_matches_seed_core() {
         let sim = random_live_sim(&mut rng, degrade);
         let live = mcb8_stretch_allocate(&sim, period, pin);
         let seed = mcb8_stretch_allocate_seed(&sim, period, pin);
+        let tree = mcb8_stretch_allocate_into(&sim, period, pin, &mut indexed);
+        assert_eq!(tree, seed, "case {case}: forced-indexed stretch kernel diverged");
+        let flat = mcb8_stretch_allocate_into(&sim, period, pin, &mut arena);
+        assert_eq!(flat, seed, "case {case}: arena-baseline stretch kernel diverged");
         assert_eq!(
             live.mapping, seed.mapping,
             "case {case} (degrade={degrade}, pin={pin:?}, T={period}): mapping diverged"
