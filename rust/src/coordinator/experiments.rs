@@ -20,7 +20,8 @@ use crate::sched::registry::{
 };
 use crate::coordinator::grid::{self, FaultPolicy};
 use crate::sim::{
-    run, run_guarded, run_instrumented, run_scenario, EngineKind, RunOptions, SimConfig, SimResult,
+    resume_guarded, run, run_guarded, run_instrumented, run_scenario, snapshot, EngineKind,
+    ResumeOverrides, RunOptions, SimConfig, SimResult,
 };
 use crate::telemetry::{RecorderConfig, Telemetry};
 use crate::util::cli::Args;
@@ -206,11 +207,38 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     let scn = scenario::load(&scn_name, &trace).map_err(|e| anyhow::anyhow!(e))?;
     scn.validate(trace.nodes).map_err(|e| anyhow::anyhow!("scenario {scn_name:?}: {e}"))?;
     let mut policy = make_policy(&alg, period)?;
-    let solver = crate::runtime::solver_by_name(&args.str_or("solver", "auto"))?;
+    let solver_name = args.str_or("solver", "auto");
+    let solver = crate::runtime::solver_by_name(&solver_name)?;
+    let snapshot = match (args.get("snapshot"), args.get("snapshot-every")) {
+        (None, None) => None,
+        (None, Some(_)) => {
+            return Err(crate::error::DfrsError::InvalidArg {
+                arg: "snapshot-every".into(),
+                message: "requires --snapshot PATH to write images to".into(),
+            }
+            .into())
+        }
+        (Some(path), every) => {
+            // A path without a cadence still arms emergency images: budget
+            // and watchdog trips write a resumable image before erroring.
+            let (every_events, every_vt) = match every {
+                Some(spec) => snapshot::parse_every(spec)?,
+                None => (None, None),
+            };
+            Some(snapshot::SnapshotConfig {
+                path: PathBuf::from(path),
+                every_events,
+                every_vt,
+                scenario_name: scn_name.clone(),
+                solver_name: solver_name.clone(),
+            })
+        }
+    };
     let opts = RunOptions {
         audit: args.flag("audit"),
         trace_out: args.get("trace-out").map(PathBuf::from),
         telemetry: args.get("telemetry").map(PathBuf::from),
+        snapshot,
         ..RunOptions::default()
     };
     let t0 = std::time::Instant::now();
@@ -246,6 +274,9 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     }
     if let Some(p) = &opts.telemetry {
         println!("telemetry          : {} (render with `dfrs report`)", p.display());
+    }
+    if let Some(sc) = &opts.snapshot {
+        println!("snapshots          : {} (resume with `dfrs resume-sim`)", sc.path.display());
     }
     if args.flag("bound") {
         let b = max_stretch_lower_bound(&trace, TAU, 1e-3);
@@ -311,6 +342,58 @@ pub fn cmd_replay(args: &Args) -> Result<()> {
         }
         Some(d) => anyhow::bail!("replay of {path} diverged: {d}"),
     }
+}
+
+/// Restore a snapshot image written by `simulate --snapshot` (or left
+/// behind by a budget/watchdog trip) and continue the run to completion.
+/// Without overrides the resumed run keeps the image's own budget and
+/// continues snapshotting to the same path; the completed run's result
+/// digest, recorded trace, and telemetry are byte-identical to an
+/// uninterrupted armed run (tests/crash_safety.rs). An image written by a
+/// budget trip needs a raised `--max-events` / `--max-sim-time` /
+/// `--max-wall-secs`, or it trips again immediately.
+pub fn cmd_resume_sim(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: dfrs resume-sim IMAGE (written by `simulate --snapshot`)")?;
+    let img = snapshot::read_image(Path::new(path))?;
+    let mut ov = ResumeOverrides {
+        trace_out: args.get("trace-out").map(PathBuf::from),
+        telemetry: args.get("telemetry").map(PathBuf::from),
+        snapshot_path: args.get("snapshot").map(PathBuf::from),
+        ..ResumeOverrides::default()
+    };
+    let mut budget = img.budget.clone();
+    let mut touched = false;
+    if let Some(v) = args.get("max-events") {
+        budget.max_events = v.parse().context("--max-events")?;
+        touched = true;
+    }
+    if let Some(v) = args.get("max-sim-time") {
+        budget.max_sim_time = v.parse().context("--max-sim-time")?;
+        touched = true;
+    }
+    if let Some(v) = args.get("max-wall-secs") {
+        budget.max_wall_secs = v.parse().context("--max-wall-secs")?;
+        touched = true;
+    }
+    if touched {
+        ov.budget = Some(budget);
+    }
+    let t0 = std::time::Instant::now();
+    let (r, _tel) = resume_guarded(&img, ov)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("resumed image      : {path}");
+    println!("algorithm          : {}", img.alg);
+    println!("resumed at event   : {} (t = {:.0} s)", img.loop_state.events, img.state.now);
+    println!("max stretch        : {:.2}", r.max_stretch);
+    println!("avg stretch        : {:.2}", r.avg_stretch);
+    println!("preemptions        : {} ({:.2}/job)", r.preemptions, r.preempt_per_job);
+    println!("migrations         : {} ({:.2}/job)", r.migrations, r.migrate_per_job);
+    println!("makespan           : {:.0} s", r.makespan);
+    println!("sim wall time      : {:.2} s", wall);
+    Ok(())
 }
 
 /// Render a telemetry file written with `--telemetry`: counter table, phase
@@ -390,7 +473,7 @@ pub fn bench_table2(args: &Args) -> Result<()> {
         let cells = cross(algs.len(), traces.len());
         let keys: Vec<String> =
             cells.iter().map(|&(a, k)| format!("table2/{set_name}/{}/{k}", algs[a])).collect();
-        let outcomes = grid::run_cells(&keys, &fp, |i| {
+        let outcomes = grid::run_cells(&keys, &fp, |i, _ctx| {
             let (a, k) = cells[i];
             let r = run_alg(algs[a], &traces[k], s.period)?;
             Ok(vec![r.max_stretch / bounds.get(k, &traces[k]).max(1.0)])
@@ -686,6 +769,23 @@ fn scenario_grid_algorithms() -> Vec<&'static str> {
     vec!["EASY", "GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"]
 }
 
+/// The nine value columns of one scenario-grid cell (five metrics plus
+/// four engine counters) — shared by the fresh-run and resumed-from-image
+/// paths so both produce byte-identical checkpoint records.
+fn scenario_cell_values(r: &SimResult, tel: &Telemetry) -> Vec<f64> {
+    vec![
+        r.max_stretch,
+        r.avg_stretch,
+        r.interrupted_jobs as f64,
+        r.preempt_per_job,
+        r.avail_utilization,
+        tel.counter("events_total") as f64,
+        tel.counter("pack_probes") as f64,
+        tel.counter("opportunistic_starts") as f64,
+        tel.counter("requeue_penalties") as f64,
+    ]
+}
+
 /// Scenario grid (ROADMAP: "as many scenarios as you can imagine"): run the
 /// algorithm sweep against every built-in platform scenario — failures,
 /// drains, arrival bursts, diurnal waves and elastic capacity — on scaled
@@ -735,11 +835,42 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
         .iter()
         .map(|&(a, sc, k)| format!("scenarios/{}/{}/{k}", algs[a], scenario_names[sc]))
         .collect();
-    let outcomes = grid::run_cells(&keys, &fp, |i| {
+    let outcomes = grid::run_cells(&keys, &fp, |i, ctx| {
         let (a, sc, k) = flat[i];
         let trace = &traces[k];
+        // Sub-cell resume: when the campaign checkpoints, each cell arms
+        // mid-run snapshot images on its `CellCtx` path, and a retried or
+        // resumed cell restarts from its last image instead of from
+        // scratch. The crash-safety contract (tests/crash_safety.rs)
+        // makes the resumed metrics and counters bit-identical to an
+        // uninterrupted armed run, so the campaign CSV is unchanged. A
+        // torn image (crash mid-snapshot) is detected by its checksum,
+        // discarded, and the cell reruns from the start.
+        if let Some(img_path) = ctx.image.as_ref().filter(|p| p.exists()) {
+            match snapshot::read_image(img_path) {
+                Ok(img) => {
+                    let (r, tel) = resume_guarded(&img, ResumeOverrides::default())?;
+                    let tel = tel.context("armed grid cell image carries a recorder")?;
+                    return Ok(scenario_cell_values(&r, &tel));
+                }
+                Err(e) => {
+                    eprintln!("warning: cell {}: discarding unusable image: {e}", keys[i]);
+                    let _ = std::fs::remove_file(img_path);
+                }
+            }
+        }
         let scn = scenario::builtin(scenario_names[sc], trace).map_err(|e| anyhow::anyhow!(e))?;
         let mut policy = make_policy(algs[a], s.period)?;
+        let opts = RunOptions {
+            snapshot: ctx.image.clone().map(|path| snapshot::SnapshotConfig {
+                path,
+                every_events: Some(256),
+                every_vt: None,
+                scenario_name: scenario_names[sc].to_string(),
+                solver_name: "rust".into(),
+            }),
+            ..RunOptions::default()
+        };
         // Counters-only telemetry on every cell: the recorder adds four
         // engine-internal columns to the campaign CSV and the transparency
         // contract (tests/telemetry.rs) guarantees the metrics themselves
@@ -752,20 +883,10 @@ pub fn bench_scenarios(args: &Args) -> Result<()> {
             Box::new(crate::alloc::RustSolver),
             EngineKind::Indexed,
             &scn,
-            &RunOptions::default(),
+            &opts,
             RecorderConfig::counters_only(),
         )?;
-        Ok(vec![
-            r.max_stretch,
-            r.avg_stretch,
-            r.interrupted_jobs as f64,
-            r.preempt_per_job,
-            r.avail_utilization,
-            tel.counter("events_total") as f64,
-            tel.counter("pack_probes") as f64,
-            tel.counter("opportunistic_starts") as f64,
-            tel.counter("requeue_penalties") as f64,
-        ])
+        Ok(scenario_cell_values(&r, &tel))
     })?;
     let per_scn = traces.len();
     let per_alg = scenario_names.len() * per_scn;

@@ -10,7 +10,6 @@
 //! worker count, preserving the grid's determinism contract
 //! (DESIGN.md §Determinism under rayon).
 
-use crate::error::DfrsError;
 use crate::util::cli::Args;
 use crate::util::jsonl::{self, fmt_bits, parse_bits};
 use anyhow::{bail, Context, Result};
@@ -93,6 +92,43 @@ pub fn prepare_checkpoint(fp: &FaultPolicy) -> Result<()> {
     Ok(())
 }
 
+/// Per-cell execution context handed to the [`run_cells`] closure.
+#[derive(Debug, Clone)]
+pub struct CellCtx {
+    /// 1-based attempt number (1 = first try, 2 = first retry, ...).
+    pub attempt: u32,
+    /// Cell-private snapshot image path, present when the campaign has a
+    /// `--checkpoint` (images live in a `<checkpoint>.images/` sibling
+    /// directory). A harness that arms [`crate::sim::snapshot`] on this
+    /// path gets *sub-cell* resume: a retried or resumed cell restarts
+    /// from its last mid-run image instead of from scratch, and the
+    /// image is deleted once the cell completes.
+    pub image: Option<PathBuf>,
+}
+
+/// `<checkpoint>.images/` — sibling directory holding per-cell mid-run
+/// snapshot images.
+fn images_dir(fp: &FaultPolicy) -> Option<PathBuf> {
+    fp.checkpoint.as_ref().map(|p| {
+        let mut s = p.as_os_str().to_os_string();
+        s.push(".images");
+        PathBuf::from(s)
+    })
+}
+
+/// Stable, collision-free image file name for a cell key: a sanitized tail
+/// of the key for debuggability plus an FNV-1a 64 hash of the full key
+/// (distinct keys can sanitize identically — `a/b` vs `a|b`).
+fn image_path(dir: &Path, key: &str) -> PathBuf {
+    let clean: String = key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect();
+    let tail = &clean[clean.len().saturating_sub(80)..];
+    let hash = crate::sim::snapshot::fnv1a64(key.as_bytes());
+    dir.join(format!("{tail}-{hash:016x}.image"))
+}
+
 /// Parse a checkpoint file into `key -> values`. The writer fsyncs after
 /// every record, so only the *last* line can be torn (a crash mid-append);
 /// a torn last line is skipped with a warning, a malformed earlier line is
@@ -150,18 +186,26 @@ pub fn sanitize(msg: &str) -> String {
 }
 
 /// Run every cell of a grid fault-tolerantly and in parallel, returning
-/// outcomes in input order (determinism contract). `f(i)` computes cell
-/// `keys[i]`; panics are caught, failures retried `fp.retries` times, and
-/// completed cells are checkpointed (and skipped on resume). Failed cells
-/// are *not* checkpointed, so a resumed campaign retries exactly them.
+/// outcomes in input order (determinism contract). `f(i, ctx)` computes
+/// cell `keys[i]` (the [`CellCtx`] carries the attempt number and the
+/// cell's snapshot-image path for sub-cell resume); panics are caught,
+/// failures retried `fp.retries` times, and completed cells are
+/// checkpointed (and skipped on resume). Failed cells are *not*
+/// checkpointed, so a resumed campaign retries exactly them — from their
+/// last mid-run image when the harness snapshots.
 pub fn run_cells<F>(keys: &[String], fp: &FaultPolicy, f: F) -> Result<Vec<CellOutcome>>
 where
-    F: Fn(usize) -> Result<Vec<f64>> + Sync + Send,
+    F: Fn(usize, &CellCtx) -> Result<Vec<f64>> + Sync + Send,
 {
     let done: HashMap<String, Vec<f64>> = match (&fp.checkpoint, fp.resume) {
         (Some(path), true) => load_checkpoint(path)?,
         _ => HashMap::new(),
     };
+    let images: Option<PathBuf> = images_dir(fp);
+    if let Some(dir) = &images {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("cannot create image directory {}", dir.display()))?;
+    }
     let writer: Option<Mutex<std::fs::File>> = match &fp.checkpoint {
         Some(path) => Some(Mutex::new(
             std::fs::OpenOptions::new()
@@ -178,7 +222,12 @@ where
         .par_iter()
         .enumerate()
         .map(|(i, key)| {
+            let image = images.as_ref().map(|dir| image_path(dir, key));
             if let Some(values) = done.get(key) {
+                // Finished in a previous run; any mid-run image is stale.
+                if let Some(img) = &image {
+                    let _ = std::fs::remove_file(img);
+                }
                 return CellOutcome {
                     key: key.clone(),
                     values: values.clone(),
@@ -188,9 +237,13 @@ where
             }
             let mut last_err = String::new();
             for attempt in 1..=fp.retries + 1 {
-                let result = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let ctx = CellCtx { attempt, image: image.clone() };
+                let result = catch_unwind(AssertUnwindSafe(|| f(i, &ctx)));
                 match result {
                     Ok(Ok(values)) => {
+                        if let Some(img) = &image {
+                            let _ = std::fs::remove_file(img);
+                        }
                         if let Some(w) = &writer {
                             let encoded = values
                                 .iter()
@@ -270,7 +323,7 @@ mod tests {
     #[test]
     fn panicking_cell_is_quarantined_not_fatal() {
         let fp = FaultPolicy { retries: 1, checkpoint: None, resume: false };
-        let out = run_cells(&keys(3), &fp, |i| {
+        let out = run_cells(&keys(3), &fp, |i, _ctx| {
             if i == 1 {
                 panic!("deliberate test panic");
             }
@@ -291,7 +344,9 @@ mod tests {
         use std::sync::atomic::{AtomicU32, Ordering};
         let calls = AtomicU32::new(0);
         let fp = FaultPolicy { retries: 2, checkpoint: None, resume: false };
-        let out = run_cells(&keys(1), &fp, |_| {
+        let out = run_cells(&keys(1), &fp, |_, ctx| {
+            assert_eq!(ctx.attempt, calls.load(Ordering::SeqCst) + 1, "1-based attempts");
+            assert!(ctx.image.is_none(), "no checkpoint, no image path");
             // Succeed only on the third attempt.
             if calls.fetch_add(1, Ordering::SeqCst) < 2 {
                 bail!("transient");
@@ -311,7 +366,7 @@ mod tests {
         let fp = FaultPolicy { retries: 0, checkpoint: Some(path.clone()), resume: false };
         prepare_checkpoint(&fp).unwrap();
         // First run: cell 1 fails, cells 0 and 2 are checkpointed.
-        let out = run_cells(&keys(3), &fp, |i| {
+        let out = run_cells(&keys(3), &fp, |i, _ctx| {
             if i == 1 {
                 bail!("first run failure");
             }
@@ -321,7 +376,7 @@ mod tests {
         assert_eq!(out.iter().filter(|o| o.error.is_some()).count(), 1);
         // Resume: a healthy function; only cell 1 actually executes.
         let fp2 = FaultPolicy { resume: true, ..fp.clone() };
-        let out2 = run_cells(&keys(3), &fp2, |i| Ok(vec![i as f64 * 2.0])).unwrap();
+        let out2 = run_cells(&keys(3), &fp2, |i, _ctx| Ok(vec![i as f64 * 2.0])).unwrap();
         std::fs::remove_file(&path).ok();
         assert!(out2.iter().all(|o| o.error.is_none()));
         assert_eq!(out2[0].attempts, 0, "restored from checkpoint");
@@ -330,6 +385,36 @@ mod tests {
         for (i, o) in out2.iter().enumerate() {
             assert_eq!(o.values, vec![i as f64 * 2.0]);
         }
+    }
+
+    #[test]
+    fn cell_images_are_provided_and_cleaned_up() {
+        let path = std::env::temp_dir().join(format!("dfrs-img-ckpt-{}.jsonl", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let fp = FaultPolicy { retries: 0, checkpoint: Some(path.clone()), resume: false };
+        prepare_checkpoint(&fp).unwrap();
+        let out = run_cells(&keys(2), &fp, |i, ctx| {
+            let img = ctx.image.as_ref().expect("checkpointed campaign provides image paths");
+            std::fs::write(img, b"pretend snapshot").unwrap();
+            Ok(vec![i as f64])
+        })
+        .unwrap();
+        assert!(out.iter().all(|o| o.error.is_none()));
+        let dir = images_dir(&fp).unwrap();
+        for k in keys(2) {
+            assert!(!image_path(&dir, &k).exists(), "image removed after success");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn image_paths_distinguish_similar_keys() {
+        let dir = Path::new("imgs");
+        let a = image_path(dir, "t/cell a");
+        let b = image_path(dir, "t|cell_a");
+        assert_ne!(a, b, "hash disambiguates keys that sanitize identically");
+        assert!(a.file_name().unwrap().to_str().unwrap().ends_with(".image"));
     }
 
     #[test]

@@ -46,6 +46,23 @@ COMMANDS
                                     timings to PATH (JSON lines; a
                                     PATH.series.csv sibling holds the time
                                     series; see `dfrs report`)
+                  --snapshot PATH   write crash-safe mid-run snapshot
+                                    images to PATH (atomic, checksummed;
+                                    resume with `dfrs resume-sim`). Budget
+                                    and watchdog trips always leave a
+                                    resumable image when armed
+                  --snapshot-every SPEC
+                                    snapshot cadence: N / Nev = every N
+                                    events, Nvt = every N seconds of
+                                    virtual time (requires --snapshot)
+  resume-sim IMAGE
+                Restore a --snapshot image and continue the run; the
+                completed run's digest, trace, and telemetry are
+                byte-identical to an uninterrupted one
+                  --max-events N | --max-sim-time T | --max-wall-secs S
+                                    raise/replace the image's run budget
+                  --trace-out PATH | --telemetry PATH | --snapshot PATH
+                                    redirect outputs of the resumed run
   bench TARGET  Regenerate a paper table/figure, or run the scenario grid:
                   table2 | table3 | table4 | fig1 | fig2 | fig3 | fig4 |
                   fig9 | ablation | scenarios | all
@@ -99,9 +116,16 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
         "simulate" => (
             &[
                 "alg", "workload", "swf", "jobs", "load", "seed", "period", "solver", "engine",
-                "scenario", "trace-out", "telemetry",
+                "scenario", "trace-out", "telemetry", "snapshot", "snapshot-every",
             ],
             &["bound", "audit"],
+        ),
+        "resume-sim" => (
+            &[
+                "max-events", "max-sim-time", "max-wall-secs", "trace-out", "telemetry",
+                "snapshot",
+            ],
+            &[],
         ),
         "bench" => (
             &[
@@ -127,6 +151,7 @@ pub fn run_cli(args: Args) -> Result<()> {
     check_args(cmd, &args)?;
     match cmd {
         "simulate" => experiments::cmd_simulate(&args),
+        "resume-sim" => experiments::cmd_resume_sim(&args),
         "bench" => experiments::cmd_bench(&args),
         "replay" => experiments::cmd_replay(&args),
         "report" => experiments::cmd_report(&args),
@@ -182,6 +207,9 @@ mod tests {
             "replay",
             "--telemetry",
             "report",
+            "--snapshot",
+            "--snapshot-every",
+            "resume-sim",
         ] {
             assert!(USAGE.contains(needle), "USAGE must document {needle}");
         }

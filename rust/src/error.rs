@@ -95,6 +95,14 @@ pub enum DfrsError {
     Replay { detail: String },
     /// An I/O failure with the path that caused it.
     Io { path: String, detail: String },
+    /// A snapshot image that cannot be restored: truncated, checksum
+    /// mismatch, version mismatch, or malformed records. Distinct from
+    /// [`DfrsError::Io`] so callers can tell "disk failed" from "file is
+    /// not a valid image".
+    SnapshotFormat { path: String, detail: String },
+    /// A deterministic fault-injection point fired (chaos harness,
+    /// `DFRS_FAILPOINTS`). Never produced in normal operation.
+    FailPoint { site: String },
 }
 
 impl fmt::Display for DfrsError {
@@ -121,6 +129,12 @@ impl fmt::Display for DfrsError {
             DfrsError::InvalidArg { arg, message } => write!(f, "--{arg} {message}"),
             DfrsError::Replay { detail } => write!(f, "replay failed: {detail}"),
             DfrsError::Io { path, detail } => write!(f, "io error on {path}: {detail}"),
+            DfrsError::SnapshotFormat { path, detail } => {
+                write!(f, "snapshot image {path} unusable: {detail}")
+            }
+            DfrsError::FailPoint { site } => {
+                write!(f, "injected fault at failpoint {site:?}")
+            }
         }
     }
 }
@@ -140,6 +154,8 @@ impl DfrsError {
             DfrsError::InvalidArg { .. } => "invalid_arg",
             DfrsError::Replay { .. } => "replay",
             DfrsError::Io { .. } => "io",
+            DfrsError::SnapshotFormat { .. } => "snapshot_format",
+            DfrsError::FailPoint { .. } => "fail_point",
         }
     }
 
@@ -175,6 +191,41 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("3/9 done"), "{s}");
         assert!(s.contains("stuck"), "{s}");
+    }
+
+    #[test]
+    fn every_variant_has_a_distinct_kind_tag() {
+        // Exhaustive by construction: this vec must list one value per
+        // variant, and the `match` in `kind()` is non-wildcard, so adding a
+        // variant without a kind tag fails to compile and adding one
+        // without extending this list fails the uniqueness count below.
+        let snap = SimSnapshot::default();
+        let all: Vec<DfrsError> = vec![
+            DfrsError::WorkloadParse { line_no: 1, field: "submit", raw: "x".into() },
+            DfrsError::ScenarioSpec { line_no: 1, message: "m".into() },
+            DfrsError::PackingInfeasible { jobs: 1, nodes: 1, detail: "d".into() },
+            DfrsError::SimDivergence { detail: "d".into(), snapshot: snap.clone() },
+            DfrsError::BudgetExhausted { budget: "max_events", limit: 1.0, snapshot: snap },
+            DfrsError::AuditViolation { rule: "capacity", time: 0.0, detail: "d".into() },
+            DfrsError::InvalidArg { arg: "a".into(), message: "m".into() },
+            DfrsError::Replay { detail: "d".into() },
+            DfrsError::Io { path: "p".into(), detail: "d".into() },
+            DfrsError::SnapshotFormat { path: "p".into(), detail: "d".into() },
+            DfrsError::FailPoint { site: "s".into() },
+        ];
+        let mut kinds: Vec<&'static str> = all.iter().map(|e| e.kind()).collect();
+        for (e, k) in all.iter().zip(&kinds) {
+            assert!(!k.is_empty(), "{e} has an empty kind");
+            assert_eq!(*k, k.to_lowercase(), "kind tags are lowercase: {k}");
+            assert!(!e.to_string().is_empty(), "every variant displays");
+        }
+        let n = kinds.len();
+        kinds.sort();
+        kinds.dedup();
+        assert_eq!(kinds.len(), n, "kind tags must be unique per variant");
+        // Pin the new snapshot-subsystem tags explicitly.
+        assert!(kinds.contains(&"snapshot_format"));
+        assert!(kinds.contains(&"fail_point"));
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! pure-Rust allocation solver when the artifact is absent).
 
 fn main() {
+    // Deterministic fault injection for crash-safety testing: arm the
+    // failpoint registry from `DFRS_FAILPOINTS` (e.g. "run.abort=500").
+    // Zero-cost when the variable is unset.
+    if let Err(e) = dfrs::util::failpoint::arm_from_env() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
     let args = dfrs::util::cli::Args::from_env();
     if let Err(e) = dfrs::coordinator::run_cli(args) {
         eprintln!("error: {e:#}");

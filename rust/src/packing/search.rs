@@ -384,6 +384,18 @@ impl RepackCache {
         RepackCache { enabled: false, ..Self::new() }
     }
 
+    /// Drop the warm fingerprint, outcome, and scratch arenas, keeping
+    /// enabled-ness and the lifetime hit/miss totals. Snapshot-armed runs
+    /// (`Policy::reset_transient`) call this at every event boundary so a
+    /// cold resumed cache and a warm uninterrupted one count identically.
+    pub fn reset(&mut self) {
+        let (enabled, hits, misses) = (self.enabled, self.hits, self.misses);
+        *self = RepackCache::new();
+        self.enabled = enabled;
+        self.hits = hits;
+        self.misses = misses;
+    }
+
     /// Allocation events answered from the cache so far.
     pub fn hits(&self) -> u64 {
         self.hits

@@ -8,7 +8,8 @@
 
 use super::Policy;
 use crate::sim::{JobId, NodeId, PlatformChange, Sim};
-use std::collections::BTreeSet;
+use crate::util::jsonl::{fmt_bits, parse_bits};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// FCFS with an optional EASY backfilling stage.
 pub struct BatchPolicy {
@@ -133,6 +134,63 @@ impl Policy for BatchPolicy {
         self.try_schedule(sim);
     }
 
+    // Unlike DFRS, a batch scheduler carries durable state the simulator
+    // cannot reconstruct: the FCFS queue order, the exclusive free-node
+    // pool, and each running job's (perfectly known) end time that the
+    // EASY shadow computation needs. All of it rides in the snapshot.
+    fn snapshot_state(&self) -> Vec<(String, String)> {
+        let join = |it: &mut dyn Iterator<Item = String>| it.collect::<Vec<_>>().join(";");
+        vec![
+            ("batch.free".into(), join(&mut self.free.iter().map(|n| n.to_string()))),
+            ("batch.queue".into(), join(&mut self.queue.iter().map(|j| j.to_string()))),
+            (
+                "batch.running".into(),
+                join(&mut self
+                    .running
+                    .iter()
+                    .map(|&(end, tasks, j)| format!("{}:{tasks}:{j}", fmt_bits(end)))),
+            ),
+            ("batch.initialized".into(), if self.initialized { "1" } else { "0" }.into()),
+        ]
+    }
+
+    fn restore_state(&mut self, kv: &BTreeMap<String, String>) -> Result<(), String> {
+        let get = |k: &str| kv.get(k).ok_or_else(|| format!("missing policy key {k:?}"));
+        let ids = |s: &str| -> Result<Vec<usize>, String> {
+            if s.is_empty() {
+                return Ok(Vec::new());
+            }
+            s.split(';')
+                .map(|p| p.parse::<usize>().map_err(|_| format!("bad id {p:?}")))
+                .collect()
+        };
+        self.free = ids(get("batch.free")?)?.into_iter().collect();
+        self.queue = ids(get("batch.queue")?)?;
+        self.running.clear();
+        let raw = get("batch.running")?;
+        if !raw.is_empty() {
+            for part in raw.split(';') {
+                let mut f = part.splitn(3, ':');
+                let (end, tasks, j) = (
+                    f.next().ok_or("truncated running triple")?,
+                    f.next().ok_or("truncated running triple")?,
+                    f.next().ok_or("truncated running triple")?,
+                );
+                self.running.push((
+                    parse_bits(end)?,
+                    tasks.parse().map_err(|_| format!("bad task count {tasks:?}"))?,
+                    j.parse().map_err(|_| format!("bad job id {j:?}"))?,
+                ));
+            }
+        }
+        self.initialized = match get("batch.initialized")?.as_str() {
+            "1" => true,
+            "0" => false,
+            other => return Err(format!("bad batch.initialized {other:?}")),
+        };
+        Ok(())
+    }
+
     fn on_platform_change(&mut self, sim: &mut Sim, change: &PlatformChange) {
         self.ensure_init(sim);
         // Requeue interrupted work: killed jobs restart from scratch,
@@ -229,6 +287,30 @@ mod tests {
         assert!((c2 - 5002.0).abs() < 1e-6, "extra-node backfill: c2={c2}");
         let c3 = r.jobs[3].completion.unwrap();
         assert!(c3 > 5002.0, "job3 must not delay the reservation: c3={c3}");
+    }
+
+    #[test]
+    fn snapshot_state_round_trips_exactly() {
+        let mut p = BatchPolicy::easy();
+        p.free = [0, 2, 5].into_iter().collect();
+        p.queue = vec![3, 1, 4];
+        p.running = vec![(1234.5, 2, 7), (0.1 + 0.2, 1, 9)];
+        p.initialized = true;
+        let kv: std::collections::BTreeMap<String, String> =
+            p.snapshot_state().into_iter().collect();
+        let mut q = BatchPolicy::easy();
+        q.restore_state(&kv).unwrap();
+        assert_eq!(q.free, p.free);
+        assert_eq!(q.queue, p.queue);
+        assert_eq!(q.initialized, p.initialized);
+        assert_eq!(q.running.len(), p.running.len());
+        for (a, b) in q.running.iter().zip(&p.running) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "end times restore bit-exactly");
+            assert_eq!((a.1, a.2), (b.1, b.2));
+        }
+        // Missing keys surface typed errors, never a silently-empty policy.
+        let e = BatchPolicy::fcfs().restore_state(&Default::default()).unwrap_err();
+        assert!(e.contains("batch.free"), "{e}");
     }
 
     #[test]

@@ -36,4 +36,28 @@ pub trait Policy {
     fn period(&self) -> Option<f64> {
         None
     }
+    /// Durable, non-derivable policy state as flat key/value pairs for the
+    /// crash-safe snapshot subsystem (DESIGN.md §Crash safety). Policies
+    /// whose behavior is a pure function of the simulator state (the DFRS
+    /// family) return an empty vec; batch baselines serialize their queue,
+    /// free pool, and running-job end times. Floats must use
+    /// `util::jsonl::fmt_bits` so restore is bit-exact.
+    fn snapshot_state(&self) -> Vec<(String, String)> {
+        Vec::new()
+    }
+    /// Inverse of [`snapshot_state`](Policy::snapshot_state). Called on a
+    /// freshly constructed policy before the resumed run's first event.
+    fn restore_state(
+        &mut self,
+        _kv: &std::collections::BTreeMap<String, String>,
+    ) -> Result<(), String> {
+        Ok(())
+    }
+    /// Discard warm transient state (caches, scratch buffers) whose only
+    /// effect is telemetry counters, not scheduling outcomes. When snapshot
+    /// mode is armed the engine calls this at every event boundary so that
+    /// a cold resumed run and a warm uninterrupted run accumulate identical
+    /// counters — the cost is losing cache benefit, the snapshot-off path
+    /// is untouched.
+    fn reset_transient(&mut self) {}
 }

@@ -307,6 +307,15 @@ impl Policy for DfrsPolicy {
             _ => Some(self.period),
         }
     }
+
+    // DFRS decisions are a pure function of the simulator state, so there
+    // is no durable policy state to snapshot — only warm caches whose
+    // telemetry counters would diverge between a cold resumed run and a
+    // warm uninterrupted one. Snapshot mode discards them every event.
+    fn reset_transient(&mut self) {
+        self.repack.reset();
+        self.stretch_scratch = StretchScratch::default();
+    }
 }
 
 #[cfg(test)]

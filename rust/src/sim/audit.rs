@@ -41,6 +41,17 @@ impl Auditor {
         Auditor { last_vt: vec![0.0; jobs], last_intr: vec![0; jobs] }
     }
 
+    /// Rebuild the rule-1 baseline from a simulator restored at an event
+    /// boundary, so `--audit` stays armed across a snapshot/resume seam.
+    /// Sound because the engine audits after every event: the resumed
+    /// baseline equals what the uninterrupted auditor held at that event.
+    pub fn resume(sim: &Sim) -> Auditor {
+        Auditor {
+            last_vt: (0..sim.jobs.len()).map(|j| sim.vt(j)).collect(),
+            last_intr: sim.jobs.iter().map(|job| job.interruptions).collect(),
+        }
+    }
+
     /// Check every rule against the current simulator state.
     /// `next_submit_idx` is the run loop's submission cursor: jobs below it
     /// have had their submission event processed.

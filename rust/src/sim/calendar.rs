@@ -110,6 +110,29 @@ impl EventCalendar {
         (self.pops, self.stale)
     }
 
+    /// Every live entry (including stale ones awaiting lazy invalidation),
+    /// sorted by `(time, job)`. Because `(TimeKey, JobId)` is a total order
+    /// the pop sequence is a pure function of this multiset, so a calendar
+    /// rebuilt from `entries()` + `stats()` behaves bit-identically — the
+    /// snapshot subsystem relies on this.
+    pub fn entries(&self) -> Vec<(f64, JobId)> {
+        let mut out: Vec<(f64, JobId)> =
+            self.heap.iter().map(|&Reverse((TimeKey(t), j))| (t, j)).collect();
+        out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        out
+    }
+
+    /// Rebuild a calendar from a snapshot taken with [`entries`] and
+    /// [`stats`]. Future pops *and* end-of-run pop/stale statistics match
+    /// the original calendar exactly.
+    pub fn restore(entries: &[(f64, JobId)], pops: u64, stale: u64) -> Self {
+        let mut c = EventCalendar { heap: BinaryHeap::with_capacity(entries.len()), pops, stale };
+        for &(t, j) in entries {
+            c.heap.push(Reverse((TimeKey(t), j)));
+        }
+        c
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -194,6 +217,26 @@ mod tests {
         // next_after discards a stale future entry permanently.
         assert_eq!(c.next_after(0.0, |j, _| j != 2), f64::INFINITY);
         assert_eq!(c.stats(), (1, 2));
+    }
+
+    #[test]
+    fn entries_round_trip_preserves_pops_and_stats() {
+        let mut c = EventCalendar::new();
+        c.schedule(30.0, 2);
+        c.schedule(10.0, 0);
+        c.schedule(10.0, 1);
+        c.schedule(15.0, 3); // will be stale in both copies
+        let mut out = Vec::new();
+        c.pop_due(10.0, |_, _| true, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        let snap = c.entries();
+        assert_eq!(snap, vec![(15.0, 3), (30.0, 2)]);
+        let (p, s) = c.stats();
+        let mut r = EventCalendar::restore(&snap, p, s);
+        // Both copies must now pop identically and keep identical stats.
+        assert_eq!(r.next_after(0.0, |j, _| j != 3), c.next_after(0.0, |j, _| j != 3));
+        assert_eq!(r.stats(), c.stats());
+        assert_eq!(r.entries(), c.entries());
     }
 
     #[test]

@@ -49,6 +49,7 @@
 pub mod audit;
 pub mod calendar;
 pub mod record;
+pub mod snapshot;
 pub mod state;
 
 pub use state::{Cluster, IndexSet, JobId, JobSim, JobState, NodeId};
@@ -56,6 +57,7 @@ pub use state::{Cluster, IndexSet, JobId, JobSim, JobState, NodeId};
 use crate::alloc::YieldSolver;
 use crate::error::{DfrsError, SimSnapshot};
 use crate::scenario::{ClusterEvent, Scenario};
+use crate::util::failpoint;
 use crate::telemetry::{
     Counter, JobEdge, Phase, ProbeHandle, Recorder, RecorderConfig, Segment, Telemetry,
 };
@@ -89,8 +91,9 @@ pub struct RunBudget {
     /// Maximum virtual time an event may be scheduled at.
     pub max_sim_time: f64,
     /// Maximum wall-clock seconds for the run loop (checked every 1024
-    /// events; infinite by default so deterministic runs never consult the
-    /// wall clock).
+    /// events *and* once when the loop exits, so runs shorter than the
+    /// poll cadence still enforce the limit; infinite by default so
+    /// deterministic runs never consult the wall clock).
     pub max_wall_secs: f64,
     /// Zero-progress detector: trip after this many consecutive events
     /// whose virtual time does not advance at all. Legitimate same-instant
@@ -127,6 +130,14 @@ pub struct RunOptions {
     /// `None` (the default) runs with [`crate::telemetry::NoopProbe`] — the
     /// statically zero-overhead path.
     pub telemetry: Option<PathBuf>,
+    /// Arm crash-safe snapshots ([`snapshot`]): write a resumable
+    /// [`snapshot::SimImage`] on the configured cadence, and on every
+    /// budget/failpoint abort. Arming also switches the run into
+    /// boundary-exact mode (transient policy caches reset per event,
+    /// telemetry written span-free), so any boundary is a bit-exact resume
+    /// seam; `None` (the default) leaves the event loop byte-for-byte on
+    /// its historical path.
+    pub snapshot: Option<snapshot::SnapshotConfig>,
 }
 
 /// Which event-loop implementation a run uses. Indexed and Reference
@@ -1768,17 +1779,51 @@ fn run_guarded_inner(
         opts,
         if capture { Some(&mut steps) } else { None },
         rec.map(|rc| (rc, &mut telemetry)),
+        None,
     )?;
+    finalize_outputs(
+        &result,
+        &mut telemetry,
+        opts,
+        &policy.name(),
+        policy.period(),
+        engine,
+        &scenario.name,
+        trace,
+        &timeline,
+        stretch_threshold,
+        steps,
+    )?;
+    Ok((result, telemetry))
+}
+
+/// Post-run output stage, shared by [`run_guarded`] and [`resume_guarded`]
+/// so a resumed run writes its trace and telemetry through the exact same
+/// code path as an uninterrupted one.
+#[allow(clippy::too_many_arguments)]
+fn finalize_outputs(
+    result: &SimResult,
+    telemetry: &mut Option<Telemetry>,
+    opts: &RunOptions,
+    alg: &str,
+    period: Option<f64>,
+    engine: EngineKind,
+    scenario_name: &str,
+    trace: &Trace,
+    timeline: &[(f64, ClusterEvent)],
+    stretch_threshold: f64,
+    steps: Vec<record::StepRecord>,
+) -> Result<(), DfrsError> {
     if let Some(path) = &opts.trace_out {
         let rec = record::TraceRecord {
-            alg: policy.name(),
-            period: policy.period(),
+            alg: alg.to_string(),
+            period,
             engine,
-            scenario_name: scenario.name.clone(),
+            scenario_name: scenario_name.to_string(),
             trace: trace.clone(),
-            timeline: timeline.clone(),
+            timeline: timeline.to_vec(),
             steps,
-            digest: record::ResultDigest::of(&result),
+            digest: record::ResultDigest::of(result),
         };
         record::write_trace(path, &rec)?;
     }
@@ -1786,27 +1831,114 @@ fn run_guarded_inner(
         // Run identity, recorded ahead of the data so `dfrs report` can
         // label its output. Everything here is a deterministic function of
         // the run inputs.
-        t.meta.push(("algorithm".into(), policy.name()));
+        t.meta.push(("algorithm".into(), alg.to_string()));
         t.meta.push(("engine".into(), record::engine_str(engine).into()));
-        let scn = if scenario.name.is_empty() { "none" } else { scenario.name.as_str() };
+        let scn = if scenario_name.is_empty() { "none" } else { scenario_name };
         t.meta.push(("scenario".into(), scn.into()));
         t.meta.push(("jobs".into(), trace.jobs.len().to_string()));
         t.meta.push(("nodes".into(), trace.nodes.to_string()));
         t.meta.push(("stretch_threshold".into(), format!("{stretch_threshold}")));
         t.meta.push(("scenario_events".into(), timeline.len().to_string()));
         let mut kinds: std::collections::BTreeMap<&'static str, usize> = Default::default();
-        for (_, ev) in &timeline {
+        for (_, ev) in timeline {
             *kinds.entry(ev.kind_name()).or_default() += 1;
         }
         for (kind, count) in kinds {
             t.meta.push((format!("timeline_{kind}"), count.to_string()));
         }
         if let Some(path) = &opts.telemetry {
-            t.write(path).map_err(|e| DfrsError::io(path, e))?;
+            if opts.snapshot.is_some() {
+                // Armed runs drop the wall-clock span section so the file
+                // is byte-comparable across a resume seam (`cmp` in CI).
+                std::fs::write(path, t.deterministic_jsonl()).map_err(|e| DfrsError::io(path, e))?;
+            } else {
+                t.write(path).map_err(|e| DfrsError::io(path, e))?;
+            }
             let series = path_with_suffix(path, ".series.csv");
             std::fs::write(&series, t.series_csv()).map_err(|e| DfrsError::io(&series, e))?;
         }
     }
+    Ok(())
+}
+
+/// Adjustments applied on top of an image's recorded run options when
+/// resuming: a budget-tripped image would re-trip instantly without a new
+/// budget, and the output paths may need to land elsewhere than the
+/// original run's. None of these affect simulation arithmetic, so
+/// byte-identity with the uninterrupted run is preserved under any
+/// override.
+#[derive(Debug, Clone, Default)]
+pub struct ResumeOverrides {
+    pub budget: Option<RunBudget>,
+    pub trace_out: Option<PathBuf>,
+    pub telemetry: Option<PathBuf>,
+    /// Where subsequent snapshots of the resumed run go (defaults to the
+    /// image's own path, which keeps rolling forward).
+    pub snapshot_path: Option<PathBuf>,
+}
+
+/// Continue a run from a [`snapshot::SimImage`] (see [`snapshot::read_image`])
+/// to completion. The resumed run stays armed, audits if the original did,
+/// and produces a `SimResult`, trace recording, and telemetry export
+/// byte-identical to the uninterrupted armed run's
+/// (`tests/crash_safety.rs`).
+pub fn resume_guarded(
+    img: &snapshot::SimImage,
+    ov: ResumeOverrides,
+) -> Result<(SimResult, Option<Telemetry>), DfrsError> {
+    let bad = |detail: String| DfrsError::SnapshotFormat {
+        path: img.snapshot.path.display().to_string(),
+        detail,
+    };
+    let mut policy = crate::sched::registry::make_policy(&img.alg, img.period.unwrap_or(600.0))
+        .map_err(|e| bad(format!("cannot rebuild policy {:?}: {e}", img.alg)))?;
+    policy
+        .restore_state(&img.policy_state)
+        .map_err(|e| bad(format!("policy {:?} rejected its stored state: {e}", img.alg)))?;
+    let solver = crate::runtime::solver_by_name(&img.snapshot.solver_name)
+        .map_err(|e| bad(format!("cannot rebuild solver {:?}: {e}", img.snapshot.solver_name)))?;
+    let mut sc = img.snapshot.clone();
+    if let Some(p) = ov.snapshot_path {
+        sc.path = p;
+    }
+    let opts = RunOptions {
+        budget: ov.budget.unwrap_or_else(|| img.budget.clone()),
+        audit: img.audit,
+        trace_out: ov.trace_out.or_else(|| img.trace_out.clone()),
+        telemetry: ov.telemetry.or_else(|| img.telemetry.clone()),
+        snapshot: Some(sc),
+    };
+    // The recorder resumes iff the original run had one — its pre-seam
+    // counters/edges/samples live in the image.
+    let rec = img.recorder_cfg.clone();
+    let mut steps = img.steps.clone();
+    let capture = opts.trace_out.is_some();
+    let mut telemetry: Option<Telemetry> = None;
+    let result = run_core(
+        &img.trace,
+        &img.timeline,
+        policy.as_mut(),
+        img.cfg.clone(),
+        solver,
+        img.engine,
+        &opts,
+        if capture { Some(&mut steps) } else { None },
+        rec.map(|rc| (rc, &mut telemetry)),
+        Some(img),
+    )?;
+    finalize_outputs(
+        &result,
+        &mut telemetry,
+        &opts,
+        &img.alg,
+        img.period,
+        img.engine,
+        &img.snapshot.scenario_name,
+        &img.trace,
+        &img.timeline,
+        img.cfg.stretch_threshold,
+        steps,
+    )?;
     Ok((result, telemetry))
 }
 
@@ -1860,41 +1992,120 @@ fn run_core(
     opts: &RunOptions,
     mut steps: Option<&mut Vec<record::StepRecord>>,
     mut telemetry: Option<(RecorderConfig, &mut Option<Telemetry>)>,
+    resume: Option<&snapshot::SimImage>,
 ) -> Result<SimResult, DfrsError> {
     let budget = &opts.budget;
     let mut scn_idx = 0usize;
+    let snap = opts.snapshot.as_ref();
+    let rec_cfg: Option<RecorderConfig> = telemetry.as_ref().map(|(rc, _)| rc.clone());
 
     let mut sim = Sim::new_with(trace, cfg, solver, engine);
     if let Some((rc, _)) = &telemetry {
-        sim.probe = ProbeHandle::Recorder(Box::new(Recorder::new(rc.clone())));
+        let recorder = match resume.and_then(|img| img.recorder_state.as_ref()) {
+            // Resuming an instrumented run: rehydrate counters, edges and
+            // samples so the final telemetry equals an uninterrupted run's.
+            Some(st) => Recorder::from_state(rc.clone(), st).map_err(|detail| {
+                DfrsError::SnapshotFormat {
+                    path: resume
+                        .map(|img| img.snapshot.path.display().to_string())
+                        .unwrap_or_default(),
+                    detail,
+                }
+            })?,
+            None => Recorder::new(rc.clone()),
+        };
+        sim.probe = ProbeHandle::Recorder(Box::new(recorder));
     }
     let n = sim.jobs.len();
     let mut next_submit_idx = 0usize;
     let period = policy.period();
     let mut next_tick = period.map(|p| trace.jobs.first().map(|j| j.submit).unwrap_or(0.0) + p);
     let mut completed = 0usize;
-    let mut auditor = if opts.audit { Some(audit::Auditor::new(n)) } else { None };
     let wall_start = std::time::Instant::now();
     let mut events = 0u64;
     // Zero-progress detector state: consecutive events with `now` unchanged.
     let mut last_now_bits = f64::NAN.to_bits();
     let mut stalled = 0u64;
+    let first_submit = trace.jobs.first().map(|j| j.submit).unwrap_or(0.0);
+    let mut next_snap_vt = snap
+        .and_then(|sc| sc.every_vt)
+        .map(|dv| first_submit + dv)
+        .unwrap_or(f64::INFINITY);
+    if let Some(img) = resume {
+        snapshot::restore_into(&mut sim, img)?;
+        let ls = &img.loop_state;
+        events = ls.events;
+        scn_idx = ls.scn_idx;
+        next_submit_idx = ls.next_submit_idx;
+        next_tick = ls.next_tick;
+        completed = ls.completed;
+        last_now_bits = ls.last_now_bits;
+        stalled = ls.stalled;
+        next_snap_vt = ls.next_snap_vt;
+    }
+    let mut auditor = if opts.audit {
+        Some(match resume {
+            Some(_) => audit::Auditor::resume(&sim),
+            None => audit::Auditor::new(n),
+        })
+    } else {
+        None
+    };
+
+    // Persist a resumable image of the current event boundary (cadence
+    // writes, and every budget/failpoint abort below). A macro because it
+    // reads half the loop's locals.
+    macro_rules! write_snapshot_image {
+        () => {
+            if let Some(sc) = snap {
+                let ls = snapshot::LoopState {
+                    events,
+                    scn_idx,
+                    next_submit_idx,
+                    next_tick,
+                    completed,
+                    last_now_bits,
+                    stalled,
+                    next_snap_vt,
+                };
+                let img = snapshot::capture(
+                    &sim,
+                    trace,
+                    timeline,
+                    &*policy,
+                    opts,
+                    sc,
+                    rec_cfg.as_ref(),
+                    engine,
+                    &ls,
+                    steps.as_deref().map(|v| v.as_slice()),
+                );
+                snapshot::write_image(&sc.path, &img)?;
+            }
+        };
+    }
 
     while completed < n {
-        events += 1;
-        sim.probe.count(Counter::EventsTotal, 1);
-        let dispatch_span = sim.probe.span_begin();
-        if events > budget.max_events {
+        // Abort/budget checks run at the top of the iteration — an event
+        // boundary — so armed runs can persist a resumable image. `events`
+        // counts *processed* events here.
+        if failpoint::triggered("run.abort") {
+            write_snapshot_image!();
+            return Err(DfrsError::FailPoint { site: "run.abort".into() });
+        }
+        if events >= budget.max_events {
+            write_snapshot_image!();
             return Err(DfrsError::BudgetExhausted {
                 budget: "max_events",
                 limit: budget.max_events as f64,
                 snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
             });
         }
-        if budget.max_wall_secs.is_finite() && events % 1024 == 0 {
+        if budget.max_wall_secs.is_finite() && events > 0 && events % 1024 == 0 {
             sim.probe.count(Counter::WatchdogPolls, 1);
             let wall = wall_start.elapsed().as_secs_f64();
             if wall > budget.max_wall_secs {
+                write_snapshot_image!();
                 return Err(DfrsError::BudgetExhausted {
                     budget: "max_wall_secs",
                     limit: budget.max_wall_secs,
@@ -1923,12 +2134,18 @@ fn run_core(
             });
         }
         if t_next > budget.max_sim_time {
+            // Still at the previous event's boundary: the image is
+            // resumable (with a raised budget).
+            write_snapshot_image!();
             return Err(DfrsError::BudgetExhausted {
                 budget: "max_sim_time",
                 limit: budget.max_sim_time,
                 snapshot: watchdog_snapshot(&sim, events, wall_start.elapsed().as_secs_f64(), completed),
             });
         }
+        events += 1;
+        sim.probe.count(Counter::EventsTotal, 1);
+        let dispatch_span = sim.probe.span_begin();
         sim.advance(t_next);
         if sim.now.to_bits() == last_now_bits {
             stalled += 1;
@@ -2011,6 +2228,40 @@ fn run_core(
             a.check(&sim, next_submit_idx)?;
         }
         sim.probe.span_end(Phase::EventDispatch, dispatch_span);
+        if let Some(sc) = snap {
+            // Transient (never-serialized) policy caches are rebuilt from
+            // scratch on resume; discarding them after every event keeps an
+            // armed run on the same arithmetic as a run resumed at *any*
+            // boundary — which is what makes kill-anywhere byte-identity
+            // provable rather than cadence-dependent.
+            policy.reset_transient();
+            let vt_due = sim.now >= next_snap_vt;
+            if vt_due {
+                let dv = sc.every_vt.unwrap_or(f64::INFINITY);
+                while next_snap_vt <= sim.now {
+                    next_snap_vt += dv;
+                }
+            }
+            if vt_due || sc.every_events.is_some_and(|k| k > 0 && events % k == 0) {
+                write_snapshot_image!();
+            }
+        }
+    }
+
+    // Satellite fix: runs shorter than the 1024-event poll cadence used to
+    // skip the wall-clock watchdog entirely; one final poll enforces
+    // `max_wall_secs` on them too.
+    if budget.max_wall_secs.is_finite() {
+        sim.probe.count(Counter::WatchdogPolls, 1);
+        let wall = wall_start.elapsed().as_secs_f64();
+        if wall > budget.max_wall_secs {
+            write_snapshot_image!();
+            return Err(DfrsError::BudgetExhausted {
+                budget: "max_wall_secs",
+                limit: budget.max_wall_secs,
+                snapshot: watchdog_snapshot(&sim, events, wall, completed),
+            });
+        }
     }
 
     // Hand the recording back before `sim.jobs` moves into the result. The
@@ -2030,7 +2281,6 @@ fn run_core(
     }
 
     // Final metrics.
-    let first_submit = trace.jobs.first().map(|j| j.submit).unwrap_or(0.0);
     let makespan = (sim.now - first_submit).max(1.0);
     let stretches: Vec<f64> = (0..n).map(|j| sim.bounded_stretch(j)).collect();
     let max_stretch = stretches.iter().copied().fold(0.0, f64::max);

@@ -122,7 +122,7 @@ pub(crate) fn engine_str(e: EngineKind) -> &'static str {
     }
 }
 
-fn parse_engine(s: &str) -> Result<EngineKind, String> {
+pub(crate) fn parse_engine(s: &str) -> Result<EngineKind, String> {
     match s {
         "indexed" => Ok(EngineKind::Indexed),
         "reference" => Ok(EngineKind::Reference),
@@ -131,7 +131,7 @@ fn parse_engine(s: &str) -> Result<EngineKind, String> {
     }
 }
 
-fn event_kind(ev: &ClusterEvent) -> (&'static str, usize) {
+pub(crate) fn event_kind(ev: &ClusterEvent) -> (&'static str, usize) {
     match *ev {
         ClusterEvent::Fail(n) => ("fail", n),
         ClusterEvent::Repair(n) => ("repair", n),
@@ -142,7 +142,7 @@ fn event_kind(ev: &ClusterEvent) -> (&'static str, usize) {
     }
 }
 
-fn parse_event(kind: &str, n: usize) -> Result<ClusterEvent, String> {
+pub(crate) fn parse_event(kind: &str, n: usize) -> Result<ClusterEvent, String> {
     Ok(match kind {
         "fail" => ClusterEvent::Fail(n),
         "repair" => ClusterEvent::Repair(n),
@@ -412,6 +412,7 @@ pub fn replay_file(path: &Path) -> Result<ReplayReport, DfrsError> {
         rec.engine,
         &RunOptions::default(),
         Some(&mut steps),
+        None,
         None,
     )?;
     let divergence =

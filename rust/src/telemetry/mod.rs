@@ -434,6 +434,24 @@ pub struct Recorder {
     spans: [SpanCell; Phase::ALL.len()],
 }
 
+/// Everything a [`Recorder`] has accumulated, in serializable form — the
+/// crash-safe snapshot subsystem persists this so a resumed run's telemetry
+/// file is byte-identical to an uninterrupted one. Wall-clock spans are
+/// deliberately excluded: they are not deterministic, sit outside
+/// [`Telemetry::deterministic_jsonl`], and restart at zero after a resume.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RecorderState {
+    /// Counter values in [`Counter::ALL`] order.
+    pub counters: Vec<u64>,
+    pub edges: Vec<EdgeRecord>,
+    pub samples: Vec<Sample>,
+    /// Next sampling boundary (virtual time; `INFINITY` when disabled).
+    pub next_sample: f64,
+    pub stretch_cnt: u64,
+    pub stretch_sum: f64,
+    pub stretch_max: f64,
+}
+
 impl Recorder {
     pub fn new(cfg: RecorderConfig) -> Self {
         let next = if cfg.sample_interval > 0.0 { cfg.sample_interval } else { f64::INFINITY };
@@ -452,6 +470,43 @@ impl Recorder {
 
     pub fn value(&self, c: Counter) -> u64 {
         self.counters[c as usize].get()
+    }
+
+    /// Snapshot the accumulated state (spans excluded — see
+    /// [`RecorderState`]).
+    pub fn export_state(&self) -> RecorderState {
+        RecorderState {
+            counters: Counter::ALL.iter().map(|&c| self.value(c)).collect(),
+            edges: self.edges.borrow().clone(),
+            samples: self.samples.borrow().clone(),
+            next_sample: self.next_sample.get(),
+            stretch_cnt: self.stretch_cnt.get(),
+            stretch_sum: self.stretch_sum.get(),
+            stretch_max: self.stretch_max.get(),
+        }
+    }
+
+    /// Rebuild a recorder mid-run from an exported state. Spans restart at
+    /// zero (wall-clock, non-deterministic by design).
+    pub fn from_state(cfg: RecorderConfig, st: &RecorderState) -> Result<Recorder, String> {
+        if st.counters.len() != Counter::ALL.len() {
+            return Err(format!(
+                "recorder state has {} counters, catalog has {}",
+                st.counters.len(),
+                Counter::ALL.len()
+            ));
+        }
+        let r = Recorder::new(cfg);
+        for (cell, &v) in r.counters.iter().zip(&st.counters) {
+            cell.set(v);
+        }
+        *r.edges.borrow_mut() = st.edges.clone();
+        *r.samples.borrow_mut() = st.samples.clone();
+        r.next_sample.set(st.next_sample);
+        r.stretch_cnt.set(st.stretch_cnt);
+        r.stretch_sum.set(st.stretch_sum);
+        r.stretch_max.set(st.stretch_max);
+        Ok(r)
     }
 
     /// Consume the recorder into a serializable [`Telemetry`] (meta is
@@ -845,6 +900,51 @@ mod tests {
         h.count(Counter::EventsTotal, 1);
         h.job_edge(JobEdge::Submit, 0, 0.0, 0.0, 0.0, 0.0);
         h.span_end(Phase::Repack, None);
+    }
+
+    #[test]
+    fn recorder_state_round_trip_is_exact() {
+        let cfg = RecorderConfig { sample_interval: 10.0, record_edges: true };
+        let r = Recorder::new(cfg.clone());
+        r.count(Counter::EventsTotal, 7);
+        r.count(Counter::PackProbes, 3);
+        r.job_edge(JobEdge::Start, 1, 0.5, 0.0, 0.0, 0.0);
+        r.job_edge(JobEdge::Complete, 1, 12.0, 11.5, 1.0, 2.5);
+        r.segment(Segment {
+            t0: 0.0,
+            t1: 15.0,
+            demand: 2.0,
+            util: 1.0,
+            cap: 4.0,
+            running: 1,
+            paused: 0,
+            pending: 0,
+            up_nodes: 4,
+        });
+        let st = r.export_state();
+        let r2 = Recorder::from_state(cfg, &st).unwrap();
+        assert_eq!(r2.export_state(), st, "export is a fixed point of restore");
+        // Continue both identically: final telemetry must match bit for bit.
+        for rec in [&r, &r2] {
+            rec.count(Counter::EventsTotal, 1);
+            rec.job_edge(JobEdge::Complete, 2, 22.0, 21.0, 1.0, 4.0);
+            rec.segment(Segment {
+                t0: 15.0,
+                t1: 31.0,
+                demand: 1.0,
+                util: 1.0,
+                cap: 4.0,
+                running: 1,
+                paused: 0,
+                pending: 0,
+                up_nodes: 4,
+            });
+        }
+        let a = r.into_telemetry();
+        let b = r2.into_telemetry();
+        assert_eq!(a.deterministic_jsonl(), b.deterministic_jsonl());
+        // A truncated counter vec is a typed failure, not a panic.
+        assert!(Recorder::from_state(RecorderConfig::default(), &RecorderState::default()).is_err());
     }
 
     #[test]

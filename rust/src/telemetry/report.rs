@@ -19,6 +19,14 @@ pub fn render(t: &Telemetry) -> String {
         out.push_str(&format!("{k:<18}: {v}\n"));
     }
 
+    if t.counters.is_empty() && t.spans.is_empty() && t.edges.is_empty() && t.samples.is_empty() {
+        // Header-only file — e.g. a run killed before anything happened, or
+        // a recorder with every channel disabled. Say so once instead of
+        // printing four empty sections.
+        out.push_str("\nno samples recorded — the file carries no data records.\n");
+        return out;
+    }
+
     out.push_str("\n-- counters --\n");
     if t.counters.is_empty() {
         out.push_str("(none recorded)\n");
@@ -176,7 +184,16 @@ mod tests {
 
     #[test]
     fn report_survives_empty_telemetry() {
+        // Fully empty (header-only) file: one graceful notice, no sections.
         let text = render(&Telemetry::default());
+        assert!(text.contains("no samples recorded"), "{text}");
+        assert!(!text.contains("-- counters --"), "sections suppressed: {text}");
+        // Partially empty: per-section placeholders still render.
+        let t = Telemetry {
+            counters: vec![("events_total".into(), 1)],
+            ..Telemetry::default()
+        };
+        let text = render(&t);
         assert!(text.contains("no completion edges"));
         assert!(text.contains("no samples"));
     }

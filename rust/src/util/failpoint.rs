@@ -1,0 +1,171 @@
+//! Deterministic fault injection for the crash-safety harness
+//! (DESIGN.md §Crash safety).
+//!
+//! A *failpoint* is a named site in production code that can be armed to
+//! fail on its Nth hit. Arming is explicit (`arm`, or `arm_from_env` via
+//! `DFRS_FAILPOINTS="site=N;site2=M"`); when nothing is armed, a site
+//! check is a single relaxed atomic load — the registry mutex is never
+//! touched, so the zero-overhead contract of the event loop survives.
+//!
+//! Counts are per-site countdowns: `snapshot.write=3` fires on the third
+//! hit of that site and then disarms it. This makes injections fully
+//! deterministic — the same run hits sites in the same order, so a test
+//! can place a fault at an exact event.
+//!
+//! Sites in use:
+//! - `snapshot.write` — I/O error while persisting a [`crate::sim::snapshot::SimImage`];
+//! - `snapshot.corrupt` — silently flip a byte of the image after writing
+//!   it (exercises checksum detection on the read path);
+//! - `run.abort` — abort the event loop mid-run with a typed error, the
+//!   in-process stand-in for SIGKILL.
+
+use crate::error::DfrsError;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, u64>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, u64>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm failpoints from a `site=N[;site=N...]` spec. `N >= 1` counts hits;
+/// the Nth hit fires and disarms that site. Replaces the prior arming.
+pub fn arm(spec: &str) -> Result<(), DfrsError> {
+    let mut map = HashMap::new();
+    for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+        let (site, count) = part.split_once('=').ok_or_else(|| DfrsError::InvalidArg {
+            arg: "failpoints".into(),
+            message: format!("expected site=N, got {part:?}"),
+        })?;
+        let n: u64 = count.trim().parse().map_err(|_| DfrsError::InvalidArg {
+            arg: "failpoints".into(),
+            message: format!("bad hit count {count:?} for site {site:?}"),
+        })?;
+        if n == 0 {
+            return Err(DfrsError::InvalidArg {
+                arg: "failpoints".into(),
+                message: format!("hit count for {site:?} must be >= 1"),
+            });
+        }
+        map.insert(site.trim().to_string(), n);
+    }
+    let armed = !map.is_empty();
+    *registry().lock().unwrap() = map;
+    ARMED.store(armed, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm from the `DFRS_FAILPOINTS` environment variable if set (CLI entry
+/// point). A malformed spec is a hard error — silently ignoring it would
+/// turn a chaos run into a clean run.
+pub fn arm_from_env() -> Result<(), DfrsError> {
+    match std::env::var("DFRS_FAILPOINTS") {
+        Ok(spec) => arm(&spec),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Disarm every site.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    registry().lock().unwrap().clear();
+}
+
+/// Whether `site` fires now: decrements its countdown and reports true on
+/// the hit that reaches zero. One relaxed load when nothing is armed.
+#[inline]
+pub fn triggered(site: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    triggered_slow(site)
+}
+
+#[cold]
+fn triggered_slow(site: &str) -> bool {
+    let mut map = registry().lock().unwrap();
+    if let Some(n) = map.get_mut(site) {
+        *n -= 1;
+        if *n == 0 {
+            map.remove(site);
+            return true;
+        }
+    }
+    false
+}
+
+/// Error-returning form of [`triggered`] for sites that model hard
+/// failures (I/O errors, aborts).
+#[inline]
+pub fn check(site: &str) -> Result<(), DfrsError> {
+    if triggered(site) {
+        Err(DfrsError::FailPoint { site: site.to_string() })
+    } else {
+        Ok(())
+    }
+}
+
+/// Serialize tests that arm failpoints: the registry is process-global, so
+/// concurrent arming tests would race. Survives a poisoned lock (a failed
+/// failpoint test must not cascade).
+pub fn test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_sites_never_fire() {
+        let _guard = test_lock();
+        disarm();
+        for _ in 0..3 {
+            assert!(!triggered("snapshot.write"));
+            assert!(check("run.abort").is_ok());
+        }
+    }
+
+    #[test]
+    fn countdown_fires_on_the_nth_hit_then_disarms() {
+        let _guard = test_lock();
+        arm("snapshot.write=3").unwrap();
+        assert!(!triggered("snapshot.write"));
+        assert!(!triggered("snapshot.write"));
+        assert!(triggered("snapshot.write"), "third hit fires");
+        assert!(!triggered("snapshot.write"), "site disarms after firing");
+        // Unarmed sites pass while another site is armed.
+        arm("run.abort=1").unwrap();
+        assert!(!triggered("snapshot.write"));
+        let e = check("run.abort").unwrap_err();
+        assert_eq!(e.kind(), "fail_point");
+        assert!(e.to_string().contains("run.abort"), "{e}");
+        disarm();
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        let _guard = test_lock();
+        for bad in ["siteonly", "a=x", "a=0", "=3"] {
+            let e = arm(bad).unwrap_err();
+            assert_eq!(e.kind(), "invalid_arg", "{bad:?}");
+        }
+        // A failed arm leaves nothing armed.
+        assert!(!triggered("a"));
+        disarm();
+    }
+
+    #[test]
+    fn multi_site_spec_arms_each_site() {
+        let _guard = test_lock();
+        arm("a=1;b=2").unwrap();
+        assert!(triggered("a"));
+        assert!(!triggered("b"));
+        assert!(triggered("b"));
+        disarm();
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod check;
 pub mod cli;
+pub mod failpoint;
 pub mod jsonl;
 pub mod rng;
 pub mod stats;

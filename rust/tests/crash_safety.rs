@@ -1,0 +1,386 @@
+//! Crash-safety acceptance tests (DESIGN.md §Crash safety): killing a live
+//! simulation at an arbitrary event boundary and resuming it from its
+//! snapshot image must reproduce the uninterrupted run *byte for byte* —
+//! the `SimResult` bit patterns, the recorded replay trace (including its
+//! result digest), and the telemetry export — on every engine, across
+//! dynamic-platform scenarios, with the invariant auditor armed across the
+//! resume seam. Corrupt, truncated, or torn images must always surface as
+//! typed errors, never panics or silently-wrong state.
+
+use dfrs::alloc::RustSolver;
+use dfrs::coordinator::grid::{self, FaultPolicy};
+use dfrs::error::DfrsError;
+use dfrs::scenario;
+use dfrs::sched::registry::make_policy;
+use dfrs::sim::{
+    resume_guarded, run_guarded, snapshot, EngineKind, ResumeOverrides, RunBudget, RunOptions,
+    SimConfig, SimResult,
+};
+use dfrs::util::failpoint;
+use dfrs::workload::lublin::{generate, LublinParams};
+use dfrs::workload::scale::scale_to_load;
+use dfrs::workload::Trace;
+use std::path::{Path, PathBuf};
+
+const ENGINES: [EngineKind; 3] = [EngineKind::Indexed, EngineKind::Reference, EngineKind::Lazy];
+const ALG: &str = "GreedyPM */per/OPT=MIN/MINVT=600";
+
+fn small_trace(seed: u64, jobs: usize) -> Trace {
+    scale_to_load(&generate(seed, jobs, &LublinParams::default()), 0.7)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dfrs-crash-{tag}-{}", std::process::id()))
+}
+
+/// Every observable field of a [`SimResult`], as exact bit patterns.
+fn digest(r: &SimResult) -> Vec<u64> {
+    vec![
+        r.max_stretch.to_bits(),
+        r.avg_stretch.to_bits(),
+        r.underutil_area.to_bits(),
+        r.norm_underutil.to_bits(),
+        r.gb_moved.to_bits(),
+        r.gb_per_sec.to_bits(),
+        r.preemptions,
+        r.migrations,
+        r.preempt_per_hour.to_bits(),
+        r.migrate_per_hour.to_bits(),
+        r.preempt_per_job.to_bits(),
+        r.migrate_per_job.to_bits(),
+        r.interrupted_jobs,
+        r.avail_node_seconds.to_bits(),
+        r.avail_utilization.to_bits(),
+        r.makespan.to_bits(),
+    ]
+}
+
+/// A fully-armed run: snapshots, auditor, replay-trace recording, and
+/// telemetry all on. The crash-safety contract is proven against this
+/// configuration, not a stripped-down one.
+#[allow(clippy::too_many_arguments)]
+fn run_armed(
+    trace: &Trace,
+    scn_name: &str,
+    engine: EngineKind,
+    alg: &str,
+    image: &Path,
+    trace_out: &Path,
+    telemetry: &Path,
+    budget: RunBudget,
+    every_events: Option<u64>,
+    every_vt: Option<f64>,
+) -> Result<SimResult, DfrsError> {
+    let scn = scenario::builtin(scn_name, trace).unwrap();
+    let mut policy = make_policy(alg, 600.0).unwrap();
+    let opts = RunOptions {
+        budget,
+        audit: true,
+        trace_out: Some(trace_out.to_path_buf()),
+        telemetry: Some(telemetry.to_path_buf()),
+        snapshot: Some(snapshot::SnapshotConfig {
+            path: image.to_path_buf(),
+            every_events,
+            every_vt,
+            scenario_name: scn_name.to_string(),
+            solver_name: "rust".into(),
+        }),
+    };
+    run_guarded(
+        trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        engine,
+        &scn,
+        &opts,
+    )
+}
+
+fn read_bytes(p: &Path) -> Vec<u8> {
+    std::fs::read(p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+fn series_path(p: &Path) -> PathBuf {
+    let mut s = p.as_os_str().to_os_string();
+    s.push(".series.csv");
+    PathBuf::from(s)
+}
+
+fn cleanup(paths: &[&Path]) {
+    for p in paths {
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(series_path(p)).ok();
+    }
+}
+
+/// Kill (via a mid-run budget trip, which leaves an emergency image at the
+/// event boundary) and resume, then require byte-identity with the
+/// uninterrupted armed oracle: result digest, replay trace file, telemetry
+/// file and its series CSV — for all three engines across four
+/// dynamic-platform scenarios, `--audit` armed on both sides of the seam.
+#[test]
+fn kill_and_resume_is_byte_identical_across_engines_and_scenarios() {
+    let _guard = failpoint::test_lock();
+    failpoint::disarm();
+    let trace = small_trace(17, 36);
+    for engine in ENGINES {
+        for scn_name in ["failures", "drain", "burst", "chaos"] {
+            let tag = format!("seam-{engine:?}-{scn_name}");
+            let (img_a, out_a, tel_a) =
+                (tmp(&format!("{tag}-imgA")), tmp(&format!("{tag}-outA")), tmp(&format!("{tag}-telA")));
+            let (img_b, out_b, tel_b) =
+                (tmp(&format!("{tag}-imgB")), tmp(&format!("{tag}-outB")), tmp(&format!("{tag}-telB")));
+
+            // Uninterrupted oracle (armed: snapshotting changes the policy's
+            // transient-cache schedule, so the oracle must be armed too).
+            let oracle = run_armed(
+                &trace, scn_name, engine, ALG, &img_a, &out_a, &tel_a,
+                RunBudget::default(), Some(7), None,
+            )
+            .unwrap_or_else(|e| panic!("{tag}: oracle failed: {e}"));
+
+            // "Kill" mid-run: the budget trips at the 23-event boundary and
+            // leaves a resumable emergency image.
+            let err = run_armed(
+                &trace, scn_name, engine, ALG, &img_b, &out_b, &tel_b,
+                RunBudget { max_events: 23, ..RunBudget::default() }, Some(7), None,
+            )
+            .expect_err("23 events cannot finish 36 jobs");
+            assert_eq!(err.kind(), "budget_exhausted", "{tag}: {err}");
+            assert!(img_b.exists(), "{tag}: the trip must leave an image");
+
+            // Resume across the seam with a fresh budget.
+            let img = snapshot::read_image(&img_b)
+                .unwrap_or_else(|e| panic!("{tag}: image unreadable: {e}"));
+            assert_eq!(img.loop_state.events, 23, "{tag}: image is at the kill boundary");
+            let (resumed, _tel) = resume_guarded(
+                &img,
+                ResumeOverrides { budget: Some(RunBudget::default()), ..ResumeOverrides::default() },
+            )
+            .unwrap_or_else(|e| panic!("{tag}: resume failed: {e}"));
+
+            assert_eq!(digest(&oracle), digest(&resumed), "{tag}: SimResult bits");
+            assert_eq!(
+                read_bytes(&out_a),
+                read_bytes(&out_b),
+                "{tag}: replay trace (incl. result digest) must be byte-identical"
+            );
+            assert_eq!(
+                read_bytes(&tel_a),
+                read_bytes(&tel_b),
+                "{tag}: telemetry export must be byte-identical"
+            );
+            assert_eq!(
+                read_bytes(&series_path(&tel_a)),
+                read_bytes(&series_path(&tel_b)),
+                "{tag}: telemetry series CSV must be byte-identical"
+            );
+            cleanup(&[&img_a, &out_a, &tel_a, &img_b, &out_b, &tel_b]);
+        }
+    }
+}
+
+/// The seam position must not matter: kill at several different event
+/// boundaries (and once under a virtual-time cadence) and resume — every
+/// variant lands on the same digest as the uninterrupted run. The batch
+/// baseline exercises `BatchPolicy`'s snapshot/restore path too.
+#[test]
+fn any_kill_boundary_and_any_cadence_resumes_to_the_same_digest() {
+    let _guard = failpoint::test_lock();
+    failpoint::disarm();
+    let trace = small_trace(29, 30);
+    for alg in [ALG, "EASY"] {
+        let tag0 = format!("bnd-{}", if alg == "EASY" { "easy" } else { "dfrs" });
+        let (img_a, out_a, tel_a) =
+            (tmp(&format!("{tag0}-imgA")), tmp(&format!("{tag0}-outA")), tmp(&format!("{tag0}-telA")));
+        let oracle = run_armed(
+            &trace, "failures", EngineKind::Indexed, alg, &img_a, &out_a, &tel_a,
+            RunBudget::default(), Some(5), None,
+        )
+        .unwrap();
+        for (kill_at, every_ev, every_vt) in
+            [(5u64, Some(5u64), None), (17, Some(5), None), (40, None, Some(900.0))]
+        {
+            let tag = format!("{tag0}-k{kill_at}");
+            let (img_b, out_b, tel_b) = (
+                tmp(&format!("{tag}-imgB")),
+                tmp(&format!("{tag}-outB")),
+                tmp(&format!("{tag}-telB")),
+            );
+            run_armed(
+                &trace, "failures", EngineKind::Indexed, alg, &img_b, &out_b, &tel_b,
+                RunBudget { max_events: kill_at, ..RunBudget::default() }, every_ev, every_vt,
+            )
+            .expect_err("budget must trip mid-run");
+            let img = snapshot::read_image(&img_b).unwrap();
+            let (resumed, _) = resume_guarded(
+                &img,
+                ResumeOverrides { budget: Some(RunBudget::default()), ..ResumeOverrides::default() },
+            )
+            .unwrap_or_else(|e| panic!("{tag}: resume failed: {e}"));
+            assert_eq!(digest(&oracle), digest(&resumed), "{tag}");
+            assert_eq!(read_bytes(&tel_a), read_bytes(&tel_b), "{tag}: telemetry");
+            cleanup(&[&img_b, &out_b, &tel_b]);
+        }
+        cleanup(&[&img_a, &out_a, &tel_a]);
+    }
+}
+
+/// Chaos harness: a deterministic mid-event-loop abort (the `run.abort`
+/// failpoint) kills the run at a seeded boundary; the emergency image it
+/// leaves resumes to the uninterrupted digest.
+#[test]
+fn failpoint_abort_leaves_a_resumable_image() {
+    let _guard = failpoint::test_lock();
+    failpoint::disarm();
+    let trace = small_trace(41, 30);
+    let (img_a, out_a, tel_a) = (tmp("fp-imgA"), tmp("fp-outA"), tmp("fp-telA"));
+    let (img_b, out_b, tel_b) = (tmp("fp-imgB"), tmp("fp-outB"), tmp("fp-telB"));
+    let oracle = run_armed(
+        &trace, "chaos", EngineKind::Lazy, ALG, &img_a, &out_a, &tel_a,
+        RunBudget::default(), Some(6), None,
+    )
+    .unwrap();
+
+    failpoint::arm("run.abort=25").unwrap();
+    let err = run_armed(
+        &trace, "chaos", EngineKind::Lazy, ALG, &img_b, &out_b, &tel_b,
+        RunBudget::default(), Some(6), None,
+    )
+    .expect_err("the armed failpoint must abort the loop");
+    failpoint::disarm();
+    assert_eq!(err.kind(), "fail_point", "{err}");
+    assert!(err.to_string().contains("run.abort"), "{err}");
+    assert!(img_b.exists(), "the abort must leave an emergency image");
+
+    let img = snapshot::read_image(&img_b).unwrap();
+    let (resumed, _) = resume_guarded(&img, ResumeOverrides::default()).unwrap();
+    assert_eq!(digest(&oracle), digest(&resumed));
+    assert_eq!(read_bytes(&out_a), read_bytes(&out_b), "replay trace across the abort seam");
+    assert_eq!(read_bytes(&tel_a), read_bytes(&tel_b), "telemetry across the abort seam");
+    cleanup(&[&img_a, &out_a, &tel_a, &img_b, &out_b, &tel_b]);
+}
+
+/// Fuzz-style robustness (satellite): truncations at many byte counts and
+/// single-bit flips at stepped positions must always surface as typed
+/// `DfrsError`s — never a panic, never a silently-resumed wrong state.
+#[test]
+fn truncated_and_bitflipped_images_are_always_typed_errors() {
+    let _guard = failpoint::test_lock();
+    failpoint::disarm();
+    let trace = small_trace(53, 24);
+    let (img, out, tel) = (tmp("fuzz-img"), tmp("fuzz-out"), tmp("fuzz-tel"));
+    run_armed(
+        &trace, "failures", EngineKind::Indexed, ALG, &img, &out, &tel,
+        RunBudget { max_events: 20, ..RunBudget::default() }, Some(4), None,
+    )
+    .expect_err("budget trips, leaving an image");
+    let pristine = read_bytes(&img);
+    assert!(snapshot::read_image(&img).is_ok(), "the pristine image must load");
+
+    let mangled = tmp("fuzz-mangled");
+    // Truncations: empty file, tiny prefixes, and every eighth of the file.
+    let mut cuts = vec![0usize, 1, 2, 17];
+    cuts.extend((1..8).map(|i| pristine.len() * i / 8));
+    cuts.push(pristine.len() - 1);
+    for cut in cuts {
+        std::fs::write(&mangled, &pristine[..cut]).unwrap();
+        let e = snapshot::read_image(&mangled).expect_err(&format!("truncated at {cut} bytes"));
+        assert!(
+            matches!(e.kind(), "snapshot_format" | "io"),
+            "cut {cut}: typed error, got {e}"
+        );
+    }
+    // Single-bit flips marched across the file (including the trailing
+    // newline and the checksum record itself).
+    let step = (pristine.len() / 41).max(1);
+    for pos in (0..pristine.len()).step_by(step) {
+        for mask in [0x01u8, 0x40] {
+            let mut bytes = pristine.clone();
+            bytes[pos] ^= mask;
+            if bytes == pristine {
+                continue;
+            }
+            std::fs::write(&mangled, &bytes).unwrap();
+            let e = snapshot::read_image(&mangled)
+                .expect_err(&format!("flip at {pos} mask {mask:#x} must not load"));
+            assert!(
+                matches!(e.kind(), "snapshot_format" | "io"),
+                "pos {pos}: typed error, got {e}"
+            );
+        }
+    }
+    cleanup(&[&img, &out, &tel, &mangled]);
+}
+
+/// Sub-cell resume in the experiment grid: a cell killed mid-run leaves its
+/// image in the campaign's `<checkpoint>.images/` directory; the retry
+/// resumes from that image and must produce the same value the
+/// uninterrupted cell would have — so the campaign CSV is unchanged.
+#[test]
+fn grid_cell_resumes_from_its_mid_run_image() {
+    let _guard = failpoint::test_lock();
+    failpoint::disarm();
+    let trace = small_trace(61, 30);
+    // Armed oracle for the cell's metric.
+    let (img_o, out_o, tel_o) = (tmp("grid-imgO"), tmp("grid-outO"), tmp("grid-telO"));
+    let oracle = run_armed(
+        &trace, "failures", EngineKind::Indexed, ALG, &img_o, &out_o, &tel_o,
+        RunBudget::default(), Some(8), None,
+    )
+    .unwrap();
+    cleanup(&[&img_o, &out_o, &tel_o]);
+
+    let ckpt = tmp("grid-ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let fp = FaultPolicy { retries: 1, checkpoint: Some(ckpt.clone()), resume: false };
+    grid::prepare_checkpoint(&fp).unwrap();
+    let keys = vec!["crash/failures/cell-0".to_string()];
+    let outcomes = grid::run_cells(&keys, &fp, |_, ctx| {
+        let img_path = ctx.image.clone().expect("checkpointed campaign provides image paths");
+        if ctx.attempt == 1 {
+            // First attempt dies mid-run (budget trip = injected kill); the
+            // emergency image lands on the cell's CellCtx path.
+            let (out_k, tel_k) = (tmp("grid-outK"), tmp("grid-telK"));
+            let err = run_armed(
+                &trace, "failures", EngineKind::Indexed, ALG, &img_path, &out_k, &tel_k,
+                RunBudget { max_events: 21, ..RunBudget::default() }, Some(8), None,
+            )
+            .expect_err("the injected budget must trip");
+            return Err(anyhow::anyhow!("injected kill: {err}"));
+        }
+        // Retry: resume from the image instead of recomputing from scratch.
+        let img = snapshot::read_image(&img_path)?;
+        assert_eq!(img.loop_state.events, 21, "resume starts at the kill boundary");
+        let (r, _tel) = resume_guarded(
+            &img,
+            ResumeOverrides { budget: Some(RunBudget::default()), ..ResumeOverrides::default() },
+        )?;
+        Ok(vec![r.max_stretch, r.avg_stretch, r.interrupted_jobs as f64])
+    })
+    .unwrap();
+    assert_eq!(outcomes[0].status(), "ok");
+    assert_eq!(outcomes[0].attempts, 2, "killed once, resumed once");
+    assert_eq!(
+        outcomes[0].values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        [oracle.max_stretch, oracle.avg_stretch, oracle.interrupted_jobs as f64]
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>(),
+        "the resumed cell must reproduce the uninterrupted cell's values"
+    );
+    // Success removes the mid-run image.
+    let images_dir = {
+        let mut s = ckpt.as_os_str().to_os_string();
+        s.push(".images");
+        PathBuf::from(s)
+    };
+    let leftovers: Vec<_> = std::fs::read_dir(&images_dir)
+        .map(|d| d.filter_map(|e| e.ok()).collect())
+        .unwrap_or_default();
+    assert!(leftovers.is_empty(), "completed cells clean up their images: {leftovers:?}");
+    std::fs::remove_dir_all(&images_dir).ok();
+    std::fs::remove_file(&ckpt).ok();
+    cleanup(&[&tmp("grid-outK"), &tmp("grid-telK")]);
+}

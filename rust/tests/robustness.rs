@@ -121,7 +121,7 @@ fn max_events_budget_reports_partial_progress() {
             assert_eq!(limit, 25.0);
             assert_eq!(snapshot.total_jobs, n);
             assert!(snapshot.completed < n, "partial progress: {}", snapshot.completed);
-            assert_eq!(snapshot.events, 26, "fails on the event after the limit");
+            assert_eq!(snapshot.events, 25, "trips at the boundary after the 25th event");
             // The snapshot is a live summary, not a blank: the in-flight
             // job population accounts for every non-done job.
             assert!(
@@ -191,6 +191,36 @@ fn generous_budget_changes_nothing() {
     assert_eq!(guarded.preemptions, plain.preemptions);
 }
 
+/// The wall-clock watchdog must fire even on runs far shorter than its
+/// 1024-event poll cadence: the loop takes one final reading when it
+/// exits, so a zero-second allowance trips on any non-empty trace.
+#[test]
+fn wall_clock_watchdog_covers_runs_shorter_than_the_poll_cadence() {
+    let trace = one_job_trace(); // finishes in a handful of events
+    let opts = RunOptions {
+        budget: RunBudget { max_wall_secs: 0.0, ..RunBudget::default() },
+        ..RunOptions::default()
+    };
+    let mut policy = make_policy("EASY", 600.0).unwrap();
+    let err = run_guarded(
+        &trace,
+        policy.as_mut(),
+        SimConfig::default(),
+        Box::new(RustSolver),
+        EngineKind::Indexed,
+        &Scenario::default(),
+        &opts,
+    )
+    .expect_err("a 0-second wall budget cannot be met");
+    match err {
+        DfrsError::BudgetExhausted { budget, snapshot, .. } => {
+            assert_eq!(budget, "max_wall_secs");
+            assert!(snapshot.events > 0, "the run made progress before the final poll");
+        }
+        other => panic!("expected BudgetExhausted, got {other}"),
+    }
+}
+
 /// One panicking cell and one diverging (watchdog-tripped) cell must not
 /// kill the grid: both come back quarantined as failed outcomes while the
 /// healthy cell succeeds.
@@ -202,7 +232,7 @@ fn grid_quarantines_panicking_and_diverging_cells() {
         .map(|k| format!("robustness/{k}"))
         .collect();
     let fp = FaultPolicy { retries: 0, checkpoint: None, resume: false };
-    let outcomes = grid::run_cells(&keys, &fp, |i| match i {
+    let outcomes = grid::run_cells(&keys, &fp, |i, _ctx| match i {
         0 => Ok(vec![1.0]),
         1 => panic!("cell exploded"),
         _ => {
@@ -240,7 +270,7 @@ fn checkpoint_resume_is_byte_identical_at_any_worker_count() {
     // Deterministic per-cell "metric": value depends only on the cell.
     let cell_value = |i: usize| vec![i as f64 * 1.25 + 0.1, (i as f64).sqrt()];
     // The uninterrupted oracle.
-    let oracle = grid::run_cells(&keys, &FaultPolicy { retries: 0, checkpoint: None, resume: false }, |i| {
+    let oracle = grid::run_cells(&keys, &FaultPolicy { retries: 0, checkpoint: None, resume: false }, |i, _ctx| {
         Ok(cell_value(i))
     })
     .unwrap();
@@ -254,7 +284,7 @@ fn checkpoint_resume_is_byte_identical_at_any_worker_count() {
         // Interrupted run: cell 5 panics, everything else is checkpointed.
         let first = pool
             .install(|| {
-                grid::run_cells(&keys, &fp, |i| {
+                grid::run_cells(&keys, &fp, |i, _ctx| {
                     if i == 5 {
                         panic!("injected crash");
                     }
@@ -266,7 +296,7 @@ fn checkpoint_resume_is_byte_identical_at_any_worker_count() {
         // Resume: only the failed cell re-runs; the rest are restored.
         let fp2 = FaultPolicy { resume: true, ..fp.clone() };
         let resumed = pool
-            .install(|| grid::run_cells(&keys, &fp2, |i| Ok(cell_value(i))))
+            .install(|| grid::run_cells(&keys, &fp2, |i, _ctx| Ok(cell_value(i))))
             .unwrap();
         for (i, (a, b)) in oracle.iter().zip(resumed.iter()).enumerate() {
             assert_eq!(a.key, b.key);
