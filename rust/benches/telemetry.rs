@@ -9,10 +9,12 @@
 //! `#[inline(always)]` bodies behind a two-variant enum whose `Noop` arm
 //! compiles to nothing at the call sites. The bench therefore publishes two
 //! rows per case: an A/A repeat of the noop path (pure timer noise — the
-//! bound any "overhead" claim must clear) and recorder-vs-noop (the real
-//! cost of recording, paid only when `--telemetry` is requested). Both runs
-//! must produce bit-identical `SimResult`s — the transparency contract of
-//! `tests/telemetry.rs`, re-checked here at benchmark scale.
+//! bound any "overhead" claim must clear), recorder-vs-noop (the real cost
+//! of recording, paid only when `--telemetry` is requested) and a
+//! provenance-armed row (decision records on top — the `--telemetry`
+//! default). All runs must produce bit-identical `SimResult`s — the
+//! transparency contract of `tests/telemetry.rs`, re-checked here at
+//! benchmark scale.
 
 use dfrs::alloc::RustSolver;
 use dfrs::benchx::bench_meta_json;
@@ -45,7 +47,7 @@ fn run_noop(trace: &Trace) -> (f64, SimResult) {
     (t0.elapsed().as_secs_f64(), r)
 }
 
-fn run_recorder(trace: &Trace) -> (f64, SimResult, Telemetry) {
+fn run_recorder(trace: &Trace, cfg: &RecorderConfig) -> (f64, SimResult, Telemetry) {
     let mut policy = make_policy(ALG, 600.0).expect("policy");
     let t0 = Instant::now();
     let (r, t) = run_instrumented(
@@ -56,7 +58,7 @@ fn run_recorder(trace: &Trace) -> (f64, SimResult, Telemetry) {
         EngineKind::Lazy,
         &Scenario::default(),
         &RunOptions::default(),
-        RecorderConfig::default(),
+        cfg.clone(),
     )
     .expect("recorded run");
     (t0.elapsed().as_secs_f64(), r, t)
@@ -72,10 +74,10 @@ fn best_noop(trace: &Trace) -> (f64, SimResult) {
     (best, r)
 }
 
-fn best_recorder(trace: &Trace) -> (f64, SimResult, Telemetry) {
-    let (mut best, r, t) = run_recorder(trace);
+fn best_recorder(trace: &Trace, cfg: &RecorderConfig) -> (f64, SimResult, Telemetry) {
+    let (mut best, r, t) = run_recorder(trace, cfg);
     for _ in 1..REPS {
-        best = best.min(run_recorder(trace).0);
+        best = best.min(run_recorder(trace, cfg).0);
     }
     (best, r, t)
 }
@@ -112,14 +114,20 @@ fn main() {
     // Warm-up rep (page cache, allocator) outside any timing.
     let _ = run_noop(&trace);
 
+    let cfg_rec = RecorderConfig { record_decisions: false, ..RecorderConfig::default() };
+    let cfg_prov = RecorderConfig::default();
+
     let (t_a, r_a) = best_noop(&trace);
     let (t_b, r_b) = best_noop(&trace);
-    let (t_rec, r_rec, tele) = best_recorder(&trace);
+    let (t_rec, r_rec, tele) = best_recorder(&trace, &cfg_rec);
+    let (t_prov, r_prov, tele_prov) = best_recorder(&trace, &cfg_prov);
 
     let noise_pct = 100.0 * (t_b - t_a).abs() / t_a.max(1e-12);
     let overhead_pct = 100.0 * (t_rec - t_a) / t_a.max(1e-12);
+    let prov_pct = 100.0 * (t_prov - t_a) / t_a.max(1e-12);
     let aa_identical = bit_identical(&r_a, &r_b);
     let rec_identical = bit_identical(&r_a, &r_rec);
+    let prov_identical = bit_identical(&r_a, &r_prov);
 
     println!("noop A      {t_a:>8.3}s");
     println!("noop B      {t_b:>8.3}s   A/A noise {noise_pct:>6.2}%  identical: {aa_identical}");
@@ -127,10 +135,14 @@ fn main() {
         "recorder    {t_rec:>8.3}s   overhead  {overhead_pct:>6.2}%  identical: {rec_identical}"
     );
     println!(
-        "recorded: {} events, {} edges, {} samples",
-        tele.counter("events_total"),
-        tele.edges.len(),
-        tele.samples.len()
+        "with prov.  {t_prov:>8.3}s   overhead  {prov_pct:>6.2}%  identical: {prov_identical}"
+    );
+    println!(
+        "recorded: {} events, {} edges, {} samples, {} decisions (provenance-armed row)",
+        tele_prov.counter("events_total"),
+        tele_prov.edges.len(),
+        tele_prov.samples.len(),
+        tele_prov.decisions.len()
     );
 
     let json = format!(
@@ -141,27 +153,36 @@ fn main() {
          {{\"label\": \"noop-a\", \"secs\": {t_a:.4}}},\n    \
          {{\"label\": \"noop-b\", \"secs\": {t_b:.4}}},\n    \
          {{\"label\": \"recorder\", \"secs\": {t_rec:.4}, \"events_total\": {}, \
-         \"edges\": {}, \"samples\": {}}}\n  ],\n  \
+         \"edges\": {}, \"samples\": {}}},\n    \
+         {{\"label\": \"recorder-prov\", \"secs\": {t_prov:.4}, \"events_total\": {}, \
+         \"edges\": {}, \"samples\": {}, \"decisions\": {}}}\n  ],\n  \
          \"noop_overhead_pct\": {noise_pct:.2},\n  \
          \"recorder_overhead_pct\": {overhead_pct:.2},\n  \
+         \"provenance_overhead_pct\": {prov_pct:.2},\n  \
          \"noop_within_2pct\": {},\n  \
          \"bit_identical\": {},\n  \
          \"note\": \"noop_overhead_pct is an A/A repeat of the default (probe-off) path — the \
          NoopProbe is the pre-PR code after inlining, so the number is timer noise, not a real \
-         cost; recorder_overhead_pct is the opt-in price of --telemetry recording\"\n}}\n",
+         cost; recorder_overhead_pct is the opt-in price of --telemetry recording (edges + \
+         samples, decision provenance off); recorder-prov additionally records decision \
+         provenance — the default when --telemetry is requested\"\n}}\n",
         bench_meta_json(),
         tele.counter("events_total"),
         tele.edges.len(),
         tele.samples.len(),
+        tele_prov.counter("events_total"),
+        tele_prov.edges.len(),
+        tele_prov.samples.len(),
+        tele_prov.decisions.len(),
         noise_pct <= 2.0,
-        aa_identical && rec_identical,
+        aa_identical && rec_identical && prov_identical,
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_telemetry.json");
     match std::fs::write(&out, &json) {
         Ok(()) => println!("\nwrote {}", out.display()),
         Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
     }
-    if !aa_identical || !rec_identical {
+    if !aa_identical || !rec_identical || !prov_identical {
         eprintln!("ERROR: telemetry transparency violated — see tests/telemetry.rs");
         std::process::exit(1);
     }

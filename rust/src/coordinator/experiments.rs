@@ -241,8 +241,31 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
         snapshot,
         ..RunOptions::default()
     };
+    let trace_export = args.get("trace-export").map(PathBuf::from);
     let t0 = std::time::Instant::now();
-    let r = run_guarded(&trace, policy.as_mut(), SimConfig::default(), solver, engine, &scn, &opts)?;
+    // `--trace-export` needs the in-memory recording, so it runs on the
+    // instrumented path (a full default recorder, even without
+    // `--telemetry`); the recorded result is identical either way.
+    let r = match &trace_export {
+        Some(tep) => {
+            let (r, tel) = run_instrumented(
+                &trace,
+                policy.as_mut(),
+                SimConfig::default(),
+                solver,
+                engine,
+                &scn,
+                &opts,
+                RecorderConfig::default(),
+            )?;
+            std::fs::write(tep, crate::telemetry::trace_export::render(&tel))
+                .with_context(|| format!("write {}", tep.display()))?;
+            r
+        }
+        None => {
+            run_guarded(&trace, policy.as_mut(), SimConfig::default(), solver, engine, &scn, &opts)?
+        }
+    };
     let wall = t0.elapsed().as_secs_f64();
     println!("algorithm          : {alg}");
     println!("jobs               : {}", trace.jobs.len());
@@ -274,6 +297,9 @@ pub fn cmd_simulate(args: &Args) -> Result<()> {
     }
     if let Some(p) = &opts.telemetry {
         println!("telemetry          : {} (render with `dfrs report`)", p.display());
+    }
+    if let Some(p) = &trace_export {
+        println!("trace export       : {} (open in ui.perfetto.dev)", p.display());
     }
     if let Some(sc) = &opts.snapshot {
         println!("snapshots          : {} (resume with `dfrs resume-sim`)", sc.path.display());
@@ -396,16 +422,57 @@ pub fn cmd_resume_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a telemetry JSONL file, pinning errors to the file name.
+fn load_telemetry(path: &str) -> Result<Telemetry> {
+    let text = std::fs::read_to_string(Path::new(path)).with_context(|| format!("read {path}"))?;
+    Telemetry::from_jsonl_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
 /// Render a telemetry file written with `--telemetry`: counter table, phase
-/// timings, per-job stretch extremes, and a time-series digest.
+/// timings, decision tallies, per-job stretch extremes, and a time-series
+/// digest. With `--diff B.jsonl`, compare FILE (baseline) against B and
+/// exit nonzero on regression — a CI gate.
 pub fn cmd_report(args: &Args) -> Result<()> {
     let path = args
         .positional
         .get(1)
         .context("usage: dfrs report FILE (a telemetry file written with --telemetry)")?;
-    let text = std::fs::read_to_string(Path::new(path)).with_context(|| format!("read {path}"))?;
-    let t = Telemetry::from_jsonl_str(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-    print!("{}", crate::telemetry::report::render(&t));
+    let t = load_telemetry(path)?;
+    match args.get("diff") {
+        None => {
+            print!("{}", crate::telemetry::report::render(&t));
+            Ok(())
+        }
+        Some(b_path) => {
+            let threshold = args.f64_or("threshold", 0.1)?;
+            let b = load_telemetry(b_path)?;
+            let (text, regressed) = crate::telemetry::report::render_diff(&t, &b, threshold);
+            print!("{text}");
+            if regressed {
+                anyhow::bail!(
+                    "telemetry regression: {b_path} vs baseline {path} (threshold {threshold})"
+                );
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Render one job's causal timeline from a telemetry file: every decision
+/// that touched it (as subject or victim) merged with its lifecycle edges,
+/// each edge attributed to a concrete cause.
+pub fn cmd_explain(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: dfrs explain FILE --job ID (a telemetry file written with --telemetry)")?;
+    let job: crate::sim::JobId = args
+        .get("job")
+        .context("--job ID is required (which job to explain)")?
+        .parse()
+        .context("--job expects a job id (a non-negative integer)")?;
+    let t = load_telemetry(path)?;
+    print!("{}", crate::telemetry::explain::render(&t, job));
     Ok(())
 }
 

@@ -55,6 +55,12 @@ COMMANDS
                                     snapshot cadence: N / Nev = every N
                                     events, Nvt = every N seconds of
                                     virtual time (requires --snapshot)
+                  --trace-export PATH
+                                    export the run as Chrome trace-event /
+                                    Perfetto JSON: job lifecycle tracks, a
+                                    scheduler-decision track, cluster
+                                    counters (implies telemetry recording;
+                                    open in ui.perfetto.dev)
   resume-sim IMAGE
                 Restore a --snapshot image and continue the run; the
                 completed run's digest, trace, and telemetry are
@@ -92,7 +98,21 @@ COMMANDS
   report FILE   Render a telemetry file written with --telemetry: counter
                 table (incl. the packing-kernel counters pack_probes_pruned,
                 pack_sort_skips and pack_tree_descents), phase timings,
-                per-job stretch extremes, and a time-series digest
+                decision tallies, per-job stretch extremes, and a
+                time-series digest
+                  --diff B.jsonl    compare FILE (baseline) against B:
+                                    counters and max stretch gate with a
+                                    relative threshold, phase timings are
+                                    informational; exit nonzero on
+                                    regression (a CI gate — an A/A diff is
+                                    always clean)
+                  --threshold X     relative regression threshold for
+                                    --diff (default 0.1)
+  explain FILE  Render one job's causal timeline from a telemetry file:
+                every decision that touched it (admission, postponement,
+                repack, drop-restart, kill-requeue, opportunistic start)
+                with trigger and cause, merged with its lifecycle edges
+                  --job ID          the job to explain (required)
   bound         Offline max-stretch lower bound for a generated trace
                   --jobs N --seed S --workload KIND --swf PATH
   gen           Generate a trace and write SWF to stdout or --out FILE
@@ -117,6 +137,7 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
             &[
                 "alg", "workload", "swf", "jobs", "load", "seed", "period", "solver", "engine",
                 "scenario", "trace-out", "telemetry", "snapshot", "snapshot-every",
+                "trace-export",
             ],
             &["bound", "audit"],
         ),
@@ -135,7 +156,8 @@ fn check_args(cmd: &str, args: &Args) -> Result<()> {
             &["full", "resume"],
         ),
         "replay" => (&[], &[]),
-        "report" => (&[], &[]),
+        "report" => (&["diff", "threshold"], &[]),
+        "explain" => (&["job"], &[]),
         "bound" => (&["jobs", "seed", "workload", "swf"], &[]),
         "gen" => (&["jobs", "seed", "workload", "swf", "out"], &[]),
         "list-algs" => (&[], &[]),
@@ -155,6 +177,7 @@ pub fn run_cli(args: Args) -> Result<()> {
         "bench" => experiments::cmd_bench(&args),
         "replay" => experiments::cmd_replay(&args),
         "report" => experiments::cmd_report(&args),
+        "explain" => experiments::cmd_explain(&args),
         "bound" => experiments::cmd_bound(&args),
         "gen" => experiments::cmd_gen(&args),
         "list-algs" => {
@@ -210,6 +233,11 @@ mod tests {
             "--snapshot",
             "--snapshot-every",
             "resume-sim",
+            "--trace-export",
+            "explain",
+            "--job",
+            "--diff",
+            "--threshold",
         ] {
             assert!(USAGE.contains(needle), "USAGE must document {needle}");
         }

@@ -103,6 +103,11 @@ pub enum DfrsError {
     /// A deterministic fault-injection point fired (chaos harness,
     /// `DFRS_FAILPOINTS`). Never produced in normal operation.
     FailPoint { site: String },
+    /// A malformed telemetry file or recorder state: unparsable JSONL
+    /// record, unknown name, or a counter vector that no longer matches
+    /// the catalog. `line` is 1-based; 0 means no line context (recorder
+    /// state restored from a snapshot image).
+    Telemetry { line: usize, detail: String },
 }
 
 impl fmt::Display for DfrsError {
@@ -135,6 +140,10 @@ impl fmt::Display for DfrsError {
             DfrsError::FailPoint { site } => {
                 write!(f, "injected fault at failpoint {site:?}")
             }
+            DfrsError::Telemetry { line: 0, detail } => write!(f, "telemetry: {detail}"),
+            DfrsError::Telemetry { line, detail } => {
+                write!(f, "telemetry line {line}: {detail}")
+            }
         }
     }
 }
@@ -156,6 +165,7 @@ impl DfrsError {
             DfrsError::Io { .. } => "io",
             DfrsError::SnapshotFormat { .. } => "snapshot_format",
             DfrsError::FailPoint { .. } => "fail_point",
+            DfrsError::Telemetry { .. } => "telemetry",
         }
     }
 
@@ -212,6 +222,7 @@ mod tests {
             DfrsError::Io { path: "p".into(), detail: "d".into() },
             DfrsError::SnapshotFormat { path: "p".into(), detail: "d".into() },
             DfrsError::FailPoint { site: "s".into() },
+            DfrsError::Telemetry { line: 3, detail: "d".into() },
         ];
         let mut kinds: Vec<&'static str> = all.iter().map(|e| e.kind()).collect();
         for (e, k) in all.iter().zip(&kinds) {
@@ -226,6 +237,17 @@ mod tests {
         // Pin the new snapshot-subsystem tags explicitly.
         assert!(kinds.contains(&"snapshot_format"));
         assert!(kinds.contains(&"fail_point"));
+        assert!(kinds.contains(&"telemetry"));
+    }
+
+    #[test]
+    fn telemetry_display_pinpoints_the_line_when_known() {
+        let e = DfrsError::Telemetry { line: 12, detail: "unknown cause \"x\"".into() };
+        assert!(e.to_string().contains("telemetry line 12"), "{e}");
+        let e = DfrsError::Telemetry { line: 0, detail: "counter arity".into() };
+        let s = e.to_string();
+        assert!(s.starts_with("telemetry: "), "{s}");
+        assert!(!s.contains("line"), "{s}");
     }
 
     #[test]

@@ -19,7 +19,7 @@
 use super::mcb8::{pack_into, KernelMode, PackJob, PackScratch, SortKey};
 use crate::sched::priority::sort_by_priority;
 use crate::sim::{JobId, JobState, NodeId, Sim};
-use crate::telemetry::Counter;
+use crate::telemetry::{Cause, Counter, DecisionKind, DecisionRecord};
 
 /// Remap-limiting rule (§4.3 "Limiting Migration").
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -282,6 +282,29 @@ fn allocate_core(
         // lowest-priority candidate and retry with the rest.
         if !probe(sim, 0.0, jobs, needs, nodes, blocked, up_capacity, pack) {
             sim.probe.count(Counter::PackDropRestarts, 1);
+            if sim.probe.active() {
+                // Attribute the drop: did the sound bounds precheck prove
+                // infeasibility outright, or did the memory pack itself
+                // fail (fragmentation)? Re-running the check here is
+                // probe-only and cannot perturb the allocation.
+                let cause = if bounds_infeasible(jobs, up_capacity) {
+                    Cause::BoundsPrune
+                } else {
+                    Cause::MemoryInfeasible
+                };
+                sim.probe.decision(&DecisionRecord {
+                    t: sim.now,
+                    trigger: sim.trigger,
+                    kind: DecisionKind::Repack,
+                    job: None,
+                    victim: jobs.last().map(|pj| pj.id),
+                    cause,
+                    accepted: false,
+                    candidates: jobs.len(),
+                    pinned: 0,
+                    value: 0.0,
+                });
+            }
             let victim = jobs
                 .pop()
                 .expect("mcb8_allocate: memory-only probe failed on an empty candidate list")

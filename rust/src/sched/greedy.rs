@@ -17,7 +17,7 @@
 //! [`PlacementState`] trait is the common interface.
 
 use crate::sim::{Cluster, JobId, NodeId, Sim};
-use crate::telemetry::Counter;
+use crate::telemetry::{Cause, Counter, DecisionKind, DecisionRecord};
 
 /// Minimal node-capacity view a Greedy placement trial needs. The `job`
 /// parameter exists so the [`Cluster`] implementation can keep its task
@@ -292,6 +292,7 @@ pub fn opportunistic_start(sim: &mut Sim) {
     waiting.extend_from_slice(sim.paused_ids());
     waiting.extend_from_slice(sim.pending_ids());
     crate::sched::priority::sort_by_priority(sim, &mut waiting);
+    let sweep_size = waiting.len();
     if sim.is_reference() {
         for w in waiting {
             let spec = sim.jobs[w].spec.clone();
@@ -299,6 +300,7 @@ pub fn opportunistic_start(sim: &mut Sim) {
             if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
                 sim.start_job(w, pl);
                 sim.probe.count(Counter::OpportunisticStarts, 1);
+                emit_opportunistic(sim, w, sweep_size);
             }
         }
         return;
@@ -327,8 +329,27 @@ pub fn opportunistic_start(sim: &mut Sim) {
         if let Some(pl) = greedy_place(&mut shadow, spec.tasks, spec.cpu_need, spec.mem) {
             sim.start_job(w, pl);
             sim.probe.count(Counter::OpportunisticStarts, 1);
+            emit_opportunistic(sim, w, sweep_size);
             free_cap = max_free(&sim.cluster);
         }
+    }
+}
+
+/// Provenance for one job (re)started by the opportunistic sweep.
+fn emit_opportunistic(sim: &Sim, j: JobId, sweep_size: usize) {
+    if sim.probe.active() {
+        sim.probe.decision(&DecisionRecord {
+            t: sim.now,
+            trigger: sim.trigger,
+            kind: DecisionKind::OpportunisticStart,
+            job: Some(j),
+            victim: None,
+            cause: Cause::CapacityFit,
+            accepted: true,
+            candidates: sweep_size,
+            pinned: 0,
+            value: 0.0,
+        });
     }
 }
 

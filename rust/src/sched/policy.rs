@@ -2,13 +2,13 @@
 //! per-submission action, a per-completion action, and a periodic action,
 //! plus the resource-allocation optimizer and the MINVT/MINFT remap limit.
 
-use super::greedy::{admit_forced, admit_greedy, apply_admission, opportunistic_start};
+use super::greedy::{admit_forced, admit_greedy, apply_admission, opportunistic_start, Admission};
 use super::stretch::{improve_max_stretch, mcb8_stretch_allocate_into, StretchScratch};
 use super::Policy;
 use crate::alloc::{reallocate, OptMode};
-use crate::packing::search::{PinRule, RepackCache};
+use crate::packing::search::{pinned_placement, PinRule, RepackCache};
 use crate::sim::{JobId, PlatformChange, Sim};
-use crate::telemetry::Phase;
+use crate::telemetry::{Cause, DecisionKind, DecisionRecord, Phase};
 
 /// Action on job submission (column 2 of Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,9 +73,49 @@ impl DfrsPolicy {
 
     fn run_mcb8(&mut self, sim: &mut Sim) {
         let span = sim.probe.span_begin();
-        let out = self.repack.allocate(sim, self.pin);
+        let pin = self.pin;
+        let hits_before = self.repack.hits();
+        let out = self.repack.allocate(sim, pin);
+        // Candidate-set summary for the provenance record, captured while
+        // the outcome is still borrowed. The pin decisions are re-evaluated
+        // against the pre-apply state — exactly what the packing itself saw.
+        let summary = if sim.probe.active() {
+            let pinned = out
+                .mapping
+                .iter()
+                .filter(|(j, _)| pinned_placement(sim, *j, pin).is_some())
+                .count();
+            Some((out.mapping.len() + out.dropped.len(), pinned, out.yield_achieved))
+        } else {
+            None
+        };
         sim.apply_mapping(&out.mapping);
         self.alloc(sim);
+        if let Some((candidates, pinned, value)) = summary {
+            let cause = if self.repack.hits() > hits_before {
+                Cause::RepackCacheHit
+            } else if pinned > 0 {
+                match pin {
+                    Some(PinRule::MinVt(_)) => Cause::PinMinVt,
+                    Some(PinRule::MinFt(_)) => Cause::PinMinFt,
+                    None => Cause::RepackComputed,
+                }
+            } else {
+                Cause::RepackComputed
+            };
+            sim.probe.decision(&DecisionRecord {
+                t: sim.now,
+                trigger: sim.trigger,
+                kind: DecisionKind::Repack,
+                job: None,
+                victim: None,
+                cause,
+                accepted: true,
+                candidates,
+                pinned,
+                value,
+            });
+        }
         sim.probe.span_end(Phase::Repack, span);
     }
 
@@ -84,6 +124,7 @@ impl DfrsPolicy {
         let out =
             mcb8_stretch_allocate_into(sim, self.period, self.pin, &mut self.stretch_scratch);
         sim.apply_mapping(&out.mapping);
+        let candidates = out.mapping.len();
         // Initial allocation: exactly the yields needed for the target
         // stretch, then the improvement phase (§4.7).
         let mut yields = out.yields;
@@ -95,12 +136,89 @@ impl DfrsPolicy {
             // yields, i.e. minimizes the average predicted stretch).
             OptMode::Avg => improve_avg(sim, &mut yields),
         }
+        let assigned = yields.len();
         for (j, y) in yields {
             if matches!(sim.jobs[j].state, crate::sim::JobState::Running) {
                 sim.set_yield(j, y);
             }
         }
+        if sim.probe.active() {
+            sim.probe.decision(&DecisionRecord {
+                t: sim.now,
+                trigger: sim.trigger,
+                kind: DecisionKind::YieldAssignment,
+                job: None,
+                victim: None,
+                cause: Cause::YieldOptimized,
+                accepted: true,
+                candidates,
+                pinned: 0,
+                value: assigned as f64,
+            });
+        }
         sim.probe.span_end(Phase::StretchSolve, span);
+    }
+}
+
+/// Provenance for one Greedy-family admission: a summary record for the
+/// admitted job (cause = the strongest side effect it needed) plus one
+/// record per pause/migrate victim.
+fn emit_admission(sim: &Sim, j: JobId, adm: &Admission) {
+    if !sim.probe.active() {
+        return;
+    }
+    let candidates = sim.running_ids().len() + 1;
+    let cause = if !adm.pause.is_empty() {
+        Cause::ForcedPause
+    } else if !adm.migrate.is_empty() {
+        Cause::ForcedMigrate
+    } else {
+        Cause::CapacityFit
+    };
+    let base = DecisionRecord {
+        t: sim.now,
+        trigger: sim.trigger,
+        kind: DecisionKind::Admit,
+        job: Some(j),
+        victim: None,
+        cause,
+        accepted: true,
+        candidates,
+        pinned: 0,
+        value: 0.0,
+    };
+    sim.probe.decision(&base);
+    for &v in &adm.pause {
+        sim.probe.decision(&DecisionRecord {
+            victim: Some(v),
+            cause: Cause::ForcedPause,
+            ..base
+        });
+    }
+    for (v, _) in &adm.migrate {
+        sim.probe.decision(&DecisionRecord {
+            victim: Some(*v),
+            cause: Cause::ForcedMigrate,
+            ..base
+        });
+    }
+}
+
+/// Provenance for a submitted job that could not be admitted.
+fn emit_postpone(sim: &Sim, j: JobId) {
+    if sim.probe.active() {
+        sim.probe.decision(&DecisionRecord {
+            t: sim.now,
+            trigger: sim.trigger,
+            kind: DecisionKind::Postpone,
+            job: Some(j),
+            victim: None,
+            cause: Cause::NoFit,
+            accepted: false,
+            candidates: sim.running_ids().len(),
+            pinned: 0,
+            value: 0.0,
+        });
     }
 }
 
@@ -240,26 +358,21 @@ impl Policy for DfrsPolicy {
             self.alloc(sim);
             return;
         }
-        match self.submit {
-            SubmitAction::Greedy => {
-                if let Some(adm) = admit_greedy(sim, j) {
-                    apply_admission(sim, j, adm);
-                }
-                // else: postponed (§4.2's admission weakness).
-            }
-            SubmitAction::GreedyP => {
-                // Forced admission can fail only when the scenario engine
-                // has taken too many nodes down/draining; postpone then.
-                if let Some(adm) = admit_forced(sim, j, false) {
-                    apply_admission(sim, j, adm);
-                }
-            }
-            SubmitAction::GreedyPM => {
-                if let Some(adm) = admit_forced(sim, j, true) {
-                    apply_admission(sim, j, adm);
-                }
-            }
+        let admission = match self.submit {
+            // Plain Greedy postpones on failure (§4.2's admission
+            // weakness); forced admission can fail only when the scenario
+            // engine has taken too many nodes down/draining.
+            SubmitAction::Greedy => admit_greedy(sim, j),
+            SubmitAction::GreedyP => admit_forced(sim, j, false),
+            SubmitAction::GreedyPM => admit_forced(sim, j, true),
             SubmitAction::Nothing | SubmitAction::Mcb8 => unreachable!(),
+        };
+        match admission {
+            Some(adm) => {
+                emit_admission(sim, j, &adm);
+                apply_admission(sim, j, adm);
+            }
+            None => emit_postpone(sim, j),
         }
         self.alloc(sim);
     }
@@ -296,6 +409,23 @@ impl Policy for DfrsPolicy {
         if matches!(self.complete, CompleteAction::Mcb8) {
             self.run_mcb8(sim);
         } else {
+            // One summary record ahead of the sweep: it attributes the
+            // pause/kill edges the platform change just produced even when
+            // the sweep restarts nothing.
+            if sim.probe.active() {
+                sim.probe.decision(&DecisionRecord {
+                    t: sim.now,
+                    trigger: sim.trigger,
+                    kind: DecisionKind::OpportunisticStart,
+                    job: None,
+                    victim: None,
+                    cause: Cause::PlatformChange,
+                    accepted: true,
+                    candidates: sim.paused_ids().len() + sim.pending_ids().len(),
+                    pinned: 0,
+                    value: 0.0,
+                });
+            }
             opportunistic_start(sim);
             self.alloc(sim);
         }

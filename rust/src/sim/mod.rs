@@ -59,7 +59,8 @@ use crate::error::{DfrsError, SimSnapshot};
 use crate::scenario::{ClusterEvent, Scenario};
 use crate::util::failpoint;
 use crate::telemetry::{
-    Counter, JobEdge, Phase, ProbeHandle, Recorder, RecorderConfig, Segment, Telemetry,
+    Cause, Counter, DecisionKind, DecisionRecord, JobEdge, Phase, ProbeHandle, Recorder,
+    RecorderConfig, Segment, Telemetry, Trigger,
 };
 use crate::workload::Trace;
 use calendar::EventCalendar;
@@ -230,6 +231,11 @@ pub struct Sim {
     /// Probes only observe — installing one must never change a result
     /// (`tests/telemetry.rs` proves it).
     pub probe: ProbeHandle,
+    /// Which event-loop source is currently dispatching — stamped by
+    /// `run_core` before each dispatch group so decision-provenance records
+    /// know their trigger. Plain data the engine never branches on; not
+    /// serialized in snapshots (re-set before every dispatch).
+    pub(crate) trigger: Trigger,
     // Indexed state (DESIGN.md §Engine internals). The sets are maintained
     // in both engine modes; the reference mode simply ignores them on the
     // query/scan paths.
@@ -341,6 +347,7 @@ impl Sim {
             now: 0.0,
             solver,
             probe: ProbeHandle::default(),
+            trigger: Trigger::Submit,
             running_set: IndexSet::new(),
             paused_set: IndexSet::new(),
             pending_set,
@@ -744,6 +751,20 @@ impl Sim {
         // The edge carries the progress *lost* to the kill, so it is
         // emitted before the reset below zeroes the virtual time.
         self.record_edge(JobEdge::Kill, j);
+        if self.probe.active() {
+            self.probe.decision(&DecisionRecord {
+                t: self.now,
+                trigger: self.trigger,
+                kind: DecisionKind::KillRequeue,
+                job: Some(j),
+                victim: None,
+                cause: Cause::PlatformChange,
+                accepted: true,
+                candidates: 1,
+                pinned: 0,
+                value: 0.0,
+            });
+        }
         if self.lazy {
             // Progress is lost anyway; only the rate retirement matters.
             self.set_rate_active(j, false);
@@ -2004,12 +2025,12 @@ fn run_core(
         let recorder = match resume.and_then(|img| img.recorder_state.as_ref()) {
             // Resuming an instrumented run: rehydrate counters, edges and
             // samples so the final telemetry equals an uninterrupted run's.
-            Some(st) => Recorder::from_state(rc.clone(), st).map_err(|detail| {
+            Some(st) => Recorder::from_state(rc.clone(), st).map_err(|e| {
                 DfrsError::SnapshotFormat {
                     path: resume
                         .map(|img| img.snapshot.path.display().to_string())
                         .unwrap_or_default(),
-                    detail,
+                    detail: e.to_string(),
                 }
             })?,
             None => Recorder::new(rc.clone()),
@@ -2166,6 +2187,7 @@ fn run_core(
 
         // 1. Completions (a job finishing exactly when its node fails is
         // credited with the completion).
+        sim.trigger = Trigger::Complete;
         let done = sim.complete_ready_jobs();
         completed += done.len();
         if !done.is_empty() {
@@ -2178,6 +2200,7 @@ fn run_core(
         // batch, then give the policy a single recovery callback.
         let mut scn_applied = 0usize;
         if scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
+            sim.trigger = Trigger::PlatformChange;
             let scenario_span = sim.probe.span_begin();
             let mut change = PlatformChange::default();
             while scn_idx < timeline.len() && timeline[scn_idx].0 <= sim.now + 1e-9 {
@@ -2195,6 +2218,7 @@ fn run_core(
             sim.probe.span_end(Phase::ScenarioApply, scenario_span);
         }
         // 3. Submissions.
+        sim.trigger = Trigger::Submit;
         let submit_start = next_submit_idx;
         while next_submit_idx < n && sim.jobs[next_submit_idx].spec.submit <= sim.now + 1e-9 {
             let j = next_submit_idx;
@@ -2209,6 +2233,7 @@ fn run_core(
         let mut ticked = false;
         if let (Some(t), Some(p)) = (next_tick, period) {
             if t <= sim.now + 1e-9 {
+                sim.trigger = Trigger::Tick;
                 sim.probe.count(Counter::EventsTick, 1);
                 policy.on_tick(&mut sim);
                 next_tick = Some(t + p);

@@ -36,7 +36,10 @@ use super::{EngineKind, RunBudget, RunOptions, Sim, SimConfig};
 use crate::error::DfrsError;
 use crate::scenario::ClusterEvent;
 use crate::sched::Policy;
-use crate::telemetry::{Counter, EdgeRecord, JobEdge, RecorderConfig, RecorderState, Sample};
+use crate::telemetry::{
+    Cause, Counter, DecisionKind, DecisionRecord, EdgeRecord, JobEdge, RecorderConfig,
+    RecorderState, Sample, Trigger,
+};
 use crate::util::failpoint;
 use crate::util::jsonl::{self, fmt_bits, parse_bits};
 use crate::workload::{Job, Trace};
@@ -461,6 +464,7 @@ fn serialize(img: &SimImage) -> String {
             ("every_vt", opt_bits(img.snapshot.every_vt)),
             ("rec_interval", opt_bits(rec_interval)),
             ("rec_edges", flag(img.recorder_cfg.as_ref().is_some_and(|c| c.record_edges))),
+            ("rec_dec", flag(img.recorder_cfg.as_ref().is_some_and(|c| c.record_decisions))),
             ("penalty", fmt_bits(img.cfg.reschedule_penalty)),
             ("stretch", fmt_bits(img.cfg.stretch_threshold)),
             ("max_events", img.budget.max_events.to_string()),
@@ -632,6 +636,24 @@ fn serialize(img: &SimImage) -> String {
                     ("up", s.up_nodes.to_string()),
                     ("maxs", fmt_bits(s.max_stretch_so_far)),
                     ("avgs", fmt_bits(s.avg_stretch_so_far)),
+                ],
+            );
+        }
+        for d in &rs.decisions {
+            obj(
+                &mut o,
+                &[
+                    ("type", "rdec".into()),
+                    ("t", fmt_bits(d.t)),
+                    ("trigger", d.trigger.name().into()),
+                    ("decision", d.kind.name().into()),
+                    ("job", d.job.map_or_else(|| "-".into(), |j| j.to_string())),
+                    ("victim", d.victim.map_or_else(|| "-".into(), |v| v.to_string())),
+                    ("cause", d.cause.name().into()),
+                    ("acc", flag(d.accepted)),
+                    ("cand", d.candidates.to_string()),
+                    ("pin", d.pinned.to_string()),
+                    ("value", fmt_bits(d.value)),
                 ],
             );
         }
@@ -897,6 +919,7 @@ fn parse_image(text: &str, path: &Path) -> Result<SimImage, String> {
                     })?,
                     edges: Vec::new(),
                     samples: Vec::new(),
+                    decisions: Vec::new(),
                     next_sample: r.bits("next")?,
                     stretch_cnt: r.num("scnt")?,
                     stretch_sum: r.bits("ssum")?,
@@ -935,6 +958,35 @@ fn parse_image(text: &str, path: &Path) -> Result<SimImage, String> {
                     avg_stretch_so_far: r.bits("avgs")?,
                 });
             }
+            "rdec" => {
+                let rs = recorder_state
+                    .as_mut()
+                    .ok_or(format!("line {line_no}: rdec record before rec record"))?;
+                let opt_job = |k: &str| -> Result<Option<usize>, String> {
+                    match r.get(k)? {
+                        "-" => Ok(None),
+                        v => parse_usize(v).map(Some),
+                    }
+                };
+                let trig = r.get("trigger")?;
+                let kind = r.get("decision")?;
+                let cause = r.get("cause")?;
+                rs.decisions.push(DecisionRecord {
+                    t: r.bits("t")?,
+                    trigger: Trigger::from_name(trig)
+                        .ok_or(format!("line {line_no}: unknown trigger {trig:?}"))?,
+                    kind: DecisionKind::from_name(kind)
+                        .ok_or(format!("line {line_no}: unknown decision {kind:?}"))?,
+                    job: opt_job("job")?,
+                    victim: opt_job("victim")?,
+                    cause: Cause::from_name(cause)
+                        .ok_or(format!("line {line_no}: unknown cause {cause:?}"))?,
+                    accepted: r.flag("acc")?,
+                    candidates: r.num("cand")?,
+                    pinned: r.num("pin")?,
+                    value: r.bits("value")?,
+                });
+            }
             "step" => steps.push(StepRecord {
                 t: r.bits("t")?,
                 done: r.list("done", parse_usize)?,
@@ -955,9 +1007,13 @@ fn parse_image(text: &str, path: &Path) -> Result<SimImage, String> {
         node_mem_gb: h.bits("node_mem_gb")?,
     };
     let recorder_cfg = match h.opt_bits("rec_interval")? {
-        Some(interval) => {
-            Some(RecorderConfig { sample_interval: interval, record_edges: h.flag("rec_edges")? })
-        }
+        Some(interval) => Some(RecorderConfig {
+            sample_interval: interval,
+            record_edges: h.flag("rec_edges")?,
+            // Absent in pre-provenance images; default on, matching
+            // `RecorderConfig::default()`.
+            record_decisions: if h.map.contains_key("rec_dec") { h.flag("rec_dec")? } else { true },
+        }),
         None => None,
     };
     let snapshot = SnapshotConfig {

@@ -1,0 +1,275 @@
+//! `dfrs explain --job ID`: render one job's causal timeline from a
+//! recorded telemetry file.
+//!
+//! The timeline merges the job's lifecycle edges with every decision that
+//! touched it (as subject or as victim), in simulation-time order, and
+//! attributes each edge to a concrete cause: first a decision naming the
+//! job at the same instant, else a same-instant candidate-set summary
+//! (repack / yield assignment / recovery sweep), else an explicit "no
+//! recorded decision" notice. Everything is derived from the deterministic
+//! prefix of the file, so the output is byte-stable for a given run.
+
+use super::provenance::DecisionRecord;
+use super::{EdgeRecord, Telemetry};
+use crate::sim::JobId;
+use std::fmt::Write as _;
+
+/// One merged timeline entry.
+enum Item<'a> {
+    Decision(&'a DecisionRecord),
+    Edge(&'a EdgeRecord),
+}
+
+impl Item<'_> {
+    fn t(&self) -> f64 {
+        match self {
+            Item::Decision(d) => d.t,
+            Item::Edge(e) => e.t,
+        }
+    }
+    /// Decisions sort ahead of edges at the same instant: the decision is
+    /// what *caused* the edge.
+    fn rank(&self) -> u8 {
+        match self {
+            Item::Decision(_) => 0,
+            Item::Edge(_) => 1,
+        }
+    }
+}
+
+/// The concrete cause behind an edge, if the file records one: a decision
+/// naming the job (subject or victim) at the edge's instant wins; a
+/// same-instant candidate-set summary (`job` and `victim` both unset) is
+/// the fallback.
+fn attribute<'a>(t: &'a Telemetry, job: JobId, at: f64) -> Option<&'a DecisionRecord> {
+    let tb = at.to_bits();
+    t.decisions
+        .iter()
+        .find(|d| d.t.to_bits() == tb && (d.job == Some(job) || d.victim == Some(job)))
+        .or_else(|| {
+            t.decisions
+                .iter()
+                .find(|d| d.t.to_bits() == tb && d.job.is_none() && d.victim.is_none())
+        })
+}
+
+fn cause_note(d: &DecisionRecord, job: JobId) -> String {
+    let mut s = format!("cause: {} ({}", d.cause.name(), d.kind.name());
+    if d.victim == Some(job) && d.job != Some(job) {
+        match d.job {
+            Some(a) => {
+                let _ = write!(s, " for job {a}, this job is the victim");
+            }
+            None => s.push_str(", this job is the victim"),
+        }
+    }
+    let _ = write!(s, ", trigger {})", d.trigger.name());
+    s
+}
+
+/// Render the causal timeline of `job`.
+pub fn render(t: &Telemetry, job: JobId) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# dfrs explain — job {job}");
+    if let Some(alg) = t.meta_value("alg") {
+        let _ = writeln!(out, "algorithm: {alg}");
+    }
+    let edges: Vec<&EdgeRecord> = t.edges.iter().filter(|e| e.job == job).collect();
+    let decisions: Vec<&DecisionRecord> = t
+        .decisions
+        .iter()
+        .filter(|d| d.job == Some(job) || d.victim == Some(job))
+        .collect();
+    let _ = writeln!(
+        out,
+        "{} lifecycle edges, {} decisions touching this job",
+        edges.len(),
+        decisions.len()
+    );
+    if t.edges.is_empty() && t.decisions.is_empty() {
+        out.push_str(
+            "(file has no edge or decision records — counters-only recording? \
+             re-run with full telemetry to explain jobs)\n",
+        );
+        return out;
+    }
+    if edges.is_empty() && decisions.is_empty() {
+        let _ = writeln!(out, "(no records for job {job} in this file)");
+        return out;
+    }
+    out.push('\n');
+
+    let mut items: Vec<Item> = Vec::new();
+    items.extend(decisions.iter().map(|d| Item::Decision(d)));
+    items.extend(edges.iter().map(|e| Item::Edge(e)));
+    items.sort_by(|a, b| a.t().total_cmp(&b.t()).then(a.rank().cmp(&b.rank())));
+
+    for item in &items {
+        match item {
+            Item::Decision(d) => {
+                let mut line = format!(
+                    "t={:<12.3} decision  {:<19}",
+                    d.t,
+                    d.kind.name()
+                );
+                let _ = write!(
+                    line,
+                    " cause={} trigger={} accepted={} candidates={}",
+                    d.cause.name(),
+                    d.trigger.name(),
+                    if d.accepted { "yes" } else { "no" },
+                    d.candidates
+                );
+                if d.pinned > 0 {
+                    let _ = write!(line, " pinned={}", d.pinned);
+                }
+                if d.victim == Some(job) && d.job != Some(job) {
+                    match d.job {
+                        Some(a) => {
+                            let _ = write!(line, " (victim of job {a})");
+                        }
+                        None => line.push_str(" (victim)"),
+                    }
+                }
+                let _ = writeln!(out, "{line}");
+            }
+            Item::Edge(e) => {
+                // Submit and complete edges are not scheduler actions —
+                // when no same-instant decision exists they get neutral
+                // notes, not the unattributed-edge warning.
+                let attribution = match (attribute(t, job, e.t), e.edge) {
+                    (Some(d), _) => cause_note(d, job),
+                    (None, super::JobEdge::Submit) => "arrival".to_string(),
+                    (None, super::JobEdge::Complete) => "ran to completion".to_string(),
+                    (None, _) => "(no recorded decision at this instant)".to_string(),
+                };
+                let _ = writeln!(
+                    out,
+                    "t={:<12.3} edge      {:<19} vt={:.3} yield={:.3} — {}",
+                    e.t,
+                    e.edge.name(),
+                    e.vt,
+                    e.yield_now,
+                    attribution
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Cause, DecisionKind, JobEdge, Trigger};
+
+    fn edge(edge: JobEdge, job: JobId, t: f64) -> EdgeRecord {
+        EdgeRecord { edge, job, t, vt: 1.0, yield_now: 0.5, stretch: 0.0 }
+    }
+
+    fn telemetry() -> Telemetry {
+        let mut t = Telemetry::default();
+        t.meta.push(("alg".into(), "GreedyP */OPT=MIN".into()));
+        t.edges.push(edge(JobEdge::Submit, 3, 10.0));
+        t.edges.push(edge(JobEdge::Start, 3, 10.0));
+        t.edges.push(edge(JobEdge::Pause, 7, 10.0));
+        t.edges.push(edge(JobEdge::Pause, 3, 50.0));
+        t.decisions.push(DecisionRecord {
+            t: 10.0,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Admit,
+            job: Some(3),
+            victim: None,
+            cause: Cause::ForcedPause,
+            accepted: true,
+            candidates: 2,
+            pinned: 0,
+            value: 0.0,
+        });
+        t.decisions.push(DecisionRecord {
+            t: 10.0,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Admit,
+            job: Some(3),
+            victim: Some(7),
+            cause: Cause::ForcedPause,
+            accepted: true,
+            candidates: 2,
+            pinned: 0,
+            value: 0.0,
+        });
+        t.decisions.push(DecisionRecord {
+            t: 50.0,
+            trigger: Trigger::PlatformChange,
+            kind: DecisionKind::Repack,
+            job: None,
+            victim: None,
+            cause: Cause::RepackComputed,
+            accepted: true,
+            candidates: 4,
+            pinned: 1,
+            value: 0.5,
+        });
+        t
+    }
+
+    #[test]
+    fn timeline_names_a_cause_for_every_edge() {
+        let t = telemetry();
+        let out = render(&t, 3);
+        assert!(out.contains("job 3"), "{out}");
+        assert!(out.contains("cause: forced-pause (admit"), "{out}");
+        // The pause at t=50 has no job-specific decision; the same-instant
+        // repack summary attributes it.
+        assert!(out.contains("cause: repack-computed (repack, trigger platform-change)"), "{out}");
+        assert!(!out.contains("no recorded decision"), "{out}");
+    }
+
+    #[test]
+    fn victim_edges_point_back_at_the_admitting_job() {
+        let t = telemetry();
+        let out = render(&t, 7);
+        assert!(out.contains("for job 3, this job is the victim"), "{out}");
+        assert!(out.contains("(victim of job 3)"), "{out}");
+    }
+
+    #[test]
+    fn output_is_deterministic() {
+        let t = telemetry();
+        assert_eq!(render(&t, 3), render(&t, 3));
+        assert_eq!(render(&t, 7), render(&t, 7));
+    }
+
+    #[test]
+    fn unknown_job_and_empty_files_get_notices() {
+        let t = telemetry();
+        let out = render(&t, 99);
+        assert!(out.contains("no records for job 99"), "{out}");
+        let empty = Telemetry::default();
+        let out = render(&empty, 0);
+        assert!(out.contains("counters-only recording"), "{out}");
+    }
+
+    #[test]
+    fn edges_without_samples_still_render() {
+        // A file with edges but zero samples (and vice versa) must not
+        // confuse the explain path — it only consumes edges + decisions.
+        let mut t = telemetry();
+        t.samples.clear();
+        assert!(render(&t, 3).contains("cause: forced-pause"), "edges-no-samples");
+        let mut t2 = Telemetry::default();
+        t2.samples.push(crate::telemetry::Sample {
+            t: 1.0,
+            demand: 0.0,
+            util: 0.0,
+            cap: 1.0,
+            running: 0,
+            paused: 0,
+            pending: 0,
+            up_nodes: 1,
+            max_stretch_so_far: 0.0,
+            avg_stretch_so_far: 0.0,
+        });
+        assert!(render(&t2, 0).contains("no edge or decision records"), "samples-no-edges");
+    }
+}

@@ -27,14 +27,24 @@
 //!   dispatch and scenario application, aggregated into a flame-style
 //!   (calls, total seconds) summary.
 //!
+//! A fifth shape, **decision provenance** ([`DecisionRecord`]), attributes
+//! every scheduling action to its trigger and cause — see [`provenance`],
+//! `dfrs explain` ([`explain`]) and the Perfetto export ([`trace_export`]).
+//!
 //! Sinks reuse [`crate::util::jsonl`]: floats are stored as IEEE-754 bit
 //! patterns, so every record except `kind=span` is byte-deterministic for a
 //! given run (spans carry wall-clock time and are therefore written last —
 //! the deterministic records form a prefix of the file). `dfrs report`
 //! renders a recorded file ([`report`]).
 
+pub mod explain;
+pub mod provenance;
 pub mod report;
+pub mod trace_export;
 
+pub use provenance::{Cause, DecisionKind, DecisionRecord, Trigger};
+
+use crate::error::DfrsError;
 use crate::scenario::ClusterEvent;
 use crate::sim::JobId;
 use crate::util::jsonl::{self, fmt_bits, parse_bits};
@@ -225,6 +235,17 @@ pub enum JobEdge {
 }
 
 impl JobEdge {
+    pub const ALL: [JobEdge; 8] = [
+        JobEdge::Submit,
+        JobEdge::Start,
+        JobEdge::Resume,
+        JobEdge::Pause,
+        JobEdge::Migrate,
+        JobEdge::Kill,
+        JobEdge::Requeue,
+        JobEdge::Complete,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             JobEdge::Submit => "submit",
@@ -314,6 +335,8 @@ pub trait Probe {
     #[inline(always)]
     fn segment(&self, _s: Segment) {}
     #[inline(always)]
+    fn decision(&self, _d: &DecisionRecord) {}
+    #[inline(always)]
     fn span_begin(&self) -> Option<Instant> {
         None
     }
@@ -370,6 +393,13 @@ impl ProbeHandle {
     }
 
     #[inline(always)]
+    pub fn decision(&self, d: &DecisionRecord) {
+        if let ProbeHandle::Recorder(r) = self {
+            r.decision(d);
+        }
+    }
+
+    #[inline(always)]
     pub fn span_begin(&self) -> Option<Instant> {
         match self {
             ProbeHandle::Noop => None,
@@ -395,19 +425,21 @@ pub struct RecorderConfig {
     /// Record per-job lifecycle edges (campaign grids turn this off and
     /// keep only the counters).
     pub record_edges: bool,
+    /// Record decision-provenance records ([`DecisionRecord`]).
+    pub record_decisions: bool,
 }
 
 impl Default for RecorderConfig {
     fn default() -> Self {
-        RecorderConfig { sample_interval: 600.0, record_edges: true }
+        RecorderConfig { sample_interval: 600.0, record_edges: true, record_decisions: true }
     }
 }
 
 impl RecorderConfig {
-    /// Counters only: no edges, no samples — the cheap configuration the
-    /// scenario grid runs every cell under.
+    /// Counters only: no edges, no samples, no decisions — the cheap
+    /// configuration the scenario grid runs every cell under.
     pub fn counters_only() -> Self {
-        RecorderConfig { sample_interval: 0.0, record_edges: false }
+        RecorderConfig { sample_interval: 0.0, record_edges: false, record_decisions: false }
     }
 }
 
@@ -427,6 +459,7 @@ pub struct Recorder {
     counters: [Cell<u64>; Counter::ALL.len()],
     edges: RefCell<Vec<EdgeRecord>>,
     samples: RefCell<Vec<Sample>>,
+    decisions: RefCell<Vec<DecisionRecord>>,
     next_sample: Cell<f64>,
     stretch_cnt: Cell<u64>,
     stretch_sum: Cell<f64>,
@@ -445,6 +478,7 @@ pub struct RecorderState {
     pub counters: Vec<u64>,
     pub edges: Vec<EdgeRecord>,
     pub samples: Vec<Sample>,
+    pub decisions: Vec<DecisionRecord>,
     /// Next sampling boundary (virtual time; `INFINITY` when disabled).
     pub next_sample: f64,
     pub stretch_cnt: u64,
@@ -460,6 +494,7 @@ impl Recorder {
             counters: Default::default(),
             edges: RefCell::new(Vec::new()),
             samples: RefCell::new(Vec::new()),
+            decisions: RefCell::new(Vec::new()),
             next_sample: Cell::new(next),
             stretch_cnt: Cell::new(0),
             stretch_sum: Cell::new(0.0),
@@ -479,6 +514,7 @@ impl Recorder {
             counters: Counter::ALL.iter().map(|&c| self.value(c)).collect(),
             edges: self.edges.borrow().clone(),
             samples: self.samples.borrow().clone(),
+            decisions: self.decisions.borrow().clone(),
             next_sample: self.next_sample.get(),
             stretch_cnt: self.stretch_cnt.get(),
             stretch_sum: self.stretch_sum.get(),
@@ -488,13 +524,16 @@ impl Recorder {
 
     /// Rebuild a recorder mid-run from an exported state. Spans restart at
     /// zero (wall-clock, non-deterministic by design).
-    pub fn from_state(cfg: RecorderConfig, st: &RecorderState) -> Result<Recorder, String> {
+    pub fn from_state(cfg: RecorderConfig, st: &RecorderState) -> Result<Recorder, DfrsError> {
         if st.counters.len() != Counter::ALL.len() {
-            return Err(format!(
-                "recorder state has {} counters, catalog has {}",
-                st.counters.len(),
-                Counter::ALL.len()
-            ));
+            return Err(DfrsError::Telemetry {
+                line: 0,
+                detail: format!(
+                    "recorder state has {} counters, catalog has {}",
+                    st.counters.len(),
+                    Counter::ALL.len()
+                ),
+            });
         }
         let r = Recorder::new(cfg);
         for (cell, &v) in r.counters.iter().zip(&st.counters) {
@@ -502,6 +541,7 @@ impl Recorder {
         }
         *r.edges.borrow_mut() = st.edges.clone();
         *r.samples.borrow_mut() = st.samples.clone();
+        *r.decisions.borrow_mut() = st.decisions.clone();
         r.next_sample.set(st.next_sample);
         r.stretch_cnt.set(st.stretch_cnt);
         r.stretch_sum.set(st.stretch_sum);
@@ -527,6 +567,7 @@ impl Recorder {
             counters,
             edges: self.edges.into_inner(),
             samples: self.samples.into_inner(),
+            decisions: self.decisions.into_inner(),
             spans,
         }
     }
@@ -548,6 +589,12 @@ impl Probe for Recorder {
         if self.cfg.record_edges {
             let rec = EdgeRecord { edge: e, job: j, t, vt, yield_now: yld, stretch };
             self.edges.borrow_mut().push(rec);
+        }
+    }
+
+    fn decision(&self, d: &DecisionRecord) {
+        if self.cfg.record_decisions {
+            self.decisions.borrow_mut().push(*d);
         }
     }
 
@@ -619,6 +666,7 @@ pub struct Telemetry {
     pub counters: Vec<(String, u64)>,
     pub edges: Vec<EdgeRecord>,
     pub samples: Vec<Sample>,
+    pub decisions: Vec<DecisionRecord>,
     pub spans: Vec<SpanSummary>,
 }
 
@@ -632,7 +680,8 @@ impl Telemetry {
     }
 
     /// Serialize as JSON lines. Record order: `meta`, `counter`s, `edge`s,
-    /// `sample`s, then `span`s. Every record **before the first `span`** is
+    /// `sample`s, `decision`s, then `span`s. Every record **before the
+    /// first `span`** is
     /// a deterministic function of the run (floats as IEEE-754 bit
     /// patterns); spans carry wall-clock time and are written last so the
     /// deterministic records form a byte-comparable prefix.
@@ -680,6 +729,22 @@ impl Telemetry {
             ]));
             out.push('\n');
         }
+        for d in &self.decisions {
+            out.push_str(&jsonl::write_obj(&[
+                ("kind", "decision".to_string()),
+                ("t", fmt_bits(d.t)),
+                ("trigger", d.trigger.name().to_string()),
+                ("decision", d.kind.name().to_string()),
+                ("job", d.job.map_or_else(|| "-".to_string(), |j| j.to_string())),
+                ("victim", d.victim.map_or_else(|| "-".to_string(), |v| v.to_string())),
+                ("cause", d.cause.name().to_string()),
+                ("accepted", if d.accepted { "1" } else { "0" }.to_string()),
+                ("candidates", d.candidates.to_string()),
+                ("pinned", d.pinned.to_string()),
+                ("value", fmt_bits(d.value)),
+            ]));
+            out.push('\n');
+        }
         for sp in &self.spans {
             out.push_str(&jsonl::write_obj(&[
                 ("kind", "span".to_string()),
@@ -701,79 +766,117 @@ impl Telemetry {
         t.to_jsonl()
     }
 
-    /// Parse a file produced by [`Telemetry::to_jsonl`].
-    pub fn from_jsonl_str(text: &str) -> Result<Telemetry, String> {
+    /// Parse a file produced by [`Telemetry::to_jsonl`]. Every defect is a
+    /// line-pinpointed [`DfrsError::Telemetry`], never a panic.
+    pub fn from_jsonl_str(text: &str) -> Result<Telemetry, DfrsError> {
         let mut t = Telemetry::default();
         for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
-            let map = jsonl::parse_obj(line).map_err(|e| format!("line {}: {e}", i + 1))?;
-            let get = |k: &str| -> Result<&String, String> {
-                map.get(k).ok_or_else(|| format!("line {}: missing field {k:?}", i + 1))
-            };
-            let bits = |k: &str| -> Result<f64, String> {
-                parse_bits(get(k)?).map_err(|e| format!("line {}: field {k:?}: {e}", i + 1))
-            };
-            let int = |k: &str| -> Result<usize, String> {
-                get(k)?.parse().map_err(|_| format!("line {}: field {k:?} not an integer", i + 1))
-            };
-            match get("kind")?.as_str() {
-                "meta" => {
-                    for (k, v) in &map {
-                        if k != "kind" {
-                            t.meta.push((k.clone(), v.clone()));
-                        }
-                    }
-                }
-                "counter" => {
-                    let v = get("value")?
-                        .parse::<u64>()
-                        .map_err(|_| format!("line {}: bad counter value", i + 1))?;
-                    t.counters.push((get("name")?.clone(), v));
-                }
-                "edge" => {
-                    let edge = JobEdge::from_name(get("edge")?)
-                        .ok_or_else(|| format!("line {}: unknown edge kind", i + 1))?;
-                    t.edges.push(EdgeRecord {
-                        edge,
-                        job: int("job")?,
-                        t: bits("t")?,
-                        vt: bits("vt")?,
-                        yield_now: bits("yield")?,
-                        stretch: bits("stretch")?,
-                    });
-                }
-                "sample" => {
-                    t.samples.push(Sample {
-                        t: bits("t")?,
-                        demand: bits("demand")?,
-                        util: bits("util")?,
-                        cap: bits("cap")?,
-                        running: int("running")?,
-                        paused: int("paused")?,
-                        pending: int("pending")?,
-                        up_nodes: int("up_nodes")?,
-                        max_stretch_so_far: bits("max_stretch_so_far")?,
-                        avg_stretch_so_far: bits("avg_stretch_so_far")?,
-                    });
-                }
-                "span" => {
-                    let secs = get("secs")?
-                        .parse::<f64>()
-                        .map_err(|_| format!("line {}: bad span secs", i + 1))?;
-                    t.spans.push(SpanSummary {
-                        phase: get("phase")?.clone(),
-                        calls: get("calls")?
-                            .parse()
-                            .map_err(|_| format!("line {}: bad span calls", i + 1))?,
-                        secs,
-                    });
-                }
-                other => return Err(format!("line {}: unknown record kind {other:?}", i + 1)),
-            }
+            Telemetry::parse_record(line, &mut t)
+                .map_err(|detail| DfrsError::Telemetry { line: i + 1, detail })?;
         }
         Ok(t)
+    }
+
+    /// Parse one JSONL record into `t`; errors carry no line context (the
+    /// caller adds it).
+    fn parse_record(line: &str, t: &mut Telemetry) -> Result<(), String> {
+        let map = jsonl::parse_obj(line)?;
+        let get = |k: &str| -> Result<&String, String> {
+            map.get(k).ok_or_else(|| format!("missing field {k:?}"))
+        };
+        let bits = |k: &str| -> Result<f64, String> {
+            parse_bits(get(k)?).map_err(|e| format!("field {k:?}: {e}"))
+        };
+        let int = |k: &str| -> Result<usize, String> {
+            get(k)?.parse().map_err(|_| format!("field {k:?} not an integer"))
+        };
+        let opt_job = |k: &str| -> Result<Option<JobId>, String> {
+            match get(k)?.as_str() {
+                "-" => Ok(None),
+                v => v.parse().map(Some).map_err(|_| format!("field {k:?} not a job id")),
+            }
+        };
+        match get("kind")?.as_str() {
+            "meta" => {
+                for (k, v) in &map {
+                    if k != "kind" {
+                        t.meta.push((k.clone(), v.clone()));
+                    }
+                }
+            }
+            "counter" => {
+                let v = get("value")?.parse::<u64>().map_err(|_| "bad counter value".to_string())?;
+                t.counters.push((get("name")?.clone(), v));
+            }
+            "edge" => {
+                let edge = JobEdge::from_name(get("edge")?)
+                    .ok_or_else(|| "unknown edge kind".to_string())?;
+                t.edges.push(EdgeRecord {
+                    edge,
+                    job: int("job")?,
+                    t: bits("t")?,
+                    vt: bits("vt")?,
+                    yield_now: bits("yield")?,
+                    stretch: bits("stretch")?,
+                });
+            }
+            "sample" => {
+                t.samples.push(Sample {
+                    t: bits("t")?,
+                    demand: bits("demand")?,
+                    util: bits("util")?,
+                    cap: bits("cap")?,
+                    running: int("running")?,
+                    paused: int("paused")?,
+                    pending: int("pending")?,
+                    up_nodes: int("up_nodes")?,
+                    max_stretch_so_far: bits("max_stretch_so_far")?,
+                    avg_stretch_so_far: bits("avg_stretch_so_far")?,
+                });
+            }
+            "decision" => {
+                let trigger = get("trigger").and_then(|v| {
+                    Trigger::from_name(v).ok_or_else(|| format!("unknown trigger {v:?}"))
+                })?;
+                let kind = get("decision").and_then(|v| {
+                    DecisionKind::from_name(v).ok_or_else(|| format!("unknown decision {v:?}"))
+                })?;
+                let cause = get("cause").and_then(|v| {
+                    Cause::from_name(v).ok_or_else(|| format!("unknown cause {v:?}"))
+                })?;
+                let accepted = match get("accepted")?.as_str() {
+                    "1" => true,
+                    "0" => false,
+                    other => return Err(format!("field \"accepted\" must be 0/1, got {other:?}")),
+                };
+                t.decisions.push(DecisionRecord {
+                    t: bits("t")?,
+                    trigger,
+                    kind,
+                    job: opt_job("job")?,
+                    victim: opt_job("victim")?,
+                    cause,
+                    accepted,
+                    candidates: int("candidates")?,
+                    pinned: int("pinned")?,
+                    value: bits("value")?,
+                });
+            }
+            "span" => {
+                let secs =
+                    get("secs")?.parse::<f64>().map_err(|_| "bad span secs".to_string())?;
+                t.spans.push(SpanSummary {
+                    phase: get("phase")?.clone(),
+                    calls: get("calls")?.parse().map_err(|_| "bad span calls".to_string())?,
+                    secs,
+                });
+            }
+            other => return Err(format!("unknown record kind {other:?}")),
+        }
+        Ok(())
     }
 
     /// Write the JSONL file at `path`.
@@ -825,8 +928,20 @@ mod tests {
     }
 
     #[test]
+    fn job_edge_names_round_trip_and_are_unique() {
+        for e in JobEdge::ALL {
+            assert_eq!(JobEdge::from_name(e.name()), Some(e), "{e:?}");
+        }
+        let mut names: Vec<&str> = JobEdge::ALL.iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), JobEdge::ALL.len(), "edge names must be unique");
+        assert_eq!(JobEdge::from_name("teleport"), None);
+    }
+
+    #[test]
     fn recorder_counts_and_samples() {
-        let r = Recorder::new(RecorderConfig { sample_interval: 10.0, record_edges: true });
+        let r = Recorder::new(RecorderConfig { sample_interval: 10.0, ..Default::default() });
         r.count(Counter::PackProbes, 3);
         r.count(Counter::PackProbes, 2);
         assert_eq!(r.value(Counter::PackProbes), 5);
@@ -873,6 +988,30 @@ mod tests {
             pending: 0,
             up_nodes: 4,
         });
+        r.decision(&DecisionRecord {
+            t: 0.125,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Admit,
+            job: Some(3),
+            victim: None,
+            cause: Cause::CapacityFit,
+            accepted: true,
+            candidates: 2,
+            pinned: 0,
+            value: 0.0,
+        });
+        r.decision(&DecisionRecord {
+            t: 50.0,
+            trigger: Trigger::PlatformChange,
+            kind: DecisionKind::Repack,
+            job: None,
+            victim: Some(9),
+            cause: Cause::BoundsPrune,
+            accepted: false,
+            candidates: 4,
+            pinned: 1,
+            value: 0.75,
+        });
         let sp = r.span_begin();
         r.span_end(Phase::Repack, sp);
         let mut t = r.into_telemetry();
@@ -883,10 +1022,24 @@ mod tests {
         assert_eq!(back.counters, t.counters);
         assert_eq!(back.edges, t.edges);
         assert_eq!(back.samples, t.samples);
+        assert_eq!(back.decisions, t.decisions);
         assert_eq!(back.spans.len(), Phase::ALL.len());
         assert_eq!(back.spans[0].calls, 1);
-        // Deterministic prefix: identical recordings serialize identically.
+        // Deterministic prefix: identical recordings serialize identically,
+        // and a re-parsed file re-serializes byte-for-byte.
         assert_eq!(t.deterministic_jsonl(), back.deterministic_jsonl());
+        assert_eq!(back.to_jsonl(), text, "parse → serialize is the identity");
+    }
+
+    #[test]
+    fn telemetry_parse_failures_are_line_pinpointed() {
+        let good = "{\"kind\":\"counter\",\"name\":\"events_total\",\"value\":\"3\"}\n";
+        let bad = format!("{good}{{\"kind\":\"decision\",\"t\":\"0x0\"}}\n");
+        let e = Telemetry::from_jsonl_str(&bad).unwrap_err();
+        assert_eq!(e.kind(), "telemetry");
+        assert!(e.to_string().contains("line 2"), "{e}");
+        let e = Telemetry::from_jsonl_str("{\"kind\":\"wat\"}\n").unwrap_err();
+        assert!(e.to_string().contains("unknown record kind"), "{e}");
     }
 
     #[test]
@@ -904,7 +1057,7 @@ mod tests {
 
     #[test]
     fn recorder_state_round_trip_is_exact() {
-        let cfg = RecorderConfig { sample_interval: 10.0, record_edges: true };
+        let cfg = RecorderConfig { sample_interval: 10.0, ..Default::default() };
         let r = Recorder::new(cfg.clone());
         r.count(Counter::EventsTotal, 7);
         r.count(Counter::PackProbes, 3);
@@ -921,6 +1074,18 @@ mod tests {
             pending: 0,
             up_nodes: 4,
         });
+        r.decision(&DecisionRecord {
+            t: 0.5,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Postpone,
+            job: Some(1),
+            victim: None,
+            cause: Cause::NoFit,
+            accepted: false,
+            candidates: 0,
+            pinned: 0,
+            value: 0.0,
+        });
         let st = r.export_state();
         let r2 = Recorder::from_state(cfg, &st).unwrap();
         assert_eq!(r2.export_state(), st, "export is a fixed point of restore");
@@ -928,6 +1093,18 @@ mod tests {
         for rec in [&r, &r2] {
             rec.count(Counter::EventsTotal, 1);
             rec.job_edge(JobEdge::Complete, 2, 22.0, 21.0, 1.0, 4.0);
+            rec.decision(&DecisionRecord {
+                t: 22.0,
+                trigger: Trigger::Complete,
+                kind: DecisionKind::OpportunisticStart,
+                job: Some(2),
+                victim: None,
+                cause: Cause::CapacityFit,
+                accepted: true,
+                candidates: 1,
+                pinned: 0,
+                value: 0.0,
+            });
             rec.segment(Segment {
                 t0: 15.0,
                 t1: 31.0,
@@ -963,9 +1140,22 @@ mod tests {
             up_nodes: 1,
         });
         r.count(Counter::EventsTotal, 9);
+        r.decision(&DecisionRecord {
+            t: 10.0,
+            trigger: Trigger::Tick,
+            kind: DecisionKind::Repack,
+            job: None,
+            victim: None,
+            cause: Cause::RepackComputed,
+            accepted: true,
+            candidates: 1,
+            pinned: 0,
+            value: 1.0,
+        });
         let t = r.into_telemetry();
         assert!(t.edges.is_empty());
         assert!(t.samples.is_empty());
+        assert!(t.decisions.is_empty());
         assert_eq!(t.counter("events_total"), 9);
     }
 }

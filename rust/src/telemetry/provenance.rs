@@ -1,0 +1,229 @@
+//! Decision provenance: *why* the scheduler did what it did.
+//!
+//! Counters, edges and samples (the PR 6 layer) record what happened; a
+//! [`DecisionRecord`] attributes each scheduling action to its trigger and
+//! cause — which event prompted it, what the candidate set looked like,
+//! whether it was carried out, and the concrete reason (repack-cache hit,
+//! `bounds_infeasible` prune, drop-restart victim, pin rule, platform
+//! change, postponement). Records are emitted from the policy hooks, the
+//! packing search and the engine kill path, always behind `probe.active()`
+//! gating, so the noop path stays statically zero-overhead and `SimResult`
+//! is bit-identical with recording on or off.
+//!
+//! `dfrs explain --job ID` renders a job's causal timeline from these
+//! records; `dfrs report` tallies them per kind; the Perfetto export puts
+//! them on a scheduler-decision track.
+
+use crate::sim::JobId;
+
+/// The event-loop source that triggered a decision. Set by `run_core`
+/// before each dispatch group, so every record knows whether it was a job
+/// submission, a completion, a platform change or a periodic tick that put
+/// the policy in motion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    Submit,
+    Complete,
+    PlatformChange,
+    Tick,
+}
+
+impl Trigger {
+    pub const ALL: [Trigger; 4] =
+        [Trigger::Submit, Trigger::Complete, Trigger::PlatformChange, Trigger::Tick];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Trigger::Submit => "submit",
+            Trigger::Complete => "complete",
+            Trigger::PlatformChange => "platform-change",
+            Trigger::Tick => "tick",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Trigger> {
+        Trigger::ALL.into_iter().find(|t| t.name() == s)
+    }
+}
+
+/// What kind of action the decision is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// A full MCB8 repack of the candidate set (one summary record per
+    /// repack; drop-restart victims get their own records).
+    Repack,
+    /// A Greedy-family admission of one submitted job (per-victim pause /
+    /// migrate side effects get their own records with `victim` set).
+    Admit,
+    /// A submitted job could not be admitted and stays pending.
+    Postpone,
+    /// A waiting job (re)started outside an admission — the greedy
+    /// opportunistic sweep after completions or platform changes.
+    OpportunisticStart,
+    /// A running job killed by a node failure and requeued.
+    KillRequeue,
+    /// The stretch-optimal yield assignment applied after a repack.
+    YieldAssignment,
+}
+
+impl DecisionKind {
+    pub const ALL: [DecisionKind; 6] = [
+        DecisionKind::Repack,
+        DecisionKind::Admit,
+        DecisionKind::Postpone,
+        DecisionKind::OpportunisticStart,
+        DecisionKind::KillRequeue,
+        DecisionKind::YieldAssignment,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DecisionKind::Repack => "repack",
+            DecisionKind::Admit => "admit",
+            DecisionKind::Postpone => "postpone",
+            DecisionKind::OpportunisticStart => "opportunistic-start",
+            DecisionKind::KillRequeue => "kill-requeue",
+            DecisionKind::YieldAssignment => "yield-assignment",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DecisionKind> {
+        DecisionKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// The concrete verdict behind a decision — the "because" a human reads in
+/// `dfrs explain` output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cause {
+    /// The repack cache replayed a previous outcome without re-packing.
+    RepackCacheHit,
+    /// A fresh MCB8 pack was computed for this candidate set.
+    RepackComputed,
+    /// Pinned placements under the MINVT rule shaped the outcome.
+    PinMinVt,
+    /// Pinned placements under the MINFT rule shaped the outcome.
+    PinMinFt,
+    /// The `bounds_infeasible` precheck proved no packing can exist, so
+    /// the lowest-priority candidate was drop-restarted.
+    BoundsPrune,
+    /// A memory-feasibility probe failed, drop-restarting the victim.
+    MemoryInfeasible,
+    /// The job fit the available capacity as-is.
+    CapacityFit,
+    /// No placement exists even with every running job paused.
+    NoFit,
+    /// Forced admission paused the victim to make room.
+    ForcedPause,
+    /// Forced admission migrated the victim to make room.
+    ForcedMigrate,
+    /// A platform change (failure / drain / shrink / grow) drove the
+    /// action.
+    PlatformChange,
+    /// The yield assignment came out of the max-min stretch optimization.
+    YieldOptimized,
+}
+
+impl Cause {
+    pub const ALL: [Cause; 12] = [
+        Cause::RepackCacheHit,
+        Cause::RepackComputed,
+        Cause::PinMinVt,
+        Cause::PinMinFt,
+        Cause::BoundsPrune,
+        Cause::MemoryInfeasible,
+        Cause::CapacityFit,
+        Cause::NoFit,
+        Cause::ForcedPause,
+        Cause::ForcedMigrate,
+        Cause::PlatformChange,
+        Cause::YieldOptimized,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Cause::RepackCacheHit => "repack-cache-hit",
+            Cause::RepackComputed => "repack-computed",
+            Cause::PinMinVt => "pin-minvt",
+            Cause::PinMinFt => "pin-minft",
+            Cause::BoundsPrune => "bounds-prune",
+            Cause::MemoryInfeasible => "memory-infeasible",
+            Cause::CapacityFit => "capacity-fit",
+            Cause::NoFit => "no-fit",
+            Cause::ForcedPause => "forced-pause",
+            Cause::ForcedMigrate => "forced-migrate",
+            Cause::PlatformChange => "platform-change",
+            Cause::YieldOptimized => "yield-optimized",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Cause> {
+        Cause::ALL.into_iter().find(|c| c.name() == s)
+    }
+}
+
+/// One attributed scheduling decision. `Copy` so emission sites build it on
+/// the stack and hand a reference to the probe; the recorder copies it into
+/// its buffer only when decision recording is enabled.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionRecord {
+    /// Simulation time of the triggering event.
+    pub t: f64,
+    /// Which event-loop source triggered the decision.
+    pub trigger: Trigger,
+    pub kind: DecisionKind,
+    /// The job the decision is about (`None` for whole-candidate-set
+    /// summaries like a repack or a yield assignment).
+    pub job: Option<JobId>,
+    /// A job the decision acted *on* as a side effect: a pause/migrate
+    /// victim of a forced admission, or a drop-restart victim of a repack.
+    pub victim: Option<JobId>,
+    pub cause: Cause,
+    /// Whether the action was carried out (`false` for postponements and
+    /// drop-restart victims — the job did *not* get what it wanted).
+    pub accepted: bool,
+    /// Size of the candidate set the decision considered.
+    pub candidates: usize,
+    /// Candidates whose placement was pinned by the active pin rule.
+    pub pinned: usize,
+    /// Kind-specific magnitude: achieved yield for repacks, assignment
+    /// count for yield assignments, 0 otherwise.
+    pub value: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trigger_names_round_trip_and_are_unique() {
+        for t in Trigger::ALL {
+            assert_eq!(Trigger::from_name(t.name()), Some(t));
+        }
+        let names: std::collections::BTreeSet<_> =
+            Trigger::ALL.iter().map(|t| t.name()).collect();
+        assert_eq!(names.len(), Trigger::ALL.len());
+        assert_eq!(Trigger::from_name("no-such-trigger"), None);
+    }
+
+    #[test]
+    fn decision_kind_names_round_trip_and_are_unique() {
+        for k in DecisionKind::ALL {
+            assert_eq!(DecisionKind::from_name(k.name()), Some(k));
+        }
+        let names: std::collections::BTreeSet<_> =
+            DecisionKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), DecisionKind::ALL.len());
+        assert_eq!(DecisionKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn cause_names_round_trip_and_are_unique() {
+        for c in Cause::ALL {
+            assert_eq!(Cause::from_name(c.name()), Some(c));
+        }
+        let names: std::collections::BTreeSet<_> = Cause::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(names.len(), Cause::ALL.len());
+        assert_eq!(Cause::from_name(""), None);
+    }
+}

@@ -1,9 +1,11 @@
 //! Human-readable rendering of a recorded telemetry file — the body of the
 //! `dfrs report` subcommand. Input is a [`Telemetry`] parsed from JSONL;
 //! output is a plain-text summary: run identity, counter table, phase
-//! timings, per-job stretch extremes and a time-series digest.
+//! timings, decision tallies, per-job stretch extremes and a time-series
+//! digest. [`render_diff`] compares two files with relative thresholds —
+//! the `report --diff` CI gate.
 
-use super::{JobEdge, Telemetry};
+use super::{Cause, DecisionKind, JobEdge, Telemetry};
 
 /// Jobs shown in each of the best/worst stretch tables.
 const TOP_N: usize = 10;
@@ -19,10 +21,17 @@ pub fn render(t: &Telemetry) -> String {
         out.push_str(&format!("{k:<18}: {v}\n"));
     }
 
-    if t.counters.is_empty() && t.spans.is_empty() && t.edges.is_empty() && t.samples.is_empty() {
+    if t.counters.is_empty()
+        && t.spans.is_empty()
+        && t.edges.is_empty()
+        && t.samples.is_empty()
+        && t.decisions.is_empty()
+    {
         // Header-only file — e.g. a run killed before anything happened, or
         // a recorder with every channel disabled. Say so once instead of
-        // printing four empty sections.
+        // printing five empty sections. Any partially-empty combination
+        // (edges without samples, samples without edges, …) falls through
+        // to the per-section placeholders below.
         out.push_str("\nno samples recorded — the file carries no data records.\n");
         return out;
     }
@@ -57,9 +66,124 @@ pub fn render(t: &Telemetry) -> String {
         }
     }
 
+    render_decisions(t, &mut out);
     render_stretch_tables(t, &mut out);
     render_series_digest(t, &mut out);
     out
+}
+
+/// Decision-provenance tally: per kind, then per cause within the kind, in
+/// catalog order (deterministic).
+fn render_decisions(t: &Telemetry, out: &mut String) {
+    out.push_str(&format!("\n-- decisions ({} recorded) --\n", t.decisions.len()));
+    if t.decisions.is_empty() {
+        out.push_str("(no decision records; run with decision recording enabled)\n");
+        return;
+    }
+    for k in DecisionKind::ALL {
+        let of_kind: Vec<_> = t.decisions.iter().filter(|d| d.kind == k).collect();
+        if of_kind.is_empty() {
+            continue;
+        }
+        let accepted = of_kind.iter().filter(|d| d.accepted).count();
+        out.push_str(&format!(
+            "{:<20} {:>8}  ({accepted} accepted)\n",
+            k.name(),
+            of_kind.len()
+        ));
+        for c in Cause::ALL {
+            let n = of_kind.iter().filter(|d| d.cause == c).count();
+            if n > 0 {
+                out.push_str(&format!("  {:<18} {n:>8}\n", c.name()));
+            }
+        }
+    }
+}
+
+/// Max bounded stretch of a file: completion edges when present, else the
+/// last sample's running maximum, else `None`.
+fn max_stretch(t: &Telemetry) -> Option<f64> {
+    let from_edges = t
+        .edges
+        .iter()
+        .filter(|e| e.edge == JobEdge::Complete)
+        .map(|e| e.stretch)
+        .fold(None::<f64>, |m, s| Some(m.map_or(s, |m| m.max(s))));
+    from_edges.or_else(|| t.samples.last().map(|s| s.max_stretch_so_far))
+}
+
+/// Compare two telemetry files with a relative threshold. Returns the
+/// rendered diff and whether a regression was found: a counter whose
+/// relative change exceeds `threshold`, or a max-stretch *increase* beyond
+/// it. Phase timings are displayed but never gate — wall-clock noise is
+/// not a regression. An A/A diff is always clean.
+pub fn render_diff(a: &Telemetry, b: &Telemetry, threshold: f64) -> (String, bool) {
+    let mut out = String::new();
+    let mut regression = false;
+    out.push_str("== telemetry diff ==\n");
+    out.push_str(&format!("relative threshold: {threshold}\n"));
+
+    out.push_str("\n-- counters --\n");
+    let mut names: Vec<&str> = a.counters.iter().map(|(n, _)| n.as_str()).collect();
+    for (n, _) in &b.counters {
+        if !a.counters.iter().any(|(an, _)| an == n) {
+            names.push(n);
+        }
+    }
+    let mut unchanged = 0usize;
+    for name in names {
+        let (va, vb) = (a.counter(name), b.counter(name));
+        if va == vb {
+            unchanged += 1;
+            continue;
+        }
+        let rel = (vb as f64 - va as f64).abs() / (va.max(1) as f64);
+        let flag = if rel > threshold {
+            regression = true;
+            "  REGRESSION"
+        } else {
+            ""
+        };
+        out.push_str(&format!(
+            "{name:<28} {va:>12} -> {vb:>12}  ({rel:+.1}%){flag}\n",
+            rel = 100.0 * (vb as f64 - va as f64) / va.max(1) as f64
+        ));
+    }
+    out.push_str(&format!("({unchanged} counters unchanged)\n"));
+
+    out.push_str("\n-- stretch extremes --\n");
+    match (max_stretch(a), max_stretch(b)) {
+        (Some(sa), Some(sb)) => {
+            let rel = if sa > 0.0 { (sb - sa) / sa } else if sb > 0.0 { f64::INFINITY } else { 0.0 };
+            let flag = if rel > threshold {
+                regression = true;
+                "  REGRESSION"
+            } else {
+                ""
+            };
+            out.push_str(&format!("max stretch {sa:.4} -> {sb:.4}{flag}\n"));
+        }
+        _ => out.push_str("(no completion edges or samples on one side; not compared)\n"),
+    }
+
+    out.push_str("\n-- phase timings (informational, never gate) --\n");
+    for sa in &a.spans {
+        let sb = b.spans.iter().find(|s| s.phase == sa.phase);
+        match sb {
+            Some(sb) => out.push_str(&format!(
+                "{:<16} {:>10.3}ms -> {:>10.3}ms  ({} -> {} calls)\n",
+                sa.phase,
+                sa.secs * 1e3,
+                sb.secs * 1e3,
+                sa.calls,
+                sb.calls
+            )),
+            None => out.push_str(&format!("{:<16} only in A\n", sa.phase)),
+        }
+    }
+
+    out.push_str(if regression { "\nresult: REGRESSION\n" } else { "\nresult: OK\n" });
+    (out, regression)
 }
 
 /// Best/worst bounded stretch over completed jobs, from `complete` edges.
@@ -196,5 +320,101 @@ mod tests {
         let text = render(&t);
         assert!(text.contains("no completion edges"));
         assert!(text.contains("no samples"));
+    }
+
+    #[test]
+    fn report_handles_all_four_edge_sample_combinations() {
+        // edges × samples present/absent — every combination must render
+        // with the right placeholders and no panic.
+        let full = sample_telemetry();
+        for (with_edges, with_samples) in
+            [(true, true), (true, false), (false, true), (false, false)]
+        {
+            let mut t = full.clone();
+            if !with_edges {
+                t.edges.clear();
+            }
+            if !with_samples {
+                t.samples.clear();
+            }
+            let text = render(&t);
+            assert_eq!(!text.contains("no completion edges"), with_edges, "{text}");
+            assert_eq!(!text.contains("(no samples;"), with_samples, "{text}");
+            // Counters are still present, so the header-only notice must
+            // not fire in any combination.
+            assert!(!text.contains("no samples recorded — the file carries no data records"));
+        }
+    }
+
+    #[test]
+    fn report_tallies_decisions_by_kind_and_cause() {
+        use super::super::{DecisionRecord, Trigger};
+        let mut t = sample_telemetry();
+        let base = DecisionRecord {
+            t: 1.0,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Admit,
+            job: Some(0),
+            victim: None,
+            cause: Cause::CapacityFit,
+            accepted: true,
+            candidates: 1,
+            pinned: 0,
+            value: 0.0,
+        };
+        t.decisions.push(base);
+        t.decisions.push(DecisionRecord { cause: Cause::ForcedPause, ..base });
+        t.decisions.push(DecisionRecord {
+            kind: DecisionKind::Postpone,
+            cause: Cause::NoFit,
+            accepted: false,
+            ..base
+        });
+        let text = render(&t);
+        assert!(text.contains("-- decisions (3 recorded) --"), "{text}");
+        assert!(text.contains("admit"), "{text}");
+        assert!(text.contains("capacity-fit"), "{text}");
+        assert!(text.contains("postpone"), "{text}");
+        assert!(text.contains("(2 accepted)"), "{text}");
+        // Empty tally renders a placeholder.
+        let none = render(&Telemetry {
+            counters: vec![("events_total".into(), 1)],
+            ..Telemetry::default()
+        });
+        assert!(none.contains("no decision records"), "{none}");
+    }
+
+    #[test]
+    fn diff_is_clean_on_identical_files_and_flags_injected_regressions() {
+        let a = sample_telemetry();
+        // A/A: no regression, result OK.
+        let (text, bad) = render_diff(&a, &a, 0.1);
+        assert!(!bad, "{text}");
+        assert!(text.contains("result: OK"), "{text}");
+
+        // Counter blow-up beyond the threshold gates.
+        let mut b = a.clone();
+        b.counters[0].1 = 999_999_999;
+        let (text, bad) = render_diff(&a, &b, 0.1);
+        assert!(bad, "{text}");
+        assert!(text.contains("REGRESSION"), "{text}");
+        assert!(text.contains("events_total"), "{text}");
+
+        // Small drift inside the threshold does not gate.
+        let mut c = a.clone();
+        c.counters[0].1 = 130; // 123 -> 130 is ~5.7% < 10%
+        let (text, bad) = render_diff(&a, &c, 0.1);
+        assert!(!bad, "{text}");
+
+        // Max-stretch increase beyond the threshold gates; a decrease never
+        // does.
+        let mut worse = a.clone();
+        for e in &mut worse.edges {
+            e.stretch *= 10.0;
+        }
+        let (text, bad) = render_diff(&a, &worse, 0.1);
+        assert!(bad, "{text}");
+        let (text, bad) = render_diff(&worse, &a, 0.1);
+        assert!(!bad, "stretch improvement must not gate: {text}");
     }
 }

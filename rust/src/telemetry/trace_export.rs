@@ -1,0 +1,268 @@
+//! Chrome trace-event / Perfetto JSON export of a recorded run
+//! (`dfrs simulate --trace-export PATH`).
+//!
+//! The export maps telemetry onto the trace-event model (all timestamps in
+//! microseconds of *simulated* time):
+//!
+//! * **job tracks** (pid 1, one tid per job id): duration slices opened by
+//!   `start`/`resume`/`requeue` edges and closed by
+//!   `pause`/`kill`/`complete`; `submit` and `migrate` render as instants
+//!   on the same track;
+//! * **scheduler-decision track** (pid 2, tid 0): one instant per
+//!   [`DecisionRecord`], with trigger/cause/candidates in `args`;
+//! * **cluster counters** (pid 2): `C` events from the time-series samples
+//!   (demand/util/cap and running/paused/pending);
+//! * **wall-clock phases** (pid 3): one summary slice per span phase
+//!   starting at 0 with the aggregate duration (the one non-deterministic
+//!   section, mirroring the span records' place outside the deterministic
+//!   JSONL prefix).
+//!
+//! The telemetry file does not record placements, so per-*node* tracks are
+//! not reconstructible; job tracks are the deviation documented in
+//! DESIGN.md §Decision provenance. Output for a given telemetry file is
+//! deterministic: records are emitted in file order.
+
+use super::Telemetry;
+use std::fmt::Write as _;
+
+/// Simulated seconds → trace-event microseconds.
+fn us(t: f64) -> u64 {
+    (t * 1e6).round().max(0.0) as u64
+}
+
+fn push_event(events: &mut Vec<String>, body: String) {
+    events.push(body);
+}
+
+/// Render the trace-event JSON (`{"traceEvents":[...]}`).
+pub fn render(t: &Telemetry) -> String {
+    let mut ev: Vec<String> = Vec::new();
+    push_event(
+        &mut ev,
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"jobs\"}}"
+            .to_string(),
+    );
+    push_event(
+        &mut ev,
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\"tid\":0,\
+         \"args\":{\"name\":\"scheduler\"}}"
+            .to_string(),
+    );
+    push_event(
+        &mut ev,
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":2,\"tid\":0,\
+         \"args\":{\"name\":\"decisions\"}}"
+            .to_string(),
+    );
+
+    // Job lifecycle slices. Edges arrive in emission order, which is
+    // chronological per job; an open slice is closed by the next
+    // pause/kill/complete of the same job.
+    let mut named: std::collections::HashSet<usize> = std::collections::HashSet::new();
+    for e in &t.edges {
+        let (pid, tid, ts) = (1, e.job, us(e.t));
+        if named.insert(e.job) {
+            push_event(
+                &mut ev,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                     \"args\":{{\"name\":\"job {tid}\"}}}}"
+                ),
+            );
+        }
+        let args = format!(
+            "{{\"vt\":{:.6},\"yield\":{:.6},\"stretch\":{:.6}}}",
+            e.vt, e.yield_now, e.stretch
+        );
+        use super::JobEdge::*;
+        match e.edge {
+            Start | Resume | Requeue => push_event(
+                &mut ev,
+                format!(
+                    "{{\"name\":\"run\",\"cat\":\"job\",\"ph\":\"B\",\"ts\":{ts},\
+                     \"pid\":{pid},\"tid\":{tid},\"args\":{args}}}"
+                ),
+            ),
+            Pause | Kill | Complete => {
+                push_event(
+                    &mut ev,
+                    format!(
+                        "{{\"name\":\"run\",\"cat\":\"job\",\"ph\":\"E\",\"ts\":{ts},\
+                         \"pid\":{pid},\"tid\":{tid},\"args\":{args}}}"
+                    ),
+                );
+            }
+            Submit | Migrate => push_event(
+                &mut ev,
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"job\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts},\
+                     \"pid\":{pid},\"tid\":{tid},\"args\":{args}}}",
+                    e.edge.name()
+                ),
+            ),
+        }
+    }
+
+    // Scheduler decisions: one instant each.
+    for d in &t.decisions {
+        let job = d.job.map_or_else(|| "\"-\"".to_string(), |j| j.to_string());
+        let victim = d.victim.map_or_else(|| "\"-\"".to_string(), |v| v.to_string());
+        push_event(
+            &mut ev,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"decision\",\"ph\":\"i\",\"s\":\"p\",\"ts\":{},\
+                 \"pid\":2,\"tid\":0,\"args\":{{\"trigger\":\"{}\",\"cause\":\"{}\",\
+                 \"job\":{job},\"victim\":{victim},\"accepted\":{},\"candidates\":{},\
+                 \"pinned\":{},\"value\":{:.6}}}}}",
+                d.kind.name(),
+                us(d.t),
+                d.trigger.name(),
+                d.cause.name(),
+                d.accepted,
+                d.candidates,
+                d.pinned,
+                d.value
+            ),
+        );
+    }
+
+    // Cluster counters from the sampler.
+    for s in &t.samples {
+        let ts = us(s.t);
+        push_event(
+            &mut ev,
+            format!(
+                "{{\"name\":\"cluster\",\"ph\":\"C\",\"ts\":{ts},\"pid\":2,\
+                 \"args\":{{\"demand\":{:.6},\"util\":{:.6},\"cap\":{:.6}}}}}",
+                s.demand, s.util, s.cap
+            ),
+        );
+        push_event(
+            &mut ev,
+            format!(
+                "{{\"name\":\"jobs\",\"ph\":\"C\",\"ts\":{ts},\"pid\":2,\
+                 \"args\":{{\"running\":{},\"paused\":{},\"pending\":{}}}}}",
+                s.running, s.paused, s.pending
+            ),
+        );
+    }
+
+    // Wall-clock phase aggregates as summary slices from t=0.
+    if t.spans.iter().any(|sp| sp.calls > 0) {
+        push_event(
+            &mut ev,
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":3,\"tid\":0,\
+             \"args\":{\"name\":\"wall-clock phases\"}}"
+                .to_string(),
+        );
+    }
+    for (i, sp) in t.spans.iter().enumerate() {
+        if sp.calls == 0 {
+            continue;
+        }
+        push_event(
+            &mut ev,
+            format!(
+                "{{\"name\":\"{}\",\"cat\":\"phase\",\"ph\":\"X\",\"ts\":0,\"dur\":{},\
+                 \"pid\":3,\"tid\":{},\"args\":{{\"calls\":{}}}}}",
+                sp.phase,
+                us(sp.secs),
+                i + 1,
+                sp.calls
+            ),
+        );
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    for (i, e) in ev.iter().enumerate() {
+        out.push_str(e);
+        if i + 1 < ev.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    let _ = write!(out, "],\"displayTimeUnit\":\"ms\"}}");
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{
+        Cause, DecisionKind, DecisionRecord, EdgeRecord, JobEdge, Sample, SpanSummary, Trigger,
+    };
+
+    fn telemetry() -> Telemetry {
+        let mut t = Telemetry::default();
+        for (edge, tt) in [
+            (JobEdge::Submit, 0.0),
+            (JobEdge::Start, 0.0),
+            (JobEdge::Pause, 10.0),
+            (JobEdge::Resume, 20.0),
+            (JobEdge::Migrate, 25.0),
+            (JobEdge::Complete, 30.0),
+        ] {
+            t.edges.push(EdgeRecord { edge, job: 4, t: tt, vt: 1.0, yield_now: 1.0, stretch: 0.0 });
+        }
+        t.decisions.push(DecisionRecord {
+            t: 10.0,
+            trigger: Trigger::Submit,
+            kind: DecisionKind::Admit,
+            job: Some(5),
+            victim: Some(4),
+            cause: Cause::ForcedPause,
+            accepted: true,
+            candidates: 2,
+            pinned: 0,
+            value: 0.0,
+        });
+        t.samples.push(Sample {
+            t: 15.0,
+            demand: 2.0,
+            util: 1.5,
+            cap: 4.0,
+            running: 2,
+            paused: 1,
+            pending: 0,
+            up_nodes: 4,
+            max_stretch_so_far: 1.0,
+            avg_stretch_so_far: 1.0,
+        });
+        t.spans.push(SpanSummary { phase: "repack".into(), calls: 3, secs: 0.5 });
+        t
+    }
+
+    #[test]
+    fn export_covers_all_record_shapes() {
+        let out = render(&telemetry());
+        assert!(out.starts_with("{\"traceEvents\":["), "{out}");
+        assert!(out.trim_end().ends_with("\"displayTimeUnit\":\"ms\"}"), "{out}");
+        assert!(out.contains("\"ph\":\"B\""), "open slice");
+        assert!(out.contains("\"ph\":\"E\""), "close slice");
+        assert!(out.contains("\"name\":\"migrate\""), "migrate instant");
+        assert!(out.contains("\"cat\":\"decision\""), "decision instant");
+        assert!(out.contains("\"cause\":\"forced-pause\""), "decision args");
+        assert!(out.contains("\"ph\":\"C\""), "counter event");
+        assert!(out.contains("\"name\":\"repack\""), "phase slice");
+        assert!(out.contains("\"ts\":10000000"), "microsecond timestamps");
+    }
+
+    #[test]
+    fn export_is_deterministic_and_comma_safe() {
+        let t = telemetry();
+        let a = render(&t);
+        assert_eq!(a, render(&t));
+        // No trailing comma before the closing bracket, no empty entries.
+        assert!(!a.contains(",\n]"), "{a}");
+        assert!(!a.contains(",,"), "{a}");
+    }
+
+    #[test]
+    fn empty_telemetry_still_renders_valid_skeleton() {
+        let out = render(&Telemetry::default());
+        assert!(out.contains("traceEvents"), "{out}");
+        assert!(!out.contains(",\n]"), "{out}");
+    }
+}

@@ -17,7 +17,7 @@ use dfrs::alloc::RustSolver;
 use dfrs::scenario::{builtin, Scenario};
 use dfrs::sched::registry::make_policy;
 use dfrs::sim::{run_guarded, run_instrumented, EngineKind, RunOptions, SimConfig, SimResult};
-use dfrs::telemetry::{Counter, JobEdge, RecorderConfig, Telemetry};
+use dfrs::telemetry::{Counter, DecisionKind, JobEdge, RecorderConfig, Telemetry};
 use dfrs::workload::lublin::{generate, LublinParams};
 use dfrs::workload::scale::scale_to_load;
 use dfrs::workload::Trace;
@@ -263,7 +263,85 @@ fn jsonl_export_is_deterministic_and_round_trips() {
     assert_eq!(parsed.counters, a.counters, "counters round trip");
     assert_eq!(parsed.edges, a.edges, "edges round trip");
     assert_eq!(parsed.samples, a.samples, "samples round trip");
+    assert_eq!(parsed.decisions, a.decisions, "decisions round trip");
     assert_eq!(parsed.meta, a.meta, "meta round trips");
+}
+
+/// Decision provenance: every disruptive lifecycle edge (pause, migrate,
+/// requeue, kill) must be attributable to a decision recorded at the same
+/// instant — either one naming the job (as subject or victim) or a
+/// whole-candidate-set summary (repack, recovery sweep). This is the
+/// invariant `dfrs explain` leans on to name a concrete cause for every
+/// edge.
+#[test]
+fn every_disruptive_edge_has_a_same_instant_decision() {
+    let tr = trace();
+    for engine in ENGINES {
+        for name in SCENARIOS {
+            let scn = scenario(name, &tr);
+            let (_, t) = run_recorded(&tr, engine, &scn);
+            let ctx = format!("{engine:?}/{name}");
+            assert!(!t.decisions.is_empty(), "{ctx}: no decisions recorded");
+            // The periodic MCB8 policy must leave repack summaries, and the
+            // greedy submit path admission records.
+            assert!(
+                t.decisions.iter().any(|d| d.kind == DecisionKind::Repack),
+                "{ctx}: no repack decisions"
+            );
+            assert!(
+                t.decisions.iter().any(|d| d.kind == DecisionKind::Admit),
+                "{ctx}: no admission decisions"
+            );
+            for e in &t.edges {
+                if !matches!(
+                    e.edge,
+                    JobEdge::Pause | JobEdge::Migrate | JobEdge::Requeue | JobEdge::Kill
+                ) {
+                    continue;
+                }
+                let tb = e.t.to_bits();
+                let attributed = t.decisions.iter().any(|d| {
+                    d.t.to_bits() == tb
+                        && (d.job == Some(e.job)
+                            || d.victim == Some(e.job)
+                            || (d.job.is_none() && d.victim.is_none()))
+                });
+                assert!(
+                    attributed,
+                    "{ctx}: {} of job {} at t={} has no same-instant decision",
+                    e.edge.name(),
+                    e.job,
+                    e.t
+                );
+            }
+        }
+    }
+}
+
+/// `dfrs explain` renders a deterministic timeline that names a concrete
+/// cause for every edge of a disrupted job (no "(no recorded decision)"
+/// fallbacks on the chaos scenario).
+#[test]
+fn explain_names_causes_for_disrupted_jobs() {
+    let tr = trace();
+    let scn = scenario("chaos", &tr);
+    let (_, t) = run_recorded(&tr, EngineKind::Indexed, &scn);
+    let disrupted: Vec<usize> = t
+        .edges
+        .iter()
+        .filter(|e| matches!(e.edge, JobEdge::Kill | JobEdge::Pause))
+        .map(|e| e.job)
+        .collect();
+    assert!(!disrupted.is_empty(), "chaos disrupted nothing");
+    for &j in &disrupted {
+        let text = dfrs::telemetry::explain::render(&t, j);
+        assert!(
+            !text.contains("no recorded decision"),
+            "job {j}: unattributed edge in:\n{text}"
+        );
+        assert!(text.contains("cause: "), "job {j}: no causes in:\n{text}");
+        assert_eq!(text, dfrs::telemetry::explain::render(&t, j), "job {j}: nondeterministic");
+    }
 }
 
 #[test]
@@ -284,5 +362,6 @@ fn counters_only_config_skips_edges_but_keeps_counters() {
     .unwrap();
     assert!(t.edges.is_empty(), "counters_only must not record edges");
     assert!(t.samples.is_empty(), "counters_only must not sample");
+    assert!(t.decisions.is_empty(), "counters_only must not record decisions");
     assert_eq!(t.counter("events_completion"), tr.jobs.len() as u64);
 }
